@@ -1,0 +1,26 @@
+"""Paper Figure 6B: fixed n=600, k from 2 to 8 — LDT improves with k but
+saturates; RMR stays flat (leaf share grows with k)."""
+from __future__ import annotations
+
+from repro.core.scenarios import run_stable, summarize
+from repro.core.membership import MembershipView
+from repro.core.tree import trace_broadcast
+
+
+def run(n: int = 600, ks=(2, 4, 6, 8), n_messages: int = 20, seed: int = 5):
+    rows = []
+    for k in ks:
+        s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
+                                 seed=seed))
+        t = trace_broadcast(0, MembershipView(range(n)), k)
+        rows.append({"k": k, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
+                     "reliability": s["reliability"], "height": t.height})
+    return rows
+
+
+def main():
+    out = [f"{'k':>3s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} {'height':>6s}"]
+    for r in run():
+        out.append(f"{r['k']:3d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['height']:6d}")
+    return out

@@ -1,0 +1,73 @@
+"""Kernel micro-bench: XLA reference wall time on CPU + interpret-mode
+correctness deltas (TPU wall times require hardware; the dry-run roofline
+covers the modeled gains)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3, **kw):
+    fn(*args, **kw)[0] if isinstance(fn(*args, **kw), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # flash attention
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    us = _time(ops.flash_attention, q, k, v, impl="xla")
+    gold = ref.mha_reference(q, k, v)
+    got = ops.flash_attention(q, k, v, impl="pallas_interpret")
+    rows.append(("flash_attention", us,
+                 float(jnp.abs(gold - got).max())))
+    # decode attention
+    qd = jax.random.normal(key, (4, 8, 64), jnp.float32)
+    kc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32)
+    vc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32)
+    us = _time(ops.decode_attention, qd, kc, vc, jnp.int32(1500), impl="xla")
+    gold = ref.decode_attention_reference(qd, kc, vc, jnp.int32(1500))
+    got = ops.decode_attention(qd, kc, vc, jnp.int32(1500),
+                               impl="pallas_interpret")
+    rows.append(("decode_attention", us, float(jnp.abs(gold - got).max())))
+    # wkv6
+    r = jax.random.normal(key, (2, 256, 4, 32), jnp.float32)
+    kk = jax.random.normal(key, (2, 256, 4, 32), jnp.float32)
+    vv = jax.random.normal(key, (2, 256, 4, 32), jnp.float32)
+    lw = -jnp.abs(jax.random.normal(key, (2, 256, 4, 32))) * 0.5
+    u = jax.random.normal(key, (4, 32)) * 0.1
+    s0 = jnp.zeros((2, 4, 32, 32))
+    us = _time(lambda *a, **k_: ops.wkv6(*a, **k_)[0], r, kk, vv, lw, u, s0,
+               impl="xla")
+    gy, _ = ref.wkv6_reference(r, kk, vv, lw, u, s0)
+    py, _ = ops.wkv6(r, kk, vv, lw, u, s0, impl="pallas_interpret")
+    rows.append(("wkv6", us, float(jnp.abs(gy - py).max())))
+    # rglru
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, 512, 256))) * 0.98 + 0.01
+    b = jax.random.normal(key, (2, 512, 256)) * 0.5
+    h0 = jnp.zeros((2, 256))
+    us = _time(lambda *a_, **k_: ops.rglru_scan(*a_, **k_)[0], a, b, h0,
+               impl="xla")
+    gh, _ = ref.rglru_scan_reference(a, b, h0)
+    ph, _ = ops.rglru_scan(a, b, h0, impl="pallas_interpret")
+    rows.append(("rglru_scan", us, float(jnp.abs(gh - ph).max())))
+    return rows
+
+
+def main():
+    out = ["name,us_per_call(xla_cpu),interpret_vs_ref_max_err"]
+    for name, us, err in run():
+        out.append(f"{name},{us:.1f},{err:.2e}")
+    return out

@@ -1,0 +1,138 @@
+"""Deliverable (g): assemble the roofline table from dry-run artifacts.
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+  compute  = probe-extrapolated per-device HLO FLOPs / 197 TF/s
+  memory   = analytic per-device HBM traffic / 819 GB/s
+  collective = per-device collective bytes (ICI/50 GB/s + DCN/25 GB/s)
+plus MODEL_FLOPS (6·N_active·D), the useful-FLOPs ratio, the dominant
+term, and the roofline fraction.  Writes
+benchmarks/artifacts/roofline.csv.
+"""
+from __future__ import annotations
+
+import csv
+import json
+from pathlib import Path
+
+from repro.configs.registry import SHAPES, all_cells, get_config
+from repro.roofline.analysis import RooflineTerms, extrapolate
+from repro.roofline.memtraffic import estimate
+
+ART = Path(__file__).parent / "artifacts" / "dryrun" / "singlepod"
+OUT = Path(__file__).parent / "artifacts" / "roofline.csv"
+
+
+def cell_terms(arch: str, shape_name: str, tag: str = "",
+               use_flash: bool = False) -> dict | None:
+    name = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "") + ".json"
+    path = ART / name
+    if not path.exists():
+        return None
+    art = json.loads(path.read_text())
+    chips = art["chips"]
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+
+    probes = art.get("probes")
+    if probes:
+        ext = extrapolate(probes["probe1"], probes["probe2"],
+                          int(probes["units_full"]))
+        flops_dev = ext["flops"]
+        ici_dev = max(ext.get("ici_bytes", 0.0), 0.0)
+        dcn_dev = max(ext.get("dcn_bytes", 0.0), 0.0)
+    else:
+        flops_dev = art["cost_analysis"].get("flops", 0.0)
+        coll = art["collectives_scanned_once"]["tier_bytes"]
+        ici_dev = coll.get("ici", 0) + coll.get("ici?", 0)
+        dcn_dev = coll.get("dcn", 0)
+
+    model_shards = art["mesh"].get("model", 1)
+    mem = estimate(cfg, kind=shape.kind, seq_len=shape.seq_len,
+                   global_batch=shape.global_batch, n_devices=chips,
+                   model_shards=model_shards, use_flash=use_flash)
+
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = cfg.model_flops(tokens, training=True,
+                                      seq_len=shape.seq_len)
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = cfg.model_flops(tokens, training=False,
+                                      seq_len=shape.seq_len)
+    else:
+        model_flops = cfg.model_flops(shape.global_batch, training=False,
+                                      seq_len=shape.seq_len, decode=True)
+
+    terms = RooflineTerms(
+        flops=flops_dev, hbm_bytes=mem.total, ici_bytes=ici_dev,
+        dcn_bytes=dcn_dev, chips=1, model_flops=model_flops / chips)
+    row = {"arch": arch, "shape": shape_name, "tag": tag,
+           "mem_per_dev_GB": art["memory_analysis"].get(
+               "bytes_per_device", 0) / 1e9,
+           "compile_s": art.get("compile_s"),
+           **terms.to_dict(),
+           "mem_components": mem.components}
+    return row
+
+
+def run(tag: str = ""):
+    rows = []
+    for arch, shape_name, ok, why in all_cells():
+        if not ok:
+            rows.append({"arch": arch, "shape": shape_name, "skip": why})
+            continue
+        r = cell_terms(arch, shape_name, tag)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+#: §Perf hillclimb variants (EXPERIMENTS.md) — tagged artifacts
+PERF_VARIANTS = [
+    ("kimi-k2-1t-a32b", "train_4k", ["ep_sm", "ep_sm_sp"]),
+    ("granite-moe-3b-a800m", "train_4k", ["ep_rep", "ep_rep_sp", "dp_only"]),
+    ("qwen2-72b", "train_4k", ["sp", "sp_noremat", "mb4"]),
+]
+
+
+def main():
+    rows = run()
+    out = [f"{'arch':22s} {'shape':12s} {'bottleneck':10s} "
+           f"{'t_comp_ms':>9s} {'t_mem_ms':>9s} {'t_coll_ms':>9s} "
+           f"{'useful':>6s} {'roofline':>8s}"]
+    csv_rows = []
+    for r in rows:
+        if "skip" in r:
+            out.append(f"{r['arch']:22s} {r['shape']:12s} {r['skip']}")
+            continue
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['bottleneck']:10s} "
+            f"{r['t_compute']*1e3:9.2f} {r['t_memory']*1e3:9.2f} "
+            f"{r['t_collective']*1e3:9.2f} {r['useful_flops_ratio']:6.2f} "
+            f"{r['roofline_fraction']:8.3f}")
+        csv_rows.append({k: v for k, v in r.items()
+                         if k != "mem_components"})
+    out.append("")
+    out.append("-- §Perf hillclimb variants (see EXPERIMENTS.md iteration log)")
+    for arch, shape_name, tags in PERF_VARIANTS:
+        for tag in [""] + tags:
+            r = cell_terms(arch, shape_name, tag)
+            if r is None:
+                continue
+            label = tag or "baseline"
+            out.append(
+                f"{arch:22s} {shape_name:10s} {label:11s} "
+                f"{r['t_compute']*1e3:9.2f} {r['t_memory']*1e3:9.2f} "
+                f"{r['t_collective']*1e3:9.2f} "
+                f"roofline={r['roofline_fraction']:.3f} "
+                f"mem/dev={r['mem_per_dev_GB']:.0f}GB")
+            csv_rows.append({k: v for k, v in r.items()
+                             if k != "mem_components"})
+    if csv_rows:
+        OUT.parent.mkdir(parents=True, exist_ok=True)
+        with OUT.open("w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(csv_rows[0]))
+            w.writeheader()
+            w.writerows(csv_rows)
+        out.append(f"wrote {OUT}")
+    return out

@@ -1,0 +1,30 @@
+"""Paper Figure 6A: fixed k=4, n from 100 to 1500 — LDT grows only with
+tree height (stepwise), RMR flat."""
+from __future__ import annotations
+
+from repro.core.scenarios import run_stable, summarize
+from repro.core.tree import expected_height, trace_broadcast
+from repro.core.membership import MembershipView
+
+
+def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
+        n_messages: int = 20, seed: int = 3):
+    rows = []
+    for n in ns:
+        s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
+                                 seed=seed))
+        t = trace_broadcast(0, MembershipView(range(n)), k)
+        rows.append({"n": n, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
+                     "reliability": s["reliability"], "height": t.height,
+                     "eq8_bound": expected_height(n, k)})
+    return rows
+
+
+def main():
+    out = [f"{'n':>5s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
+           f"{'height':>6s} {'eq8':>4s}"]
+    for r in run():
+        out.append(f"{r['n']:5d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['height']:6d} "
+                   f"{r['eq8_bound']:4d}")
+    return out

@@ -1,0 +1,38 @@
+"""Benchmark runner — one section per paper table/figure plus the
+framework benches.  Prints ``name,us_per_call,derived`` CSV lines at the
+end for machine consumption; full tables above them."""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import (bench_collectives, bench_fanout_k,
+                            bench_kernels, bench_protocols,
+                            bench_roofline, bench_scale_n)
+    for name, mod in (
+        ("protocols_table2", bench_protocols),
+        ("scale_n_fig6a", bench_scale_n),
+        ("fanout_k_fig6b", bench_fanout_k),
+        ("collectives", bench_collectives),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ):
+        t0 = time.time()
+        print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
+        try:
+            for line in mod.main():
+                print(line)
+            sections.append((name, (time.time() - t0) * 1e6, "ok"))
+        except Exception as e:  # noqa: BLE001
+            print(f"FAILED: {e!r}")
+            sections.append((name, (time.time() - t0) * 1e6, f"fail:{e!r}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in sections:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

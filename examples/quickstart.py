@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Quickstart: the Snow protocol + the framework in 60 seconds.
+
+1. Broadcast over a 200-node simulated cluster (standard + Coloring).
+2. Reliable Message under a silent node failure.
+3. A few training steps of a reduced qwen3 on CPU.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.scenarios import build_cluster, run_stable, summarize
+from repro.configs import get_smoke_config
+from repro.models.model import LM
+from repro.optim import adamw
+from repro.train.train_step import init_train_state, make_train_step
+from repro.data.pipeline import SyntheticDataset
+
+
+def protocol_demo():
+    print("== Snow broadcast (n=200, k=4) ==")
+    for proto in ("snow", "coloring", "gossip"):
+        s = summarize(run_stable(proto, n=200, k=4, n_messages=20, seed=1))
+        print(f"  {proto:9s} LDT={s['ldt']*1e3:6.0f} ms  "
+              f"RMR={s['rmr']:5.1f} B  reliability={s['reliability']:.3f}")
+
+    print("== Reliable Message with a mid-broadcast crash ==")
+    c = build_cluster("snow", 60, 4, seed=9, enable_swim=True)
+    c.sim.at(0.0, lambda: c.net.crash(17))
+    c.sim.at(0.5, lambda: c.broadcast_from(0, reliable=True))
+    c.sim.run(until=30.0)
+    root = c.nodes[0]
+    print(f"  root converged: {bool(root.converged)} "
+          f"(crashed node evicted by SWIM, message redelivered)")
+
+
+def training_demo():
+    print("== 10 training steps, reduced qwen3 ==")
+    cfg = get_smoke_config("qwen3-0.6b")
+    lm = LM(cfg)
+    step = jax.jit(make_train_step(lm, adamw.AdamWConfig(lr=3e-3)),
+                   donate_argnums=(0,))
+    state = init_train_state(lm, jax.random.PRNGKey(0))
+    data = SyntheticDataset(cfg, 4, 64)
+    for i in range(10):
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step(state, batch)
+        if i % 3 == 0 or i == 9:
+            print(f"  step {i:2d}  loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    protocol_demo()
+    training_demo()
+    print("done.")

@@ -1,0 +1,29 @@
+#!/usr/bin/env python
+"""Serve a small model with batched requests (deliverable (b)):
+prefill + batched decode through the ServeEngine."""
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models.model import LM
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_smoke_config("qwen3-4b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(lm, params, batch_slots=4, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32),
+                    max_new_tokens=8, temperature=t)
+            for n, t in ((5, 0.0), (9, 0.0), (3, 0.7), (12, 0.0), (6, 1.0))]
+    outs = engine.generate(reqs)
+    for i, o in enumerate(outs):
+        print(f"request {i} ({len(reqs[i].prompt)} prompt tokens, "
+              f"T={reqs[i].temperature}): {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Sharded checkpointing: save/restore train state with a manifest,
+asynchronous writes, and retention.
+
+Format: one ``.npz`` per save containing flattened ``path → array``
+entries plus a JSON manifest (step, config name, tree structure).  On a
+real multi-host deployment each host writes its local shards and the
+restore path fans the tensors out over the Snow two-tree broadcast
+(:mod:`repro.checkpoint.distribution`) instead of every host re-reading
+the store — the paper's container-image-distribution use case (§4.4).
+"""
+from __future__ import annotations
+
+import json
+import re
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_fmt(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------------- #
+    def save(self, step: int, state, *, meta: Optional[Dict] = None) -> Path:
+        """Snapshot on host, then write (optionally in a background
+        thread so the train loop keeps going — fault tolerance requires
+        the snapshot, not the fsync, to be synchronous)."""
+        self.wait()
+        flat = _flatten(state)
+        path = self.dir / f"step_{step:010d}"
+
+        def write():
+            tmp = path.with_suffix(".tmp.npz")
+            np.savez(tmp, **flat)
+            manifest = {"step": step, "keys": sorted(flat),
+                        "time": time.time(), **(meta or {})}
+            path.with_suffix(".json").write_text(json.dumps(manifest))
+            tmp.rename(path.with_suffix(".npz"))
+            self._gc()
+
+        if self.async_write:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+        return path
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # ---------------------------------------------------------------- #
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*.npz"):
+            m = re.match(r"step_(\d+)", p.stem)
+            if m and p.with_suffix(".json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, like, step: Optional[int] = None):
+        """Restore into the structure of ``like`` (a state pytree or its
+        eval_shape)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        with np.load(self.dir / f"step_{step:010d}.npz") as data:
+            flat = {k: data[k] for k in data.files}
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, leaf in leaves_like:
+            key = "/".join(_fmt(p) for p in path)
+            if key not in flat:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = flat[key]
+            expect = getattr(leaf, "shape", None)
+            if expect is not None and tuple(arr.shape) != tuple(expect):
+                raise ValueError(f"{key}: shape {arr.shape} != {expect}")
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), out)
+        return tree, step
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for suffix in (".npz", ".json"):
+                p = self.dir / f"step_{s:010d}{suffix}"
+                p.unlink(missing_ok=True)

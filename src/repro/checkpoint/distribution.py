@@ -1,0 +1,67 @@
+"""Checkpoint fan-out over Snow trees (paper §1/§4.4 use case).
+
+When a pod restores from a checkpoint or an elastic host joins, exactly
+one host reads each tensor from the store; everyone else receives it
+host-to-host down the Coloring two-tree broadcast — the store sees O(1)
+readers instead of O(hosts), and the two disjoint trees keep both the
+fan-out of every host and the straggler tolerance (Appendix D) that the
+paper measured.
+
+``distribute_params`` is the jit-able data plane (ppermute schedules);
+``DistributionPlan`` is the host-side accounting used by the trainer and
+the benchmarks (which host reads, expected wall time per tier).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.collectives.schedule import DCN, ICI, Tier, best_broadcast, \
+    two_tree_broadcast_time
+from repro.collectives.tree_collectives import two_tree_broadcast_spmd
+
+
+@dataclass
+class DistributionPlan:
+    n_hosts: int
+    k: int
+    payload_bytes: int
+    tier: Tier
+
+    @property
+    def reader_host(self) -> int:
+        return 0
+
+    @property
+    def est_time_s(self) -> float:
+        return two_tree_broadcast_time(self.payload_bytes, self.n_hosts,
+                                       self.k, self.tier)
+
+    def summary(self) -> Dict:
+        return {
+            "n_hosts": self.n_hosts,
+            "payload_GB": self.payload_bytes / 1e9,
+            "two_tree_s": self.est_time_s,
+            **best_broadcast(self.payload_bytes, self.n_hosts, self.k,
+                             self.tier),
+        }
+
+
+def plan_for(params, n_hosts: int, *, k: int = 4,
+             cross_pod: bool = True) -> DistributionPlan:
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    return DistributionPlan(n_hosts, k, nbytes, DCN if cross_pod else ICI)
+
+
+def distribute_params(params, mesh: Mesh, axis_name: str, *, root: int = 0,
+                      k: int = 2):
+    """Fan the reader's parameter tree out along ``axis_name`` with the
+    Coloring two-tree schedule.  Every leaf rides the same schedule; on a
+    real deployment this is the cross-host (DCN) axis."""
+    return jax.tree.map(
+        lambda x: two_tree_broadcast_spmd(x, mesh, axis_name, root=root, k=k),
+        params)

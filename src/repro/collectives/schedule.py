@@ -1,0 +1,70 @@
+"""Cost model for collective schedules on the production mesh tiers.
+
+α-β model per round: t = α + bytes/β, summed over rounds that cannot
+overlap.  Used to pick ring vs snow-tree vs two-tree per payload size
+(the trainer's ``collective_policy``) and by ``benchmarks/
+bench_collectives.py`` to reproduce the paper's convergence-speed claims
+on the data plane.
+
+Tiers: ICI (intra-pod, 50 GB/s/link, ~1 µs), DCN (cross-pod, 25 GB/s per
+host, ~10 µs).  On DCN with hundreds of hosts the Snow tree's O(log P)
+rounds beat the ring's O(P) for everything but huge payloads, and the
+two-tree Coloring broadcast halves the serialized bytes per round — the
+paper's "double the message convergence speed".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from .topology import broadcast_schedule, two_tree_schedules
+
+
+@dataclass(frozen=True)
+class Tier:
+    name: str
+    alpha_s: float
+    beta_Bps: float
+
+
+ICI = Tier("ici", 1e-6, 50e9)
+DCN = Tier("dcn", 10e-6, 25e9)
+
+
+def ring_broadcast_time(nbytes: int, p: int, tier: Tier) -> float:
+    """Pipelined ring broadcast: (P-1) hops of the full payload, pipelined
+    in chunks — asymptotically bytes/β + (P-1)·α."""
+    return (p - 1) * tier.alpha_s + nbytes / tier.beta_Bps
+
+
+def ring_allreduce_time(nbytes: int, p: int, tier: Tier) -> float:
+    """Bandwidth-optimal ring: 2·(P-1)/P of the bytes per device."""
+    return 2 * (p - 1) * tier.alpha_s + 2 * nbytes * (p - 1) / p / tier.beta_Bps
+
+
+def snow_broadcast_time(nbytes: int, p: int, k: int, tier: Tier) -> float:
+    rounds = len(broadcast_schedule(p, 0, k))
+    return rounds * (tier.alpha_s + nbytes / tier.beta_Bps)
+
+
+def snow_allreduce_time(nbytes: int, p: int, k: int, tier: Tier) -> float:
+    return 2 * snow_broadcast_time(nbytes, p, k, tier)
+
+
+def two_tree_broadcast_time(nbytes: int, p: int, k: int, tier: Tier) -> float:
+    """Halves travel both trees concurrently; a node is internal in at
+    most one tree (Appendix C), so the per-round serialized payload is
+    nbytes/2."""
+    tp, ts = two_tree_schedules(p, 0, k)
+    rounds = max(len(tp), len(ts))
+    return rounds * (tier.alpha_s + (nbytes / 2) / tier.beta_Bps)
+
+
+def best_broadcast(nbytes: int, p: int, k: int, tier: Tier) -> Dict:
+    cands = {
+        "ring": ring_broadcast_time(nbytes, p, tier),
+        "snow": snow_broadcast_time(nbytes, p, k, tier),
+        "two_tree": two_tree_broadcast_time(nbytes, p, k, tier),
+    }
+    best = min(cands, key=cands.get)
+    return {"times": cands, "best": best}

@@ -1,0 +1,92 @@
+"""Map Snow's broadcast trees onto device-axis ``ppermute`` schedules.
+
+The *same protocol code* that routes messages in the control plane
+(:mod:`repro.core`) decides which device talks to which here: we trace a
+Snow broadcast over a ring of device indices and compile the
+first-delivery edges into rounds of disjoint (src → dst) pairs.  Each
+round is one ``lax.ppermute``; a parent with k children occupies k
+consecutive rounds (one outgoing message per device per round — the
+paper's fan-out serialization, §2 "Bandwidth Limitation").
+
+The Coloring double tree (§4.6) yields two edge-disjoint schedules whose
+internal nodes are disjoint (Appendix C/D) — used by
+``two_tree_broadcast`` to move each half of the payload at full
+bisection bandwidth, the paper's SplitStream-style option.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.coloring import PRIMARY, SECONDARY
+from repro.core.membership import MembershipView
+from repro.core.tree import Trace, trace_broadcast, trace_two_trees
+
+Round = List[Tuple[int, int]]
+
+
+def _schedule_from_trace(t: Trace) -> List[Round]:
+    """Compile first-delivery edges into ppermute rounds.
+
+    A node may send in round r only if it received in some round < r;
+    each node sends at most one message per round, and each destination
+    receives exactly once overall.
+    """
+    recv_round: Dict[int, int] = {t.root: -1}
+    pending = {n: list(t.children.get(n, [])) for n in t.children}
+    rounds: List[Round] = []
+    done = {t.root}
+    remaining = sum(len(v) for v in pending.values())
+    r = 0
+    while remaining > 0:
+        rnd: Round = []
+        busy_src = set()
+        for src in sorted(pending):
+            if src not in done or src in busy_src or recv_round.get(src, 1 << 30) >= r:
+                continue
+            kids = pending[src]
+            if kids:
+                dst = kids.pop(0)
+                rnd.append((src, dst))
+                busy_src.add(src)
+                recv_round[dst] = r
+                remaining -= 1
+        if not rnd:  # should not happen; guard against livelock
+            raise RuntimeError("empty schedule round")
+        for src, dst in rnd:
+            done.add(dst)
+        rounds.append(rnd)
+        r += 1
+    return rounds
+
+
+@functools.lru_cache(maxsize=256)
+def broadcast_schedule(axis_size: int, root: int = 0, k: int = 2
+                       ) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """Standard Snow tree → tuple of ppermute rounds (hashable/cacheable)."""
+    view = MembershipView(range(axis_size))
+    t = trace_broadcast(root, view, k)
+    return tuple(tuple(rnd) for rnd in _schedule_from_trace(t))
+
+
+@functools.lru_cache(maxsize=256)
+def reduce_schedule(axis_size: int, root: int = 0, k: int = 2
+                    ) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """Reverse of the broadcast tree: the Reliable-Message ACK path
+    (§4.4) run with payload — children send to parents, leaves first."""
+    fwd = broadcast_schedule(axis_size, root, k)
+    rev = [tuple((d, s) for s, d in rnd) for rnd in reversed(fwd)]
+    return tuple(rev)
+
+
+@functools.lru_cache(maxsize=256)
+def two_tree_schedules(axis_size: int, root: int = 0, k: int = 2):
+    """(primary, secondary) schedules of the Coloring double tree."""
+    view = MembershipView(range(axis_size))
+    p, s = trace_two_trees(root, view, k)
+    return (tuple(tuple(r) for r in _schedule_from_trace(p)),
+            tuple(tuple(r) for r in _schedule_from_trace(s)))
+
+
+def schedule_depth(axis_size: int, k: int, root: int = 0) -> int:
+    return len(broadcast_schedule(axis_size, root, k))

@@ -1,0 +1,2 @@
+from .registry import (ARCH_IDS, SHAPES, SUBQUADRATIC, all_cells,
+                       get_config, get_smoke_config, shape_applicable)

@@ -1,0 +1,16 @@
+"""codeqwen1.5-7b — Qwen1.5 architecture (QKV bias, full MHA kv=32).
+[hf:Qwen/CodeQwen1.5-7B; hf]  32L d_model=4096 32H d_ff=13440 vocab=92416."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="transformer",
+    n_layers=32,
+    d_model=4096,
+    d_ff=13440,
+    vocab=92416,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,         # 4096 / 32
+    qkv_bias=True,
+)

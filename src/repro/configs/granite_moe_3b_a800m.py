@@ -1,0 +1,17 @@
+"""granite-moe-3b-a800m — 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+32L d_model=1536 24H (kv=8) vocab=49155, per-expert d_ff=512."""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="transformer",
+    n_layers=32,
+    d_model=1536,
+    d_ff=512,
+    vocab=49155,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,          # 1536 / 24
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff=512),
+)

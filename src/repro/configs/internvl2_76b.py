@@ -1,0 +1,20 @@
+"""internvl2-76b — InternViT + InternLM2 VLM. [arXiv:2404.16821; unverified]
+Backbone only: 80L d_model=8192 64H (kv=8) d_ff=28672 vocab=128256.
+The InternViT frontend is a STUB: input_specs() feeds precomputed patch
+embeddings prepended to the text tokens."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="transformer",
+    n_layers=80,
+    d_model=8192,
+    d_ff=28672,
+    vocab=128256,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    frontend="vision",
+    frontend_prefix=1024,  # patch positions per sample
+    fsdp_params=True,
+)

@@ -1,0 +1,19 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table config).
+[arXiv:2501.kimi2; unverified]  61L d_model=7168 64H (kv=8) vocab=163840,
+MoE 384 experts top-8, per-expert d_ff=2048.  head_dim=128 chosen for MXU
+alignment (the paper table leaves it unspecified; see DESIGN.md)."""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="transformer",
+    n_layers=61,
+    d_model=7168,
+    d_ff=2048,            # per-expert width (the MoE config is authoritative)
+    vocab=163840,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff=2048),
+    fsdp_params=True,
+)

@@ -1,0 +1,19 @@
+"""musicgen-medium — decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284; hf]  48L d_model=1536 24H (GQA kv=24 = MHA) d_ff=6144
+vocab=2048.  The EnCodec frontend is a STUB: input_specs() feeds
+precomputed frame embeddings (B, S, d_model)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="transformer",
+    n_layers=48,
+    d_model=1536,
+    d_ff=6144,
+    vocab=2048,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,          # 1536 / 24
+    mlp="gelu",
+    frontend="audio",
+)

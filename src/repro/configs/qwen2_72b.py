@@ -1,0 +1,17 @@
+"""qwen2-72b — GQA with QKV bias. [arXiv:2407.10671; hf]
+80L d_model=8192 64H (kv=8) d_ff=29568 vocab=152064."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="transformer",
+    n_layers=80,
+    d_model=8192,
+    d_ff=29568,
+    vocab=152064,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,         # 8192 / 64
+    qkv_bias=True,
+    fsdp_params=True,     # 72B training needs ZeRO-3 on 256 v5e chips
+)

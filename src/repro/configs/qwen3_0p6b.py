@@ -1,0 +1,17 @@
+"""qwen3-0.6b — qk_norm, GQA, head_dim 128 (q-proj 1024→2048).
+[hf:Qwen/Qwen3-8B family; hf]  28L d_model=1024 16H (kv=8) d_ff=3072
+vocab=151936."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="transformer",
+    n_layers=28,
+    d_model=1024,
+    d_ff=3072,
+    vocab=151936,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,         # Qwen3 uses head_dim 128 regardless of d_model
+    qk_norm=True,
+)

@@ -1,0 +1,16 @@
+"""qwen3-4b — qk_norm, GQA. [hf:Qwen/Qwen3-8B family; hf]
+36L d_model=2560 32H (kv=8) d_ff=9728 vocab=151936."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="transformer",
+    n_layers=36,
+    d_model=2560,
+    d_ff=9728,
+    vocab=151936,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    qk_norm=True,
+)

@@ -1,0 +1,21 @@
+"""recurrentgemma-9b — Griffin: RG-LRU + local attention, 1:2 ratio.
+[arXiv:2402.19427; unverified]  38L d_model=4096 16H (kv=1, MQA)
+d_ff=12288 vocab=256000, window 2048.  Pattern (rglru, rglru, local_attn)
+×12 + 2 RG-LRU tail layers (38 = 12·3 + 2)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="griffin",
+    n_layers=38,
+    d_model=4096,
+    d_ff=12288,
+    vocab=256000,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,         # RG-9B: 4096 / 16
+    block_pattern=("rglru", "rglru", "local_attn"),
+    window=2048,
+    lru_width=4096,
+    mlp="gelu",
+)

@@ -1,0 +1,87 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture lives in its own module exporting ``CONFIG``;
+this registry also exposes the per-arch input-shape set (train_4k /
+prefill_32k / decode_32k / long_500k) and the sub-quadratic eligibility
+used to decide ``long_500k`` applicability (full-attention archs skip it,
+see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig, reduced_for_smoke
+
+ARCH_IDS = (
+    "rwkv6-1.6b",
+    "musicgen-medium",
+    "codeqwen1.5-7b",
+    "qwen2-72b",
+    "qwen3-0.6b",
+    "qwen3-4b",
+    "internvl2-76b",
+    "kimi-k2-1t-a32b",
+    "granite-moe-3b-a800m",
+    "recurrentgemma-9b",
+)
+
+_MODULES = {
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "musicgen-medium": "musicgen_medium",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "qwen3-4b": "qwen3_4b",
+    "internvl2-76b": "internvl2_76b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+#: archs with sub-quadratic sequence mixing — the only ones that run
+#: ``long_500k`` (pure full-attention archs skip it; DESIGN.md).
+SUBQUADRATIC = frozenset({"rwkv6-1.6b", "recurrentgemma-9b"})
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return reduced_for_smoke(get_config(arch))
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "skip(full-attn): 500k dense KV decode out of regime"
+    return True, ""
+
+
+def all_cells():
+    """All 40 (arch × shape) cells, with applicability flags."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            ok, why = shape_applicable(arch, shape)
+            yield arch, shape, ok, why

@@ -1,0 +1,15 @@
+"""rwkv6-1.6b — RWKV-6 "Finch", attention-free, data-dependent decay.
+[arXiv:2404.05892; unverified]  24L d_model=2048 d_ff=7168 vocab=65536,
+head size 64 ⇒ 32 WKV heads."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="rwkv6",
+    n_layers=24,
+    d_model=2048,
+    d_ff=7168,
+    vocab=65536,
+    rwkv_head_size=64,
+    block_pattern=("rwkv6",),
+)

@@ -1,0 +1,173 @@
+"""Baseline protocols from the paper's evaluation (§3, §5.2).
+
+* **Gossip** — "upon receiving a message, each node randomly forwards it
+  to k other nodes"; forward-on-first-receipt push gossip, the strategy
+  "most prevalent in data centers" (Dynamo, Akka).
+* **Flooding** — forward to *all* neighbours on first receipt (§3).
+* **Plumtree** — epidemic broadcast trees (Leitão et al.): eager push
+  links + lazy IHAVE links, PRUNE on duplicate, GRAFT on missing-timer
+  expiry.  Initialized from random eager sets, so the first broadcasts
+  oscillate until the spanning tree stabilizes — the paper's "warming-up
+  phase".
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set
+
+from .ids import NodeId
+from .membership import MembershipView
+from .messages import Graft, GossipData, IHave, Prune, fresh_mid
+from .sim import Metrics, Network, NodeBase, Sim
+
+
+class GossipNode(NodeBase):
+    def __init__(self, node_id: NodeId, sim: Sim, net: Network,
+                 metrics: Metrics, view: MembershipView, k: int,
+                 profile: "NodeProfile"):
+        super().__init__(node_id, sim, net, profile)
+        self.metrics = metrics
+        self.view = view
+        self.k = k
+        self.delivered: Set[int] = set()
+
+    def broadcast(self, payload: int = 64) -> int:
+        mid = fresh_mid()
+        self.delivered.add(mid)
+        self._fanout(GossipData(mid, self.id, payload), exclude=None, immediate=True)
+        return mid
+
+    def on_message(self, src: NodeId, msg) -> None:
+        if not isinstance(msg, GossipData):
+            return
+        self.metrics.add_bytes(msg.mid, msg.size)
+        if msg.mid in self.delivered:
+            return
+        self.delivered.add(msg.mid)
+        self.metrics.delivered(msg.mid, self.id, self.sim.now)
+        self._fanout(msg, exclude=src)
+
+    def _fanout(self, msg: GossipData, exclude: Optional[NodeId],
+                immediate: bool = False) -> None:
+        def do_send() -> None:
+            cands = [m for m in self.view if m != self.id and m != exclude]
+            targets = self.rng.sample(cands, min(self.k, len(cands)))
+            for t in targets:
+                self.send(t, msg)
+        if immediate:
+            do_send()
+        else:
+            self.sim.after(self.forward_delay(), do_send)
+
+
+class FloodingNode(GossipNode):
+    """Degenerate gossip with k = n-1 (§3: 'when k = n-1, Gossip
+    degenerates into flooding')."""
+
+    def _fanout(self, msg: GossipData, exclude: Optional[NodeId],
+                immediate: bool = False) -> None:
+        def do_send() -> None:
+            for t in self.view:
+                if t != self.id and t != exclude:
+                    self.send(t, msg)
+        if immediate:
+            do_send()
+        else:
+            self.sim.after(self.forward_delay(), do_send)
+
+
+class PlumtreeNode(NodeBase):
+    """Simplified Plumtree over a random partial view."""
+
+    def __init__(self, node_id: NodeId, sim: Sim, net: Network,
+                 metrics: Metrics, peers: List[NodeId], k: int,
+                 profile: "NodeProfile", *, lazy_degree: int = 2,
+                 ihave_delay: float = 0.5, graft_timeout: float = 1.0):
+        super().__init__(node_id, sim, net, profile)
+        self.metrics = metrics
+        self.k = k
+        self.eager: Set[NodeId] = set(peers[:k])
+        self.lazy: Set[NodeId] = set(peers[k:k + lazy_degree])
+        self.ihave_delay = ihave_delay
+        self.graft_timeout = graft_timeout
+        self.delivered: Set[int] = set()
+        self.holders: Dict[int, List[NodeId]] = {}
+        self._timers: Set[int] = set()
+        self._cache: Dict[int, GossipData] = {}
+
+    # -- membership hooks used by churn scenarios ---------------------------
+    def add_peer(self, peer: NodeId, eager: bool = True) -> None:
+        (self.eager if eager else self.lazy).add(peer)
+
+    def drop_peer(self, peer: NodeId) -> None:
+        self.eager.discard(peer)
+        self.lazy.discard(peer)
+
+    def broadcast(self, payload: int = 64) -> int:
+        mid = fresh_mid()
+        self.delivered.add(mid)
+        msg = GossipData(mid, self.id, payload)
+        self._cache[mid] = msg
+        self._push(msg, exclude=None, immediate=True)
+        return mid
+
+    def on_message(self, src: NodeId, msg) -> None:
+        if isinstance(msg, GossipData):
+            self.metrics.add_bytes(msg.mid, msg.size)
+            if msg.mid in self.delivered:
+                # duplicate: prune the redundant eager link
+                self.send(src, Prune())
+                self.eager.discard(src)
+                self.lazy.add(src)
+                return
+            self.delivered.add(msg.mid)
+            self._cache[msg.mid] = msg
+            self.metrics.delivered(msg.mid, self.id, self.sim.now)
+            self.eager.add(src)
+            self.lazy.discard(src)
+            self._push(msg, exclude=src)
+        elif isinstance(msg, Prune):
+            self.eager.discard(src)
+            self.lazy.add(src)
+        elif isinstance(msg, IHave):
+            self.holders.setdefault(msg.mid, []).append(src)
+            if msg.mid not in self.delivered and msg.mid not in self._timers:
+                self._timers.add(msg.mid)
+                self.sim.after(self.graft_timeout, lambda: self._maybe_graft(msg.mid))
+        elif isinstance(msg, Graft):
+            self.eager.add(src)
+            self.lazy.discard(src)
+            cached = self._cache.get(msg.mid)
+            if cached is not None:
+                self.send(src, cached)
+
+    def _push(self, msg: GossipData, exclude: Optional[NodeId],
+              immediate: bool = False) -> None:
+        def do_send() -> None:
+            for t in list(self.eager):
+                if t != exclude:
+                    self.send(t, msg)
+            # lazy IHAVEs are batched (Plumtree's lazy queue), hence delayed
+            def lazy_send() -> None:
+                for t in list(self.lazy):
+                    if t != exclude:
+                        self.send(t, IHave(msg.mid))
+            self.sim.after(self.ihave_delay, lazy_send)
+        if immediate:
+            do_send()
+        else:
+            self.sim.after(self.forward_delay(), do_send)
+
+    def _maybe_graft(self, mid: int) -> None:
+        self._timers.discard(mid)
+        if mid in self.delivered:
+            return
+        holders = self.holders.get(mid, [])
+        if holders:
+            target = holders[0]
+            self.eager.add(target)
+            self.lazy.discard(target)
+            self.send(target, Graft(mid))
+            # re-arm in case the graft target is itself dead
+            self._timers.add(mid)
+            self.holders[mid] = holders[1:]
+            self.sim.after(self.graft_timeout, lambda: self._maybe_graft(mid))

@@ -1,0 +1,167 @@
+"""Node Coloring — the double-tree optimization (paper §4.6, App. C/D).
+
+Nodes are 2-colored by the parity of their clockwise ring distance from
+the broadcast initiator ("rebuild a logical list based on the ring, which
+places the root node in the middle ... partition the nodes into even and
+odd groups").  The **Primary Tree** uses initiator-parity nodes as
+internal nodes (opposite parity ⇒ always leaves, Appendix C); the
+**Secondary Tree** is rooted at the initiator's ring predecessor
+``N_{-1}`` (opposite parity) with the *same initial boundaries*
+``[N_1, N_{n-1}]``, so the two trees have disjoint internal node sets and
+every node owns two disjoint delivery paths (Appendix D).
+
+The initiator sends k+1 messages: its k primary children plus the
+secondary root.
+
+With *odd* ``n`` the parity alternation has a seam at the ring wrap (the
+paper implicitly assumes clean alternation); delivery is still guaranteed
+— only strict path-disjointness can degrade at the seam node.  The
+production benchmarks use even ``n`` (as does the paper: n = 500/600).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .ids import NodeId
+from .membership import MembershipView
+from .regions import Child, midpoint_offset, partition_balanced, root_halves
+
+PRIMARY = 0
+SECONDARY = 1
+
+#: Re-center the secondary root on the reduced ring (§4.6 "the root node
+#: always considers itself as the midpoint") instead of fanning from its
+#: region edge.  Measured OFF is better (EXPERIMENTS.md §Protocol): the
+#: edge-rooted secondary tree is *rotated* relative to the primary, which
+#: decorrelates straggler positions along each node's two disjoint paths
+#: — min(path₁, path₂) dodges stragglers better (LDT 976 vs 1278 ms at
+#: n=500), outweighing the one-level height saving of re-centering.
+RECENTER_SECONDARY = False
+
+
+def color_of(view: MembershipView, initiator: NodeId, node: NodeId) -> int:
+    """Parity of the clockwise ring distance initiator → node.
+
+    The initiator has color 0; its immediate ring neighbours color 1 (for
+    even n), matching the paper's "if N_0 is odd then N_{-1}, N_1 are even".
+    """
+    return view.ring_distance(initiator, node) % 2
+
+
+def tree_color(tree: int) -> int:
+    """Internal-node color of each tree: primary internals share the
+    initiator's color (0); secondary internals the predecessor's (1)."""
+    return 0 if tree == PRIMARY else 1
+
+
+def _split_side_colored(
+    arc: Sequence[NodeId],
+    kprime: int,
+    want: int,
+    view: MembershipView,
+    initiator: NodeId,
+) -> List[Child]:
+    """Divide one side's arc into sub-regions whose midpoints have the
+    tree's internal color.  Sub-region spans tile the whole arc so that
+    off-color nodes remain covered (they are delivered deeper as leaves).
+
+    If the side has no on-color node at all, every node in the side is
+    delivered directly as a leaf ("a node can send messages to a node with
+    a different parity only if there are no nodes with the same parity
+    within its assigned region, calculated separately for the left and
+    right regions").
+    """
+    if not arc:
+        return []
+    pref = [i for i, m in enumerate(arc) if color_of(view, initiator, m) == want]
+    if not pref:
+        return [Child(node=m, lb=m, rb=m, leaf=True) for m in arc]
+
+    children: List[Child] = []
+    groups = partition_balanced(len(pref), kprime)
+    # Spans between consecutive groups are cut halfway between the last
+    # on-color node of one group and the first of the next; the first/last
+    # spans extend to the arc edges, so the spans tile the arc exactly.
+    starts, ends = [], []
+    for gi, (lo, hi) in enumerate(groups):
+        starts.append(0 if gi == 0 else ends[-1] + 1)
+        if gi == len(groups) - 1:
+            ends.append(len(arc) - 1)
+        else:
+            ends.append((pref[hi] + pref[groups[gi + 1][0]]) // 2)
+    for (lo, hi), s, e in zip(groups, starts, ends):
+        mid = arc[pref[midpoint_offset(lo, hi)]]
+        children.append(Child(node=mid, lb=arc[s], rb=arc[e], leaf=(s == e)))
+    return children
+
+
+def find_children_colored(
+    view: MembershipView,
+    self_id: NodeId,
+    initiator: NodeId,
+    lb: Optional[NodeId],
+    rb: Optional[NodeId],
+    k: int,
+    tree: int,
+) -> List[Child]:
+    """Colored counterpart of :func:`repro.core.regions.find_children`.
+
+    ``lb is None`` ⇒ originator of this tree: the primary root centre-
+    splits everyone-else; the secondary root receives explicit boundaries
+    ``[N_1, N_{n-1}]`` from the initiator and, sitting at the region's
+    edge, fans into its left part (paper: "the initial boundaries of the
+    root nodes of the two trees are the same").
+    """
+    if k < 2 or k % 2 != 0:
+        raise ValueError(f"fan-out k must be a positive multiple of 2, got {k}")
+    kprime = k // 2
+    view.ensure(self_id)
+    if len(view) <= 1:
+        return []
+
+    if lb is None or rb is None:
+        arc = view.arc(view.successor(self_id), view.predecessor(self_id))
+        right_part, left_part = root_halves(arc)
+    elif (RECENTER_SECONDARY and tree == SECONDARY and rb == self_id
+          and view.predecessor(initiator) == self_id
+          and lb == view.successor(initiator)):
+        # Secondary ROOT: its boundaries span the whole ring minus the
+        # initiator ("the initial boundaries of the two roots are the
+        # same").  Per §4.6 "the root node always considers itself as the
+        # midpoint between the left and right regions" — re-center on the
+        # reduced ring so the secondary tree's height matches the
+        # primary's ("the height of the constructed Secondary Tree is
+        # similar to that of the Primary Tree").
+        arc = [m for m in view.arc(view.successor(self_id),
+                                   view.predecessor(self_id))
+               if m != initiator]
+        right_part, left_part = root_halves(arc)
+    else:
+        view.ensure(lb)
+        view.ensure(rb)
+        arc = view.arc(lb, rb)
+        if self_id in arc:
+            i = arc.index(self_id)
+            left_part, right_part = arc[:i], arc[i + 1:]
+        else:
+            right_part, left_part = root_halves(arc)
+
+    region = list(left_part) + list(right_part)
+    if len(region) <= k:
+        return [Child(node=m, lb=m, rb=m, leaf=True) for m in region]
+
+    want = tree_color(tree)
+    children = _split_side_colored(right_part, kprime, want, view, initiator)
+    children += _split_side_colored(left_part, kprime, want, view, initiator)
+    return children
+
+
+def secondary_root(view: MembershipView, initiator: NodeId) -> NodeId:
+    """The secondary tree's root is the initiator's ring predecessor."""
+    return view.predecessor(initiator)
+
+
+def secondary_root_boundaries(view: MembershipView, initiator: NodeId):
+    """Initial boundaries handed to the secondary root: the same
+    ``[N_1, N_{n-1}]`` region the primary root covers."""
+    return view.successor(initiator), view.predecessor(initiator)

@@ -1,0 +1,29 @@
+"""Node identifiers for the Snow protocol.
+
+The paper stores sorted ``(ip, port)`` endpoints (18 bytes for IPv6+port)
+and optionally hashes them (BLAKE2/SipHash) for uniformity.  We model a
+node id as a plain ``int`` — either assigned densely (simulator) or
+derived from an endpoint via BLAKE2b (production path).  All ring math in
+:mod:`repro.core.membership` only needs a total order.
+"""
+from __future__ import annotations
+
+import hashlib
+
+NodeId = int
+
+#: Wire sizes (bytes) used for RMR accounting, mirroring the paper's
+#: estimate of 18 bytes per member (IPv6 + 2-byte port).
+ENDPOINT_BYTES = 18
+MSG_ID_BYTES = 16
+
+
+def endpoint_id(host: str, port: int) -> NodeId:
+    """Hash an ``(ip, port)`` endpoint into a uniform 64-bit ring id.
+
+    The paper suggests BLAKE2 or SipHash when uniformity is required
+    (§4.2.1); plain sorted endpoints are also valid.  We take the top 8
+    bytes of BLAKE2b.
+    """
+    h = hashlib.blake2b(f"{host}:{port}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")

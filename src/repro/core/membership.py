@@ -1,0 +1,117 @@
+"""Sorted membership view and logical-ring arithmetic (paper §4.2.1).
+
+Every Snow node keeps the full membership as a **sorted array** of node
+ids; the array is read as a logical ring (``N_n == N_0``).  Views may
+diverge across nodes during churn — all region math below is therefore
+expressed *per view*.
+
+Tombstones: a node removed via LEAVE/EVICT is remembered so that
+anti-entropy cannot resurrect it (the paper relies on multi-minute linger
+windows; a tombstone set is the standard mechanical equivalent).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Iterable, Iterator, List, Optional, Sequence
+
+from .ids import NodeId
+
+
+class MembershipView:
+    """A sorted, ring-ordered membership list for one node."""
+
+    __slots__ = ("_members", "_tombstones")
+
+    def __init__(self, members: Iterable[NodeId] = (), tombstones: Iterable[NodeId] = ()):
+        self._members: List[NodeId] = sorted(set(members))
+        self._tombstones = set(tombstones)
+
+    # -- basic container ops -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._members)
+
+    def __iter__(self) -> Iterator[NodeId]:
+        return iter(self._members)
+
+    def __contains__(self, node: NodeId) -> bool:
+        i = bisect.bisect_left(self._members, node)
+        return i < len(self._members) and self._members[i] == node
+
+    def members(self) -> Sequence[NodeId]:
+        return tuple(self._members)
+
+    def tombstones(self) -> frozenset:
+        return frozenset(self._tombstones)
+
+    def copy(self) -> "MembershipView":
+        return MembershipView(self._members, self._tombstones)
+
+    # -- mutation -------------------------------------------------------------
+    def add(self, node: NodeId) -> bool:
+        """Insert ``node`` keeping sort order. Returns True if inserted."""
+        if node in self._tombstones:
+            return False
+        i = bisect.bisect_left(self._members, node)
+        if i < len(self._members) and self._members[i] == node:
+            return False
+        self._members.insert(i, node)
+        return True
+
+    def ensure(self, node: NodeId) -> None:
+        """Insert a boundary id carried by a message if absent (§4.2.3):
+        'if the boundary nodes are not found in the membership list, the IP
+        and ports of the nodes will be inserted into the list'. Boundary
+        insertion bypasses tombstones — the message is authoritative that
+        the node participated in the parent's view."""
+        i = bisect.bisect_left(self._members, node)
+        if i >= len(self._members) or self._members[i] != node:
+            self._members.insert(i, node)
+
+    def remove(self, node: NodeId, tombstone: bool = True) -> bool:
+        i = bisect.bisect_left(self._members, node)
+        if i < len(self._members) and self._members[i] == node:
+            del self._members[i]
+            if tombstone:
+                self._tombstones.add(node)
+            return True
+        if tombstone:
+            self._tombstones.add(node)
+        return False
+
+    def merge(self, other: "MembershipView") -> None:
+        """Anti-entropy merge (§4.5.1): union of members minus the union of
+        tombstones."""
+        self._tombstones |= other._tombstones
+        merged = set(self._members) | set(other._members)
+        self._members = sorted(m for m in merged if m not in self._tombstones)
+
+    # -- ring arithmetic -------------------------------------------------------
+    def index_of(self, node: NodeId) -> int:
+        i = bisect.bisect_left(self._members, node)
+        if i < len(self._members) and self._members[i] == node:
+            return i
+        raise KeyError(node)
+
+    def at(self, ring_index: int) -> NodeId:
+        return self._members[ring_index % len(self._members)]
+
+    def successor(self, node: NodeId, steps: int = 1) -> NodeId:
+        return self.at(self.index_of(node) + steps)
+
+    def predecessor(self, node: NodeId, steps: int = 1) -> NodeId:
+        return self.at(self.index_of(node) - steps)
+
+    def ring_distance(self, src: NodeId, dst: NodeId) -> int:
+        """Clockwise hops from src to dst."""
+        return (self.index_of(dst) - self.index_of(src)) % len(self._members)
+
+    def arc(self, lb: NodeId, rb: NodeId) -> List[NodeId]:
+        """All members from ``lb`` to ``rb`` inclusive, walking clockwise.
+
+        ``lb == rb`` yields the single node.  The arc never silently skips
+        members: it is exactly the region ``[lb, rb]`` of the paper.
+        """
+        i, j = self.index_of(lb), self.index_of(rb)
+        n = len(self._members)
+        span = (j - i) % n
+        return [self._members[(i + s) % n] for s in range(span + 1)]

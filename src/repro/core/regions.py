@@ -1,0 +1,140 @@
+"""Algorithm 1 — FindNode region splitting (paper §4.2.2–4.2.3).
+
+Pure functions: given a node's membership view, its own id, the
+``[leftBoundary, rightBoundary]`` carried by the incoming message, and the
+fan-out ``k``, compute the child messages to emit.  No tree state is ever
+stored — this is the paper's central claim ("self-organizing", §4.3).
+
+Conventions
+-----------
+* A *region* is a clockwise arc ``[lb .. rb]`` of the ring (inclusive).
+* The current node sits inside its region (root: the region is everyone
+  else and the node acts as the logical midpoint between the two halves).
+* ``k`` must be a multiple of 2 (paper §4.2); ``k' = k//2`` children are
+  allocated per side.
+* Each child receives its sub-region's boundaries; ``lb == rb == child``
+  marks a leaf (the child does not forward).
+
+Deviation from the printed pseudocode (documented in DESIGN.md): the
+paper computes ``rightRegionSize = floor(count / k')`` and emits k'
+regions of exactly that size, which leaves ``count mod k'`` trailing
+nodes uncovered whenever ``k' ∤ count``.  Eq. (4) assumes divisibility.
+We use a balanced integer partition (sizes differ by at most one, every
+node covered exactly once), which coincides with the paper's formula in
+the divisible case and preserves both the O(log_k n) height (Eq. 8) and
+the Appendix-A delivery invariant in the general case.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from .ids import NodeId
+from .membership import MembershipView
+
+
+@dataclass(frozen=True)
+class Child:
+    """One outgoing forwarding assignment."""
+
+    node: NodeId  #: the midpoint node the message is sent to
+    lb: NodeId    #: left boundary of the region the child is responsible for
+    rb: NodeId    #: right boundary
+    leaf: bool    #: lb == rb == node → child must not forward
+
+    @property
+    def boundaries(self) -> Tuple[NodeId, NodeId]:
+        return (self.lb, self.rb)
+
+
+def partition_balanced(count: int, parts: int) -> List[Tuple[int, int]]:
+    """Split offsets ``[0, count)`` into ``min(parts, count)`` contiguous
+    ranges whose sizes differ by at most one. Returns (lo, hi) inclusive."""
+    parts = min(parts, count)
+    if parts <= 0 or count <= 0:
+        return []
+    cuts = [round(i * count / parts) for i in range(parts + 1)]
+    return [(cuts[i], cuts[i + 1] - 1) for i in range(parts)]
+
+
+def midpoint_offset(lo: int, hi: int) -> int:
+    """Paper line 17: ``mid = floor((lB + (rB + 1)) / 2)`` — the right-of-
+    centre element ('we choose the right node')."""
+    return (lo + hi + 1) // 2
+
+
+def split_side(arc: Sequence[NodeId], kprime: int) -> List[Child]:
+    """Divide one side's arc into ≤ k' balanced sub-regions and pick each
+    sub-region's midpoint as the forwarding target (Alg. 1 lines 13-20)."""
+    children: List[Child] = []
+    for lo, hi in partition_balanced(len(arc), kprime):
+        mid = midpoint_offset(lo, hi)
+        node = arc[mid]
+        children.append(Child(node=node, lb=arc[lo], rb=arc[hi], leaf=(lo == hi)))
+    return children
+
+
+def root_halves(arc: Sequence[NodeId]) -> Tuple[Sequence[NodeId], Sequence[NodeId]]:
+    """Split the root's full-ring arc into (right, left) halves (Eq. 2-3).
+
+    'If the number of nodes cannot be evenly divided, the left region gets
+    one more node than the right' — right gets floor((n-1)/2).
+    """
+    nprime = len(arc) // 2
+    return arc[:nprime], arc[nprime:]
+
+
+def find_children(
+    view: MembershipView,
+    self_id: NodeId,
+    lb: Optional[NodeId],
+    rb: Optional[NodeId],
+    k: int,
+) -> List[Child]:
+    """Compute forwarding targets for a received (or originated) message.
+
+    ``lb is None`` ⇒ this node is the root: its region is the entire ring
+    except itself, with the node acting as the midpoint of the two halves
+    (Eq. 1-3).  Otherwise ``[lb, rb]`` is the region assigned by the
+    parent, and this node splits it at itself (Eq. 7).
+    """
+    if k < 2 or k % 2 != 0:
+        raise ValueError(f"fan-out k must be a positive multiple of 2, got {k}")
+    kprime = k // 2
+
+    view.ensure(self_id)  # a node always routes with itself on the ring
+    if len(view) <= 1:
+        return []
+
+    if lb is None or rb is None:
+        # Root: everyone else, clockwise starting at our successor.
+        arc = view.arc(view.successor(self_id), view.predecessor(self_id))
+        left_part: Sequence[NodeId]
+        right_part, left_part = root_halves(arc)
+    else:
+        view.ensure(lb)
+        view.ensure(rb)
+        arc = view.arc(lb, rb)
+        if self_id in arc:
+            i = arc.index(self_id)
+            left_part, right_part = arc[:i], arc[i + 1:]
+        else:
+            # Defensive: divergent views can hand us a region we are not
+            # inside (we were evicted from our own list, say).  Act as an
+            # external coordinator: centre-split like a root.  Not covered
+            # by the paper; preserves delivery.
+            right_part, left_part = root_halves(arc)
+
+    region = list(left_part) + list(right_part)
+    if len(region) <= k:
+        # Alg. 1 lines 4-12: direct delivery, everyone is a leaf.
+        return [Child(node=m, lb=m, rb=m, leaf=True) for m in region]
+
+    children = split_side(right_part, kprime)
+    children += split_side(left_part, kprime)
+    return children
+
+
+def leaf_assignment(lb: NodeId, rb: NodeId, node: NodeId) -> bool:
+    """A node is a leaf for a message iff its assigned region is itself."""
+    return lb == rb == node

@@ -1,0 +1,211 @@
+"""Cluster builders and the paper's three experiment scenarios (§5.2-5.5).
+
+Shared by tests and benchmarks.  All scenarios:
+
+* n nodes with uniform 10-200 ms forwarding delay, 5 % stragglers @ 1 s,
+* messages broadcast at 1 msg/s from a fixed initiator,
+* metrics collected over the *fixed* node subset (the paper's §5.4
+  methodology), with per-message intended sets taken from the
+  initiator's view at send time.
+
+Scenarios:
+* ``run_stable``    — §5.3: no membership changes.
+* ``run_churn``     — §5.4: a fresh node joins, 10 messages later it
+                      gracefully leaves, repeatedly.
+* ``run_breakdown`` — §5.5: every 10 messages one random fixed node
+                      silently crashes (traffic blackholed).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .baselines import FloodingNode, GossipNode, PlumtreeNode
+from .membership import MembershipView
+from .sim import (LatencyModel, Metrics, Network, NodeProfile, Sim,
+                  assign_profiles)
+from .snow_node import SnowNode
+
+PROTOCOLS = ("gossip", "plumtree", "snow", "coloring", "flooding")
+
+
+@dataclass
+class Cluster:
+    sim: Sim
+    net: Network
+    metrics: Metrics
+    nodes: Dict[int, object]
+    fixed: List[int]
+    protocol: str
+    k: int
+
+    def broadcast_from(self, src: int, payload: int = 64,
+                       reliable: bool = False) -> int:
+        node = self.nodes[src]
+        if self.protocol == "coloring":
+            mid = node.broadcast(payload, reliable=reliable, coloring=True)
+        elif self.protocol == "snow":
+            mid = node.broadcast(payload, reliable=reliable)
+        else:
+            mid = node.broadcast(payload)
+        if isinstance(node, SnowNode):
+            # the initiator's view at send time — includes crashed-but-not-
+            # yet-evicted members, exactly the paper's Reliability basis
+            intended = [m for m in node.view if m != src]
+        else:
+            intended = [m for m in self.fixed if m != src]
+        self.metrics.begin(mid, self.sim.now, intended)
+        return mid
+
+
+def build_cluster(
+    protocol: str,
+    n: int,
+    k: int,
+    seed: int = 0,
+    *,
+    straggler_frac: float = 0.05,
+    straggler_delay: float = 1.0,
+    enable_swim: bool = False,
+    enable_anti_entropy: bool = False,
+    payload: int = 64,
+) -> Cluster:
+    assert protocol in PROTOCOLS, protocol
+    sim = Sim(seed=seed)
+    metrics = Metrics()
+    net = Network(sim, metrics, LatencyModel())
+    rng = random.Random(seed ^ 0x5EED)
+    ids = list(range(n))
+    profiles = assign_profiles(rng, ids, straggler_frac=straggler_frac,
+                               straggler_delay=straggler_delay)
+    nodes: Dict[int, object] = {}
+    for i in ids:
+        if protocol in ("snow", "coloring"):
+            nodes[i] = SnowNode(i, sim, net, metrics, MembershipView(ids), k,
+                                profiles[i], enable_swim=enable_swim,
+                                enable_anti_entropy=enable_anti_entropy)
+        elif protocol == "gossip":
+            nodes[i] = GossipNode(i, sim, net, metrics, MembershipView(ids),
+                                  k, profiles[i])
+        elif protocol == "flooding":
+            nodes[i] = FloodingNode(i, sim, net, metrics, MembershipView(ids),
+                                    k, profiles[i])
+        elif protocol == "plumtree":
+            peers = [p for p in rng.sample(ids, min(n, k + 4)) if p != i]
+            nodes[i] = PlumtreeNode(i, sim, net, metrics, peers, k, profiles[i])
+    return Cluster(sim, net, metrics, nodes, list(ids), protocol, k)
+
+
+def _drain(cluster: Cluster, extra: float = 12.0) -> None:
+    cluster.sim.run(until=cluster.sim.now + extra)
+
+
+def run_stable(protocol: str, n: int = 500, k: int = 4,
+               n_messages: int = 100, rate_s: float = 1.0,
+               seed: int = 0, payload: int = 64) -> Cluster:
+    c = build_cluster(protocol, n, k, seed)
+    src = 0
+    for i in range(n_messages):
+        c.sim.at(i * rate_s, lambda: c.broadcast_from(src, payload))
+    c.sim.run(until=n_messages * rate_s + 15.0)
+    return c
+
+
+def run_churn(protocol: str, n: int = 500, k: int = 4,
+              n_messages: int = 100, rate_s: float = 1.0,
+              seed: int = 0, payload: int = 64,
+              churn_every: int = 10) -> Cluster:
+    """§5.4: while messages flow, one fresh node joins every
+    ``churn_every`` messages and gracefully leaves ``churn_every``
+    messages later.  Metrics are evaluated over the fixed n nodes only."""
+    c = build_cluster(protocol, n, k, seed, enable_anti_entropy=(protocol in ("snow", "coloring")))
+    src = 0
+    rng = random.Random(seed ^ 0xC0FFEE)
+    next_id = [n]
+    live_transients: List[int] = []
+
+    def do_join() -> None:
+        nid = next_id[0]
+        next_id[0] += 1
+        prof = NodeProfile()
+        if c.protocol in ("snow", "coloring"):
+            node = SnowNode(nid, c.sim, c.net, c.metrics,
+                            MembershipView([nid]), k, prof,
+                            enable_anti_entropy=True)
+            seed_node = c.nodes[rng.choice(c.fixed)]
+            node.join_via(seed_node)
+        elif c.protocol == "gossip":
+            node = GossipNode(nid, c.sim, c.net, c.metrics,
+                              MembershipView(c.fixed + [nid]), k, prof)
+            for peer_id in rng.sample(c.fixed, k):
+                c.nodes[peer_id].view.add(nid)
+        else:  # plumtree
+            peers = rng.sample(c.fixed, k + 2)
+            node = PlumtreeNode(nid, c.sim, c.net, c.metrics, peers, k, prof)
+            for p in peers:
+                c.nodes[p].add_peer(nid, eager=True)
+        c.nodes[nid] = node
+        live_transients.append(nid)
+
+    def do_leave() -> None:
+        if not live_transients:
+            return
+        nid = live_transients.pop(0)
+        node = c.nodes[nid]
+        if isinstance(node, SnowNode):
+            node.leave(linger=5.0)
+        else:
+            c.net.depart(nid)
+            if c.protocol == "gossip":
+                for other in c.nodes.values():
+                    if hasattr(other, "view"):
+                        other.view.remove(nid, tombstone=False)
+            else:
+                for other in c.nodes.values():
+                    if isinstance(other, PlumtreeNode):
+                        other.drop_peer(nid)
+
+    for i in range(n_messages):
+        t = i * rate_s
+        if i % churn_every == 3:
+            c.sim.at(t + 0.11, do_join)
+        if i % churn_every == 8:
+            c.sim.at(t + 0.13, do_leave)
+        c.sim.at(t, lambda: c.broadcast_from(src, payload))
+    c.sim.run(until=n_messages * rate_s + 15.0)
+    return c
+
+
+def run_breakdown(protocol: str, n: int = 500, k: int = 4,
+                  n_messages: int = 100, rate_s: float = 1.0,
+                  seed: int = 0, payload: int = 64,
+                  crash_every: int = 10, reliable: bool = False) -> Cluster:
+    """§5.5: every ``crash_every`` messages a random fixed node silently
+    crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
+    evicted within seconds; other nodes' views keep the dead node, which
+    depresses Reliability exactly as in the paper's Table 2."""
+    c = build_cluster(protocol, n, k, seed,
+                      enable_swim=(protocol in ("snow", "coloring")))
+    src = 0
+    rng = random.Random(seed ^ 0xDEAD)
+
+    def do_crash() -> None:
+        cands = [i for i in c.fixed if i != src and c.net.alive(i)]
+        if cands:
+            c.net.crash(rng.choice(cands))
+
+    for i in range(n_messages):
+        t = i * rate_s
+        if i > 0 and i % crash_every == 0:
+            c.sim.at(t + 0.01, do_crash)
+        c.sim.at(t + 0.02, lambda: c.broadcast_from(src, payload, reliable=reliable))
+    c.sim.run(until=n_messages * rate_s + 15.0)
+    return c
+
+
+def summarize(cluster: Cluster, fixed_only: bool = True) -> dict:
+    subset = set(cluster.fixed) if fixed_only else None
+    s = cluster.metrics.summary(subset)
+    s["protocol"] = cluster.protocol
+    return s

@@ -1,0 +1,231 @@
+"""Deterministic discrete-event simulator for broadcast protocols.
+
+Models the paper's experimental substrate (§5.2):
+
+* per-node forwarding delay assigned at setup — uniform 10–200 ms, with a
+  configurable fraction of 1 s stragglers (default 5 %),
+* in-datacenter link latency (lognormal around ~0.4 ms; the paper sampled
+  Alibaba-cloud latencies, which are not published — forwarding delay
+  dominates either way),
+* silent crashes = drop all inbound + outbound traffic of a node without
+  any notification (§5.5),
+* byte accounting per message id for RMR, first-delivery times for
+  LDT/Reliability.
+
+Everything is seeded; runs are exactly reproducible.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .ids import NodeId
+
+
+class Sim:
+    """A heapq-based event loop with deterministic tie-breaking."""
+
+    def __init__(self, seed: int = 0):
+        self.now: float = 0.0
+        self.rng = random.Random(seed)
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (max(time, self.now), next(self._seq), fn))
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run(self, until: float = math.inf, max_events: int = 50_000_000) -> None:
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = self._heap[0]
+            if t > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            fn()
+            n += 1
+
+
+@dataclass
+class LatencyModel:
+    """Intra-datacenter one-way latency: lognormal, sub-millisecond."""
+
+    median_s: float = 0.0004
+    sigma: float = 0.35
+
+    def sample(self, rng: random.Random) -> float:
+        return self.median_s * math.exp(rng.gauss(0.0, self.sigma))
+
+
+class Metrics:
+    """Per-broadcast delivery/byte records → LDT / RMR / Reliability."""
+
+    def __init__(self) -> None:
+        self.start: Dict[int, float] = {}
+        self.intended: Dict[int, frozenset] = {}
+        self.first_delivery: Dict[int, Dict[NodeId, float]] = {}
+        self.data_bytes: Dict[int, int] = {}
+
+    def begin(self, mid: int, t0: float, intended: Sequence[NodeId]) -> None:
+        self.start[mid] = t0
+        self.intended[mid] = frozenset(intended)
+        self.first_delivery[mid] = {}
+        self.data_bytes.setdefault(mid, 0)
+
+    def delivered(self, mid: int, node: NodeId, t: float) -> None:
+        fd = self.first_delivery.setdefault(mid, {})
+        if node not in fd:
+            fd[node] = t
+
+    def add_bytes(self, mid: int, nbytes: int) -> None:
+        self.data_bytes[mid] = self.data_bytes.get(mid, 0) + nbytes
+
+    # -- aggregation ---------------------------------------------------------
+    def per_message(self, subset: Optional[Set[NodeId]] = None) -> List[dict]:
+        """One row per broadcast: ldt (s), rmr (bytes/node), reliability.
+
+        ``subset`` restricts both the intended set and deliveries to a
+        fixed group of nodes — the paper's "metrics exclusively from the
+        fixed 500 nodes" methodology (§5.4).
+        """
+        rows = []
+        for mid, t0 in sorted(self.start.items()):
+            intended = self.intended[mid]
+            if subset is not None:
+                intended = intended & frozenset(subset)
+            if not intended:
+                continue
+            fd = self.first_delivery.get(mid, {})
+            times = [fd[n] - t0 for n in intended if n in fd]
+            n_int = len(intended)
+            rows.append({
+                "mid": mid,
+                "ldt": max(times) if times else float("nan"),
+                "reliability": len(times) / n_int,
+                "rmr": self.data_bytes.get(mid, 0) / max(1, n_int),
+            })
+        return rows
+
+    def summary(self, subset: Optional[Set[NodeId]] = None) -> dict:
+        rows = self.per_message(subset)
+        if not rows:
+            return {"ldt": float("nan"), "rmr": 0.0, "reliability": 0.0, "n_messages": 0}
+        ldts = [r["ldt"] for r in rows if not math.isnan(r["ldt"])]
+        return {
+            "ldt": sum(ldts) / len(ldts) if ldts else float("nan"),
+            "rmr": sum(r["rmr"] for r in rows) / len(rows),
+            "reliability": sum(r["reliability"] for r in rows) / len(rows),
+            "n_messages": len(rows),
+        }
+
+
+class Network:
+    """Point-to-point message fabric with crash semantics.
+
+    A crashed node's inbound *and* outbound traffic is dropped (the
+    paper's `tc`-based blackholing, §5.5) — other nodes receive no
+    signal; TCP-level failure is invisible until SWIM notices.
+    """
+
+    def __init__(self, sim: Sim, metrics: Metrics,
+                 latency: Optional[LatencyModel] = None):
+        self.sim = sim
+        self.metrics = metrics
+        self.latency = latency or LatencyModel()
+        self.nodes: Dict[NodeId, "NodeBase"] = {}
+        self.crashed: Set[NodeId] = set()
+        self.departed: Set[NodeId] = set()
+        self.sends: int = 0
+        self.bytes_total: int = 0
+
+    def register(self, node: "NodeBase") -> None:
+        self.nodes[node.id] = node
+
+    def alive(self, node: NodeId) -> bool:
+        return (node in self.nodes and node not in self.crashed
+                and node not in self.departed)
+
+    def crash(self, node: NodeId) -> None:
+        self.crashed.add(node)
+
+    def depart(self, node: NodeId) -> None:
+        self.departed.add(node)
+
+    def send(self, src: NodeId, dst: NodeId, msg) -> None:
+        """Fire-and-forget unicast with link latency."""
+        if src in self.crashed or src in self.departed:
+            return
+        self.sends += 1
+        self.bytes_total += msg.size
+        if dst not in self.nodes:
+            return
+        delay = self.latency.sample(self.sim.rng)
+        self.sim.after(delay, lambda: self._deliver(src, dst, msg))
+
+    def _deliver(self, src: NodeId, dst: NodeId, msg) -> None:
+        if not self.alive(dst):
+            return
+        self.nodes[dst].on_message(src, msg)
+
+
+@dataclass(frozen=True)
+class NodeProfile:
+    """Per-node forwarding behaviour (§5.2): normal nodes take a fresh
+    uniform 10–200 ms processing delay per forwarded message; straggler
+    nodes (5 % of the cluster) always take 1 s."""
+
+    straggler: bool = False
+    lo: float = 0.010
+    hi: float = 0.200
+    straggler_delay: float = 1.0
+
+
+class NodeBase:
+    """Common node machinery: identity, forwarding delay, RNG."""
+
+    def __init__(self, node_id: NodeId, sim: Sim, net: Network,
+                 profile: NodeProfile):
+        self.id = node_id
+        self.sim = sim
+        self.net = net
+        self.profile = profile
+        self.rng = random.Random((node_id * 2654435761) & 0xFFFFFFFF)
+        net.register(self)
+
+    def forward_delay(self) -> float:
+        p = self.profile
+        if p.straggler:
+            return p.straggler_delay
+        return self.rng.uniform(p.lo, p.hi)
+
+    # messages are handled after the node's processing delay has elapsed
+    def on_message(self, src: NodeId, msg) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def send(self, dst: NodeId, msg) -> None:
+        self.net.send(self.id, dst, msg)
+
+
+def assign_profiles(
+    rng: random.Random,
+    node_ids: Sequence[NodeId],
+    lo: float = 0.010,
+    hi: float = 0.200,
+    straggler_frac: float = 0.05,
+    straggler_delay: float = 1.0,
+) -> Dict[NodeId, NodeProfile]:
+    """§5.2: uniform 10–200 ms processing delay; 5 % stragglers at 1 s."""
+    n_strag = int(round(straggler_frac * len(node_ids)))
+    stragglers = set(rng.sample(list(node_ids), n_strag))
+    return {
+        n: NodeProfile(straggler=(n in stragglers), lo=lo, hi=hi,
+                       straggler_delay=straggler_delay)
+        for n in node_ids
+    }

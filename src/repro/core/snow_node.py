@@ -1,0 +1,331 @@
+"""The Snow protocol node: broadcast, Reliable Messages, membership.
+
+Implements, per the paper:
+
+* §4.2  standard broadcast (region splitting at every hop, no tree state),
+* §4.4  Reliable Messages (leaf→root ACK aggregation, timeout + retry
+        against the *current* membership view, so retries route around
+        evicted nodes),
+* §4.5  membership maintenance — JOIN (sync-then-announce), graceful
+        LEAVE (announce + linger), SWIM-style probing with indirect
+        ping-req and EVICT broadcast, anti-entropy (periodic full-view
+        merge, default 15 s),
+* §4.6  Node Coloring (double-tree broadcast; forwarding state is keyed
+        by (message, tree) while delivery is deduplicated by message, so
+        a node can be a leaf of one tree and internal in the other).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .coloring import (PRIMARY, SECONDARY, find_children_colored,
+                       secondary_root, secondary_root_boundaries)
+from .ids import NodeId
+from .membership import MembershipView
+from .messages import (Ack, Data, MemberUpdate, Probe, SyncReq, fresh_mid)
+from .regions import find_children
+from .sim import Metrics, Network, NodeBase, Sim
+
+
+@dataclass
+class ReliableState:
+    parent: Optional[NodeId]
+    pending: Set[NodeId] = field(default_factory=set)
+    acked: Set[NodeId] = field(default_factory=set)
+    acked_parent: bool = False
+    retries: int = 0
+
+
+class SnowNode(NodeBase):
+    """One cluster member running the full Snow protocol."""
+
+    def __init__(
+        self,
+        node_id: NodeId,
+        sim: Sim,
+        net: Network,
+        metrics: Metrics,
+        view: MembershipView,
+        k: int,
+        profile: "NodeProfile",
+        *,
+        ack_timeout: float = 2.5,
+        max_retries: int = 2,
+        probe_interval: float = 1.0,
+        probe_timeout: float = 0.5,
+        indirect_probes: int = 3,
+        anti_entropy_interval: float = 15.0,
+        enable_swim: bool = False,
+        enable_anti_entropy: bool = False,
+    ):
+        super().__init__(node_id, sim, net, profile)
+        self.metrics = metrics
+        self.view = view
+        self.k = k
+        self.ack_timeout = ack_timeout
+        self.max_retries = max_retries
+        self.probe_interval = probe_interval
+        self.probe_timeout = probe_timeout
+        self.indirect_probes = indirect_probes
+        self.anti_entropy_interval = anti_entropy_interval
+
+        self.delivered: Set[int] = set()
+        self.forwarded: Set[Tuple[int, Optional[int]]] = set()
+        self.reliable: Dict[Tuple[int, Optional[int]], ReliableState] = {}
+        self.converged: Dict[int, float] = {}     # root-side: mid -> time all acks arrived
+        self._root_pending: Dict[Tuple[int, int], Set[Tuple[NodeId, Optional[int]]]] = {}
+        self._probe_waiting: Dict[NodeId, float] = {}
+        self._suspected: Set[NodeId] = set()
+
+        if enable_swim:
+            self.sim.after(self.rng.uniform(0, probe_interval), self._probe_tick)
+        if enable_anti_entropy:
+            self.sim.after(self.rng.uniform(0, anti_entropy_interval), self._anti_entropy_tick)
+
+    # ------------------------------------------------------------------ #
+    # Broadcast origination                                               #
+    # ------------------------------------------------------------------ #
+    def broadcast(self, payload: int = 64, *, reliable: bool = False,
+                  coloring: bool = False,
+                  update: Optional[MemberUpdate] = None) -> int:
+        """Originate a broadcast; returns the message id."""
+        mid = fresh_mid()
+        self.delivered.add(mid)
+        if update is not None:
+            self._apply_update(update)
+        if coloring:
+            self._forward(Data(mid, self.id, None, None, payload, reliable,
+                               PRIMARY, update), parent=None, immediate=True)
+            # the (k+1)-th send: hand the secondary root its region
+            if len(self.view) > 2:
+                sroot = secondary_root(self.view, self.id)
+                lb, rb = secondary_root_boundaries(self.view, self.id)
+                msg = Data(mid, self.id, lb, rb, payload, reliable, SECONDARY, update)
+                if reliable:
+                    self._root_pending.setdefault((mid, 0), set()).add(
+                        (sroot, SECONDARY))
+                self.send(sroot, msg)
+        else:
+            self._forward(Data(mid, self.id, None, None, payload, reliable,
+                               None, update), parent=None, immediate=True)
+        return mid
+
+    def broadcast_member_update(self, update: MemberUpdate) -> int:
+        """§4.5: every membership change is broadcast as a Reliable Message."""
+        return self.broadcast(payload=0, reliable=True, update=update)
+
+    # ------------------------------------------------------------------ #
+    # Join / leave                                                        #
+    # ------------------------------------------------------------------ #
+    def join_via(self, seed: "SnowNode") -> None:
+        """§4.5.1: sync the seed's view, add self, then announce."""
+        self.view = seed.view.copy()
+        self.view.add(self.id)
+        self.broadcast_member_update(MemberUpdate("join", self.id))
+
+    def leave(self, linger: float = 5.0) -> None:
+        """§4.5.2: announce, keep forwarding during the linger window,
+        then disconnect."""
+        self.broadcast_member_update(MemberUpdate("leave", self.id))
+        self.sim.after(linger, lambda: self.net.depart(self.id))
+
+    # ------------------------------------------------------------------ #
+    # Message handling                                                    #
+    # ------------------------------------------------------------------ #
+    def on_message(self, src: NodeId, msg) -> None:
+        if isinstance(msg, Data):
+            self._on_data(src, msg)
+        elif isinstance(msg, Ack):
+            self._on_ack(src, msg)
+        elif isinstance(msg, Probe):
+            self._on_probe(src, msg)
+        elif isinstance(msg, SyncReq):
+            pass  # anti-entropy handled via _anti_entropy_tick state pulls
+
+    def _on_data(self, src: NodeId, msg: Data) -> None:
+        self.metrics.add_bytes(msg.mid, msg.size)
+        if msg.mid not in self.delivered:
+            self.delivered.add(msg.mid)
+            self.metrics.delivered(msg.mid, self.id, self.sim.now)
+            if msg.update is not None:
+                self._apply_update(msg.update)
+        key = (msg.mid, msg.tree, msg.epoch)
+        if key in self.forwarded:
+            return  # duplicate receipt on this tree/epoch
+        self._forward(msg, parent=src)
+
+    def _forward(self, msg: Data, parent: Optional[NodeId],
+                 immediate: bool = False) -> None:
+        """Compute children from *our* view and send after fwd delay."""
+        key = (msg.mid, msg.tree, msg.epoch)
+        self.forwarded.add(key)
+        is_leaf = msg.lb is not None and msg.lb == msg.rb == self.id
+        if is_leaf:
+            if msg.reliable and parent is not None:
+                self.send(parent, Ack(msg.mid, msg.epoch))
+            return
+
+        def do_send() -> None:
+            children = self._children_for(msg)
+            if msg.reliable:
+                if parent is None:
+                    # root: each epoch keeps its own expected-ack set
+                    pend = self._root_pending.setdefault(
+                        (msg.mid, msg.epoch), set())
+                    for ch in children:
+                        pend.add((ch.node, msg.tree))
+                    self.sim.after(self.ack_timeout,
+                                   lambda: self._root_retry(msg, msg.epoch))
+                else:
+                    # §4.4: ACK aggregation is strictly per broadcast
+                    # epoch — retries are ROOT-driven rebroadcasts that
+                    # rebuild a consistent tree over the updated view, so
+                    # no cross-epoch wait-cycles can form
+                    rkey = (msg.mid, msg.tree, msg.epoch)
+                    st = self.reliable.get(rkey)
+                    if st is None:
+                        st = ReliableState(parent=parent)
+                        self.reliable[rkey] = st
+                    st.pending |= {ch.node for ch in children
+                                   if ch.node not in st.acked}
+                    if not st.pending:
+                        st.acked_parent = True
+                        self.send(parent, Ack(msg.mid, msg.epoch))
+            for ch in children:
+                self.send(ch.node, msg.with_bounds(ch.lb, ch.rb))
+
+        if immediate:
+            do_send()
+        else:
+            self.sim.after(self.forward_delay(), do_send)
+
+    def _children_for(self, msg: Data):
+        if msg.tree is None:
+            return find_children(self.view, self.id, msg.lb, msg.rb, self.k)
+        return find_children_colored(self.view, self.id, msg.initiator,
+                                     msg.lb, msg.rb, self.k, msg.tree)
+
+    # ------------------------------------------------------------------ #
+    # Reliable Messages (§4.4)                                            #
+    # ------------------------------------------------------------------ #
+    def _on_ack(self, src: NodeId, ack: Ack) -> None:
+        # root bookkeeping (per epoch)
+        pend = self._root_pending.get((ack.mid, ack.epoch))
+        if pend is not None:
+            for entry in [e for e in pend if e[0] == src]:
+                pend.discard(entry)
+            if not pend:
+                self.converged.setdefault(ack.mid, self.sim.now)
+        # internal-node bookkeeping (any tree, same epoch only)
+        for key, st in list(self.reliable.items()):
+            if key[0] != ack.mid or key[2] != ack.epoch or st.acked_parent:
+                continue
+            st.acked.add(src)
+            st.pending.discard(src)
+            if not st.pending and st.parent is not None:
+                st.acked_parent = True
+                self.send(st.parent, Ack(ack.mid, ack.epoch))
+
+    def _root_retry(self, msg: Data, epoch: int, attempt: int = 0) -> None:
+        if not self.net.alive(self.id) or msg.mid in self.converged:
+            return
+        pend = self._root_pending.get((msg.mid, epoch))
+        if pend is None:
+            return
+        # prune children SWIM has evicted since (§4.4: 'this time window
+        # is usually sufficient to remove the faulty nodes')
+        pend = {e for e in pend if e[0] in self.view}
+        self._root_pending[(msg.mid, epoch)] = pend
+        if not pend:
+            self.converged.setdefault(msg.mid, self.sim.now)
+            return
+        if epoch < self.max_retries:
+            # full rebroadcast, next epoch, over the updated view — this
+            # rebuilds a consistent ack tree from the top (§4.4)
+            self._forward(msg.with_bounds(msg.lb, msg.rb, epoch=epoch + 1),
+                          parent=None, immediate=True)
+        elif attempt < 3:
+            # no more rebroadcasts: keep pruning as evictions land
+            self.sim.after(self.ack_timeout,
+                           lambda: self._root_retry(msg, epoch, attempt + 1))
+
+    # ------------------------------------------------------------------ #
+    # Membership updates                                                  #
+    # ------------------------------------------------------------------ #
+    def _apply_update(self, up: MemberUpdate) -> None:
+        if up.kind == "join":
+            self.view.add(up.subject)
+        elif up.kind in ("leave", "evict"):
+            if up.subject != self.id:
+                self.view.remove(up.subject)
+            self._suspected.discard(up.subject)
+
+    # ------------------------------------------------------------------ #
+    # SWIM failure detection (§4.5.3)                                     #
+    # ------------------------------------------------------------------ #
+    def _probe_tick(self) -> None:
+        if not self.net.alive(self.id):
+            return
+        members = [m for m in self.view if m != self.id]
+        if members:
+            target = self.rng.choice(members)
+            self._probe_waiting[target] = self.sim.now
+            self.send(target, Probe("ping", target))
+            self.sim.after(self.probe_timeout,
+                           lambda: self._probe_timeout(target, indirect=True))
+        self.sim.after(self.probe_interval, self._probe_tick)
+
+    def _probe_timeout(self, target: NodeId, indirect: bool) -> None:
+        if target not in self._probe_waiting:
+            return
+        if indirect:
+            members = [m for m in self.view if m not in (self.id, target)]
+            proxies = self.rng.sample(members, min(self.indirect_probes, len(members)))
+            for p in proxies:
+                self.send(p, Probe("ping_req", target))
+            self.sim.after(self.probe_timeout * 2,
+                           lambda: self._probe_timeout(target, indirect=False))
+        else:
+            # confirmed: evict and tell everyone (Reliable Message)
+            del self._probe_waiting[target]
+            if target in self.view and target not in self._suspected:
+                self._suspected.add(target)
+                self.view.remove(target)
+                self.broadcast_member_update(MemberUpdate("evict", target))
+
+    def _on_probe(self, src: NodeId, p: Probe) -> None:
+        if p.kind == "ping":
+            self.send(src, Probe("probe_ack", p.subject))
+        elif p.kind == "ping_req":
+            # indirect probe on behalf of src
+            self.send(p.subject, Probe("ping", p.subject))
+            # relay semantics collapsed: if the subject answers us, we ack src
+            self._relay_for = getattr(self, "_relay_for", {})
+            self._relay_for.setdefault(p.subject, set()).add(src)
+        elif p.kind == "probe_ack":
+            self._probe_waiting.pop(p.subject, None)
+            self._probe_waiting.pop(src, None)
+            relays = getattr(self, "_relay_for", {}).pop(p.subject, set()) if hasattr(self, "_relay_for") else set()
+            for r in relays:
+                self.send(r, Probe("probe_ack", p.subject))
+
+    # ------------------------------------------------------------------ #
+    # Anti-entropy (§4.5.1)                                               #
+    # ------------------------------------------------------------------ #
+    def _anti_entropy_tick(self) -> None:
+        if not self.net.alive(self.id):
+            return
+        members = [m for m in self.view if m != self.id]
+        if members:
+            target = self.rng.choice(members)
+            peer = self.net.nodes.get(target)
+            if peer is not None and self.net.alive(target) and isinstance(peer, SnowNode):
+                # model: request + response, then merge both directions
+                self.net.send(self.id, target, SyncReq(len(self.view)))
+                self.net.send(target, self.id, SyncReq(len(peer.view)))
+                merged = self.view.copy()
+                merged.merge(peer.view)
+                self.view.merge(peer.view)
+                peer.view.merge(merged)
+        self.sim.after(self.anti_entropy_interval, self._anti_entropy_tick)

@@ -1,0 +1,166 @@
+"""Synchronous dissemination tracing.
+
+Walks a broadcast to completion assuming instantaneous, loss-free links,
+recording the first-delivery edges — the implicit tree of §4.3 ("the tree
+structure is drawn by connecting the paths traversed by message
+broadcasts").  Supports per-node divergent membership views (Appendix B)
+and the Coloring double tree (§4.6).
+
+Used by: Appendix A/B/C/D property tests, the Eq. 8 height check, and
+:mod:`repro.collectives.topology` (which turns traced trees into
+``ppermute`` schedules).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .coloring import (PRIMARY, SECONDARY, find_children_colored,
+                       secondary_root, secondary_root_boundaries)
+from .ids import NodeId
+from .membership import MembershipView
+from .regions import Child, find_children
+
+
+@dataclass
+class Trace:
+    """Result of one synchronous broadcast walk."""
+
+    root: NodeId
+    parent: Dict[NodeId, Optional[NodeId]] = field(default_factory=dict)
+    depth: Dict[NodeId, int] = field(default_factory=dict)
+    children: Dict[NodeId, List[NodeId]] = field(default_factory=dict)
+    sends: int = 0          #: total messages emitted (== deliveries, Snow sends once per receiver)
+    duplicates: int = 0     #: deliveries to nodes that already had the message
+
+    @property
+    def delivered(self) -> frozenset:
+        return frozenset(self.depth)
+
+    @property
+    def height(self) -> int:
+        return max(self.depth.values(), default=0)
+
+    def path(self, node: NodeId) -> List[NodeId]:
+        """Root → node chain of first-delivery parents."""
+        out = [node]
+        while self.parent.get(out[-1]) is not None:
+            out.append(self.parent[out[-1]])
+        return out[::-1]
+
+
+def _views_for(
+    views: Mapping[NodeId, MembershipView] | MembershipView,
+    node: NodeId,
+) -> Optional[MembershipView]:
+    if isinstance(views, MembershipView):
+        return views
+    return views.get(node)
+
+
+def trace_broadcast(
+    root: NodeId,
+    views: Mapping[NodeId, MembershipView] | MembershipView,
+    k: int,
+    copy_views: bool = True,
+) -> Trace:
+    """Trace a standard Snow broadcast.
+
+    ``views`` is either one shared view (stable cluster) or a per-node
+    mapping (divergent views, Appendix B).  Nodes absent from the mapping
+    drop the message (they do not exist / have crashed).
+    """
+    t = Trace(root=root)
+    t.parent[root] = None
+    t.depth[root] = 0
+    q: deque[Tuple[NodeId, Optional[NodeId], Optional[NodeId], int]] = deque()
+    q.append((root, None, None, 0))
+    while q:
+        node, lb, rb, d = q.popleft()
+        view = _views_for(views, node)
+        if view is None:
+            continue
+        if copy_views:
+            view = view.copy()
+        if lb is not None and lb == rb == node:
+            continue  # leaf assignment
+        for ch in find_children(view, node, lb, rb, k):
+            t.sends += 1
+            if ch.node in t.depth:
+                t.duplicates += 1
+                continue
+            t.parent[ch.node] = node
+            t.depth[ch.node] = d + 1
+            t.children.setdefault(node, []).append(ch.node)
+            q.append((ch.node, ch.lb, ch.rb, d + 1))
+    return t
+
+
+def trace_colored(
+    root: NodeId,
+    views: Mapping[NodeId, MembershipView] | MembershipView,
+    k: int,
+    tree: int,
+    copy_views: bool = True,
+) -> Trace:
+    """Trace one of the two Coloring trees (§4.6)."""
+    t = Trace(root=root)
+    base_view = _views_for(views, root)
+    assert base_view is not None, "initiator must have a view"
+    q: deque = deque()
+    if tree == PRIMARY:
+        t.parent[root] = None
+        t.depth[root] = 0
+        q.append((root, None, None, 0))
+        initiator = root
+    else:
+        initiator = root
+        sroot = secondary_root(base_view, initiator)
+        lb, rb = secondary_root_boundaries(base_view, initiator)
+        # initiator -> secondary root is the (k+1)-th send
+        t.sends += 1
+        t.parent[sroot] = root
+        t.depth[sroot] = 1
+        t.children.setdefault(root, []).append(sroot)
+        q.append((sroot, lb, rb, 1))
+    while q:
+        node, lb, rb, d = q.popleft()
+        view = _views_for(views, node)
+        if view is None:
+            continue
+        if copy_views:
+            view = view.copy()
+        if lb is not None and lb == rb == node:
+            continue
+        for ch in find_children_colored(view, node, initiator, lb, rb, k, tree):
+            t.sends += 1
+            if ch.node in t.depth:
+                t.duplicates += 1
+                continue
+            t.parent[ch.node] = node
+            t.depth[ch.node] = d + 1
+            t.children.setdefault(node, []).append(ch.node)
+            q.append((ch.node, ch.lb, ch.rb, d + 1))
+    return t
+
+
+def trace_two_trees(
+    root: NodeId,
+    views: Mapping[NodeId, MembershipView] | MembershipView,
+    k: int,
+) -> Tuple[Trace, Trace]:
+    """Primary + Secondary traces for the Coloring broadcast."""
+    return (
+        trace_colored(root, views, k, PRIMARY),
+        trace_colored(root, views, k, SECONDARY),
+    )
+
+
+def expected_height(n: int, k: int) -> int:
+    """Eq. 8: H = ceil(log_k((k-1)·n) + 1)."""
+    import math
+
+    if n <= 1:
+        return 0
+    return math.ceil(math.log((k - 1) * n, k) + 1)

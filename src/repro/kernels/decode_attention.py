@@ -1,0 +1,118 @@
+"""Flash-decode — single-token GQA attention over a long KV cache.
+
+One new query token attends to a seq_len cache: the kernel blocks over
+the cache's sequence dim (grid = (batch, num_kv_blocks)), keeps the
+online-softmax state (m, l, acc) in VMEM scratch across KV blocks, and
+emits the output tile on the last block.  All query heads of a batch row
+ride in one (H, hd) VMEM tile (H ≤ 64, hd = 128 → 32 KB), so the GQA
+group structure is exploited with zero KV duplication.
+
+Validity masking uses a precomputed int8 mask (B? no — (S,)) rather than
+a scalar-prefetch length, which keeps the kernel portable to interpret
+mode; the mask adds S bytes of HBM traffic vs the cache's S·Hkv·hd·2 —
+noise.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, nk: int,
+                   group: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (H, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (Bk, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    valid = valid_ref[0] > 0                            # (Bk,)
+
+    h, hd = q.shape
+    bk, hkv, _ = k.shape
+    qg = q.reshape(hkv, group, hd)
+    # (Hkv, G, Bk) scores
+    logits = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    logits = logits.reshape(h, bk)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    p = jnp.where(valid[None, :], jnp.exp(logits - m_cur[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    pg = p.reshape(hkv, group, bk)
+    pv = jax.lax.dot_general(
+        pg, v.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)             # (Hkv, G, hd)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(h, hd)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,                 # (B, H, hd) — the single new token
+    k_cache: jax.Array,           # (B, S, Hkv, hd)
+    v_cache: jax.Array,
+    length,                       # scalar: #valid cache positions
+    *,
+    window: Optional[int] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+
+    pos = jnp.arange(s, dtype=jnp.int32)
+    valid = pos < length
+    if window is not None:
+        valid = valid & (pos >= length - window)
+    valid = valid.astype(jnp.int8)[None].repeat(b, 0)   # (B, S)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, nk=nk,
+                               group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda b_, ik: (b_, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, hd), lambda b_, ik: (b_, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, hd), lambda b_, ik: (b_, ik, 0, 0)),
+            pl.BlockSpec((1, block_k), lambda b_, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda b_, ik: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, hd), jnp.float32),
+            pltpu.VMEM((h, 128), jnp.float32),
+            pltpu.VMEM((h, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid)

@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` resolution: "auto" uses the Pallas kernel on TPU backends and
+the XLA reference elsewhere; "pallas_interpret" forces the kernel body in
+interpret mode (the CPU validation path used by the tests); "xla" forces
+the reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .rglru_scan import rglru_scan_pallas
+from .wkv6 import wkv6_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, impl: str = "auto"):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.mha_reference(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(mode == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def decode_attention(q, k_cache, v_cache, length, *,
+                     window: Optional[int] = None, impl: str = "auto"):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.decode_attention_reference(q, k_cache, v_cache, length,
+                                              window=window)
+    return decode_attention_pallas(q, k_cache, v_cache, length,
+                                   window=window,
+                                   interpret=(mode == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv6(r, k, v, logw, u, s0, *, chunk: int = 64, impl: str = "auto"):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.wkv6_reference(r, k, v, logw, u, s0)
+    return wkv6_pallas(r, k, v, logw, u, s0, chunk=chunk,
+                       interpret=(mode == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def rglru_scan(a, b, h0, *, chunk: int = 256, impl: str = "auto"):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.rglru_scan_reference(a, b, h0)
+    return rglru_scan_pallas(a, b, h0, chunk=chunk,
+                             interpret=(mode == "pallas_interpret"))

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B, H, S, hd); k/v: (B, Hkv, S, hd) → (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi if causal else jnp.ones((s, s), bool)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)) \
+              .astype(q.dtype)
+
+
+def decode_attention_reference(q, k_cache, v_cache, length,
+                               window: Optional[int] = None) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, Hkv, hd) → (B, H, hd)."""
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    valid = pos < length
+    if window is not None:
+        valid = valid & (pos >= length - window)
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def wkv6_reference(r, k, v, logw, u, s0):
+    """Step-by-step WKV-6 recurrence (the gold oracle).
+    r/k/v/logw: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) fp32."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(s, args):
+        rt, kt, vt, wt = args                       # (B, H, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s) + \
+            jnp.sum(rt * u.astype(jnp.float32)[None] * kt, -1)[..., None] * vt
+        s_new = wt[..., None] * s + kt[..., None] * vt[:, :, None, :]
+        return s_new, y
+
+    args = jax.tree.map(lambda x: x.transpose(1, 0, 2, 3), (rf, kf, vf, w))
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), args)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_final
+
+
+def rglru_scan_reference(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t via associative scan.
+    a/b: (B, T, W); h0: (B, W) fp32 → (h (B,T,W), h_last fp32)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, rr):
+        al, bl = l
+        ar, br = rr
+        return ar * al, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype), h[:, -1].astype(jnp.float32)

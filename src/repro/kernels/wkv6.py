@@ -1,0 +1,113 @@
+"""RWKV-6 WKV recurrence — chunked Pallas TPU kernel.
+
+grid = (batch, heads, num_chunks); the chunk axis is sequential on TPU,
+so the (hd×hd) fp32 state lives in VMEM scratch across chunks.  Per
+chunk the kernel materializes only (C×C) score tiles and (C×hd) operand
+tiles in VMEM (C = 64, hd = 64 → ≤ 64 KB fp32 per tile), with every
+exponential bounded ≤ 0 (same formulation as the pure-jnp reference in
+``repro.models.rwkv6.wkv_chunked`` — see that docstring for the math).
+
+The XLA fallback materializes a (B,H,C,C,hd) decay tensor per chunk in
+HBM; here it never leaves VMEM — this is the kernel's bandwidth win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref,
+                s_ref, *, nt: int, chunk: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                 # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)               # log-decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)                    # (1?, hd) bonus
+
+    cum = jnp.cumsum(lw, axis=0)                        # (C, hd), ≤ 0
+    cum_prev = cum - lw
+    s = s_ref[...]
+
+    # inter-chunk: (r ⊙ e^{cum_prev}) · S_in
+    rdec = r * jnp.exp(cum_prev)
+    y = jax.lax.dot_general(rdec, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: att[t, s<t] = Σ_c r k e^{cum_{t-1} - cum_s}  (bounded)
+    c = r.shape[0]
+    # (C, C, hd) decay tensor lives only in VMEM/registers
+    diff = cum_prev[:, None, :] - cum[None, :, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    e = jnp.exp(jnp.where(tri[:, :, None], diff, -jnp.inf))
+    att = jnp.einsum("tc,sc,tsc->ts", r, k, e,
+                     preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # diagonal bonus
+    bonus = jnp.sum(r * u * k, axis=-1)
+    y = y + bonus[:, None] * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: all exponents ≤ 0
+    dec_all = jnp.exp(cum[-1:, :])                      # (1, hd)
+    k_dec = k * jnp.exp(cum[-1:, :] - cum)              # (C, hd)
+    s_ref[...] = dec_all.T * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(it == nt - 1)
+    def _emit():
+        sout_ref[0, 0] = s_ref[...]
+
+
+def wkv6_pallas(r, k, v, logw, u, s0, *, chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False):
+    """r/k/v/logw: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) fp32.
+    Returns (y (B,T,H,hd), s_final (B,H,hd,hd) fp32)."""
+    b, t, h, hd = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nt = t // chunk
+
+    # (B, H, T, hd) layout so the chunk axis tiles cleanly
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    r2, k2, v2, lw2 = tr(r), tr(k), tr(v), tr(logw)
+
+    kernel = functools.partial(_wkv_kernel, nt=nt, chunk=chunk)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(b, h, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, hd), lambda b_, h_, it: (h_, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, it: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b_, h_, it: (b_, h_, it, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, it: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, hd), r.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r2, k2, v2, lw2, u, s0)
+    return y.transpose(0, 2, 1, 3), s_final

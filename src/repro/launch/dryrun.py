@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+# production meshes, record memory/cost/collective artifacts.
+#
+# Run as:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--probes]
+#
+# The XLA_FLAGS assignment above MUST precede any jax import (device count
+# locks at first backend init); this module is the only place it is set —
+# tests and benchmarks see the real single CPU device.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from dataclasses import replace
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.registry import SHAPES, all_cells, get_config
+from repro.launch.input_specs import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import parse_collectives
+from repro.roofline.tiers import tier_of
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def _collectives_with_tiers(hlo_text: str, devices_per_pod: int) -> Dict:
+    stats = parse_collectives(hlo_text)
+    # re-walk lines for tier attribution
+    tier_bytes = {"ici": 0, "dcn": 0, "ici?": 0}
+    from repro.roofline.analysis import COLLECTIVE_OPS, _INSTR_RE, _shape_bytes
+    symbols: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        symbols[name] = type_str
+        base = opcode.rstrip(".0123456789")
+        for cop in COLLECTIVE_OPS:
+            if base == cop or base == cop + "-start":
+                tier = tier_of(line, devices_per_pod)
+                tier_bytes[tier] = tier_bytes.get(tier, 0) + _shape_bytes(type_str)
+                break
+    return {
+        "bytes_by_op": stats.bytes_by_op,
+        "count_by_op": stats.count_by_op,
+        "total_bytes": stats.total_bytes,
+        "tier_bytes": tier_bytes,
+    }
+
+
+def lower_and_compile(cell, mesh):
+    # donate the mutable aggregate (train state / decode cache) so XLA
+    # aliases it in place instead of double-buffering it
+    donate = (0,) if cell.kind == "train" else \
+             ((1,) if cell.kind == "decode" else (2,))
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=donate)
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, probes: bool = True,
+             tag: str = "", cfg_override=None, microbatches: int = 1,
+             verbose: bool = True) -> Dict:
+    """Compile one cell; optionally run the 1/2-unit unrolled probes for
+    per-layer cost extrapolation. Returns the artifact dict."""
+    t0 = time.time()
+    devices_per_pod = 256 if "pod" in mesh.axis_names else \
+        int(jax.numpy.prod(jax.numpy.array(list(mesh.shape.values()))))
+    cell = build_cell(arch, shape_name, mesh, cfg_override=cfg_override,
+                      microbatches=microbatches)
+    lowered, compiled = lower_and_compile(cell, mesh)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = _collectives_with_tiers(hlo, devices_per_pod)
+
+    art: Dict = {
+        "arch": arch, "shape": shape_name, "tag": tag,
+        "mesh": dict(mesh.shape),
+        "chips": int(mesh.devices.size),
+        "kind": cell.kind,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": _mem_dict(mem),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives_scanned_once": coll,
+    }
+
+    if probes:
+        art["probes"] = run_probes(arch, shape_name, mesh, devices_per_pod,
+                                   cfg_override=cfg_override)
+
+    if verbose:
+        mb = art["memory_analysis"].get("bytes_per_device")
+        print(f"[dryrun] {arch} × {shape_name} × {tuple(mesh.shape.values())}"
+              f" OK compile={art['compile_s']}s"
+              f" mem/dev={mb/1e9:.2f}GB" if mb else
+              f"[dryrun] {arch} × {shape_name} OK")
+    return art
+
+
+def _mem_dict(mem) -> Dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    args = out.get("argument_size_in_bytes", 0)
+    temp = out.get("temp_size_in_bytes", 0)
+    outb = out.get("output_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["bytes_per_device"] = args + temp + outb - alias
+    return out
+
+
+def probe_config(cfg, n_units: int):
+    """Unrolled probe config: n_units pattern-periods deep.  Remat is kept
+    as in the full config so the probes' FLOPs include the recompute."""
+    period = len(cfg.block_pattern) if cfg.family != "rwkv6" else 1
+    return replace(cfg, n_layers=period * n_units)
+
+
+def run_probes(arch: str, shape_name: str, mesh, devices_per_pod: int,
+               cfg_override=None) -> Dict:
+    """Two unrolled compiles (1 and 2 units) → per-layer-exact costs."""
+    base = cfg_override or get_config(arch)
+    out: Dict = {}
+    for n_units in (1, 2):
+        pcfg = probe_config(base, n_units)
+        # unrolled path so cost_analysis counts every layer
+        cell = build_cell(arch, shape_name, mesh, cfg_override=pcfg,
+                          unroll=True)
+        lowered, compiled = lower_and_compile(cell, mesh)
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = _collectives_with_tiers(hlo, devices_per_pod)
+        out[f"probe{n_units}"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": float(coll["total_bytes"]),
+            "ici_bytes": float(coll["tier_bytes"].get("ici", 0)
+                               + coll["tier_bytes"].get("ici?", 0)),
+            "dcn_bytes": float(coll["tier_bytes"].get("dcn", 0)),
+        }
+    period = len(base.block_pattern) if base.family != "rwkv6" else 1
+    out["units_full"] = base.n_layers / period
+    return out
+
+
+def artifact_path(arch: str, shape_name: str, multi_pod: bool, tag: str = "") -> Path:
+    sub = "multipod" if multi_pod else "singlepod"
+    name = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "") + ".json"
+    return ARTIFACT_DIR / sub / name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in all_cells() if ok]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        path = artifact_path(arch, shape_name, args.multi_pod, args.tag)
+        if path.exists() and not args.force:
+            print(f"[dryrun] skip cached {path.name}")
+            continue
+        try:
+            art = run_cell(arch, shape_name, mesh,
+                           probes=not args.no_probes, tag=args.tag)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(art, indent=1))
+        except Exception as e:  # noqa: BLE001 - record and continue
+            traceback.print_exc()
+            failures.append((arch, shape_name, repr(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

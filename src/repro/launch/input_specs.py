@@ -1,0 +1,182 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+No device memory is ever allocated here: parameters, optimizer state,
+caches and batches are all abstract (``jax.eval_shape`` over the real
+init functions), and shardings come from the same logical-axis rules the
+model uses, so the dry-run lowers exactly the production program.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.models.config import ModelConfig
+from repro.models.model import LM, decode_step
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    f32, i32 = jnp.float32, jnp.int32
+    if cfg.frontend == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+    if cfg.frontend == "vision":
+        p = min(cfg.frontend_prefix, max(0, seq - 8))
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq - p), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq - p), i32),
+            "patches": jax.ShapeDtypeStruct((batch, p, cfg.d_model), jnp.bfloat16),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+
+
+def batch_spec_tree(batch_abs, mesh: Mesh) -> Dict[str, P]:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    out = {}
+    for k, v in batch_abs.items():
+        if v.shape and size > 1 and v.shape[0] % size == 0:
+            out[k] = P(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            out[k] = P()
+    return out
+
+
+def _logits_spec(batch: int, vocab: int, mesh: Mesh) -> P:
+    """(B, S, V) logits: batch over (pod, data) if divisible, vocab over
+    model — never replicate a 32k×vocab tensor."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    bspec = (tuple(axes) if len(axes) > 1 else axes[0]) \
+        if size > 1 and batch % size == 0 else None
+    vspec = "model" if "model" in mesh.axis_names and \
+        vocab % mesh.shape["model"] == 0 else None
+    return P(bspec, None, vspec)
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh):
+    """The assignment-contract entry point: ShapeDtypeStruct stand-ins for
+    every input of the cell's step function (no device allocation)."""
+    return build_cell(arch, shape_name, mesh).args
+
+
+@dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    lm: LM
+    fn: Callable                      # the step function to jit
+    args: Tuple                       # abstract args
+    in_shardings: Tuple
+    out_shardings: Any
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+def _shardings_of(tree_specs_, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs_,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               cfg_override: Optional[ModelConfig] = None,
+               microbatches: int = 1,
+               unroll: bool = False) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch)
+    lm = LM(cfg, mesh=mesh)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        step = make_train_step(lm, opt_cfg, microbatches=microbatches,
+                               unroll=unroll)
+        params_abs = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+        state_abs = {"params": params_abs,
+                     "opt": jax.eval_shape(adamw.init_state, params_abs)}
+        batch_abs = batch_structs(cfg, shape.global_batch, shape.seq_len)
+
+        pspecs = lm.param_specs(mesh)
+        sspecs = {"params": pspecs,
+                  "opt": adamw.state_specs(lm.param_defs(), mesh)}
+        bspecs = batch_spec_tree(batch_abs, mesh)
+        state_sh = _shardings_of(sspecs, mesh)
+        batch_sh = _shardings_of(bspecs, mesh)
+        metric_sh = NamedSharding(mesh, P())
+        return Cell(arch, shape, cfg, lm, step,
+                    (state_abs, batch_abs),
+                    (state_sh, batch_sh),
+                    (state_sh, metric_sh), "train")
+
+    # serving shapes: decode (1 new token over a seq_len cache) or prefill
+    params_abs = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    pspecs = lm.param_specs(mesh)
+    params_sh = _shardings_of(pspecs, mesh)
+
+    if shape.kind == "decode":
+        b = shape.global_batch
+        cache_abs = jax.eval_shape(
+            functools.partial(lm.init_cache, b, shape.seq_len))
+        cspecs = lm.cache_specs(mesh, b, shape.seq_len)
+        cache_sh = _shardings_of(cspecs, mesh)
+        if cfg.frontend == "audio":
+            tok_abs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+        tsize = int(np.prod([mesh.shape[a] for a in tok_axes])) if tok_axes else 1
+        tok_spec = P(tuple(tok_axes) if len(tok_axes) > 1 else (tok_axes[0] if tok_axes else None)) \
+            if b % max(tsize, 1) == 0 and tsize > 1 else P()
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, tokens, pos):
+            logits, new_cache = decode_step(lm, params, cache, tokens, pos,
+                                            unroll=unroll)
+            return logits, new_cache
+
+        logits_sh = NamedSharding(
+            mesh, _logits_spec(b, cfg.vocab, mesh))
+        return Cell(arch, shape, cfg, lm, serve_step,
+                    (params_abs, cache_abs, tok_abs, pos_abs),
+                    (params_sh, cache_sh, NamedSharding(mesh, tok_spec),
+                     NamedSharding(mesh, P())),
+                    (logits_sh, cache_sh), "decode")
+
+    # prefill: full-sequence forward producing the cache
+    b = shape.global_batch
+    cache_abs = jax.eval_shape(
+        functools.partial(lm.init_cache, b, shape.seq_len))
+    cspecs = lm.cache_specs(mesh, b, shape.seq_len)
+    cache_sh = _shardings_of(cspecs, mesh)
+    batch_abs = batch_structs(cfg, b, shape.seq_len)
+    batch_abs.pop("labels", None)
+    bspecs = batch_spec_tree(batch_abs, mesh)
+    batch_sh = _shardings_of(bspecs, mesh)
+
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, batch, cache, unroll=unroll)
+
+    logits_sh = NamedSharding(mesh, _logits_spec(b, cfg.vocab, mesh))
+    return Cell(arch, shape, cfg, lm, prefill_step,
+                (params_abs, batch_abs, cache_abs),
+                (params_sh, batch_sh, cache_sh),
+                (logits_sh, cache_sh), "prefill")

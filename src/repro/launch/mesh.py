@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as functions (importing this module never touches jax device
+state).  The single-pod mesh is a 16×16 = 256-chip TPU v5e pod with
+("data", "model") axes; the multi-pod mesh adds a leading "pod" axis
+(2×16×16 = 512 chips) that crosses DCN — the tier where the Snow
+collectives operate.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """Small mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s per link
+DCN_BW_PER_HOST = 25e9           # B/s assumed for the pod axis (DCN tier)

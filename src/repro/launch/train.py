@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs the reduced (smoke) configuration of the
+selected architecture end-to-end (real data pipeline → jitted train step
+→ async checkpointing → elastic membership controller).  On TPU hardware
+the same entry point takes ``--full`` and the production mesh; the
+dry-run (``repro.launch.dryrun``) is the no-hardware proof of that path.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import LM
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.elastic import ElasticController
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (TPU-scale; "
+                         "on CPU use the default reduced config)")
+    ap.add_argument("--hosts", type=int, default=8,
+                    help="simulated membership-controller hosts")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    lm = LM(cfg)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s)")
+
+    controller = ElasticController(args.hosts)
+    controller.advance(1.0)
+    print(f"[train] membership: {len(controller.active_hosts())} hosts, "
+          f"plan={controller.plan()}")
+
+    opt = adamw.AdamWConfig(
+        lr=args.lr, schedule=warmup_cosine(args.lr, min(20, args.steps // 5 + 1),
+                                           args.steps))
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=max(10, args.steps // 4),
+                         log_every=max(1, args.steps // 10),
+                         batch_size=args.batch_size, seq_len=args.seq_len,
+                         checkpoint_dir=f"{args.ckpt}/{args.arch}")
+    out = Trainer(lm, opt, tcfg, controller=controller).run()
+    print(f"[train] loss {out['first_loss']:.4f} -> {out['final_loss']:.4f} "
+          f"over {out['steps']} steps in {out['wall_s']:.0f}s "
+          f"(straggler policy: {controller.collective_policy()})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""GQA attention: full-causal, sliding-window, chunked (memory-lean), and
+single-token decode against a KV cache.
+
+The XLA paths here are the reference/dry-run implementations; the Pallas
+flash kernels in ``repro.kernels`` replace the inner softmax(QKᵀ)V on real
+TPU (``cfg.attn_impl``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, norm_def, rmsnorm
+from .shardings import ParamDef, constrain
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, q, kv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+        "norm": norm_def(d),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((cfg.n_heads, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = norm_def(hd)
+        defs["k_norm"] = norm_def(hd)
+    return defs
+
+
+def _project_qkv(cfg: ModelConfig, p, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def _sdpa_full(q, k, v, *, causal: bool, window: Optional[int]) -> jax.Array:
+    """softmax(QKᵀ/√d)·V with optional causal/sliding-window mask."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal or window:
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        mask = ki <= qi if causal else jnp.ones((sq, sk), bool)
+        if window:
+            mask = mask & (ki > qi - window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: Optional[int],
+                  chunk: int = 1024) -> jax.Array:
+    """Blockwise online-softmax attention (flash-style in pure JAX):
+    O(S·chunk) live logits instead of O(S²) — the dry-run memory lever."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, sq)
+    n_chunks = (sq + chunk - 1) // chunk
+    pad = n_chunks * chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    ki_all = jnp.arange(sk)
+
+    def one_chunk(ci, qb):
+        qi = ci * chunk + jnp.arange(chunk)[:, None] + (sk - sq)
+        mask = ki_all[None, :] <= qi if causal else jnp.ones((chunk, sk), bool)
+        if window:
+            mask = mask & (ki_all[None, :] > qi - window)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qb, k).astype(jnp.float32) * scale
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(qb.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), qc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h, hd)
+    return out[:, :sq] if pad else out
+
+
+def _sdpa_decode(q, k_cache, v_cache, length: jax.Array,
+                 window: Optional[int] = None) -> jax.Array:
+    """One-token attention over a cache: q (B,1,H,hd), cache (B,S,Hkv,hd).
+
+    ``length`` = number of valid cache positions (the new token's k/v must
+    already be written at ``length-1``).
+    """
+    b, smax, hkv, hd = k_cache.shape
+    h = q.shape[2]
+    n_rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qh = q[:, 0].reshape(b, hkv, n_rep, hd)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qh, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(smax)
+    valid = pos < length
+    if window is not None:
+        valid = valid & (pos >= length - window)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,
+    *,
+    mode: str,                    # "train" | "prefill" | "decode"
+    cache: Optional[Dict[str, jax.Array]] = None,
+    pos: Optional[jax.Array] = None,   # decode: current position (scalar)
+    window: Optional[int] = None,
+    mesh=None,
+    rules=None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Pre-norm attention block. Returns (residual output, new cache)."""
+    b, s, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, p, h)
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q = constrain(q, mesh, rules, "batch", None, "heads", None)
+        kr = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        vr = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        if cfg.attn_impl == "xla_chunked":
+            out = _sdpa_chunked(q, kr, vr, causal=True, window=window)
+        else:
+            out = _sdpa_full(q, kr, vr, causal=True, window=window)
+        new_cache = None
+        if mode == "prefill":
+            smax = cache["k"].shape[1] if cache is not None else s
+            if smax < s:
+                # ring-buffer (window) cache: keep the last `smax` tokens,
+                # rolled so token p sits at slot p % smax for decode
+                shift = s % smax
+                new_cache = {
+                    "k": jnp.roll(k[:, s - smax:], shift, axis=1),
+                    "v": jnp.roll(v[:, s - smax:], shift, axis=1),
+                }
+            else:
+                kpad = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+                vpad = jnp.zeros_like(kpad)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(kpad, k, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(vpad, v, (0, 0, 0, 0)),
+                }
+    elif mode == "decode":
+        assert cache is not None and pos is not None
+        positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if window is not None and cache["k"].shape[1] == window:
+            slot = pos % window                        # ring buffer
+        else:
+            slot = pos
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                               (0, slot, 0, 0))
+        ring = window is not None and cache["k"].shape[1] == window
+        if ring:
+            # ring buffer: all slots valid once pos >= window
+            length = jnp.minimum(pos + 1, window)
+            out = _sdpa_decode(q, k_cache, v_cache, length=length, window=None)
+        else:
+            out = _sdpa_decode(q, k_cache, v_cache, length=pos + 1, window=window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        raise ValueError(mode)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    out = constrain(out, mesh, rules, "batch", None, "embed")
+    return x + out, new_cache

@@ -1,0 +1,166 @@
+"""Model configuration for the unified decoder-LM stack.
+
+One ``ModelConfig`` drives every assigned architecture: dense GQA
+transformers (Qwen/CodeQwen/InternLM2 backbones), MoE (Kimi-K2, Granite),
+RWKV-6, and Griffin-style hybrids (RecurrentGemma).  See
+``repro/configs/*.py`` for the per-architecture instances.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                     # per-expert hidden width
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # "transformer" | "rwkv6" | "griffin"
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    n_heads: int = 0              # attention heads (0 for attention-free)
+    n_kv_heads: int = 0
+    head_dim: int = 128
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    mlp: str = "swiglu"           # "swiglu" | "gelu"
+    moe: Optional[MoEConfig] = None
+    # Block pattern, cycled over layers. Entries: "attn", "local_attn",
+    # "rglru".  ("attn",) for plain transformers.
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 2048            # sliding-window size for "local_attn"
+    frontend: str = "none"        # "none" | "audio" | "vision" (stubbed)
+    frontend_prefix: int = 0      # #prefix embedding positions fed by the stub
+    norm_eps: float = 1e-6
+    # rwkv6
+    rwkv_head_size: int = 64
+    # griffin / RG-LRU
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # training / numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    tie_embeddings: bool = False
+    # distribution
+    fsdp_params: bool = False     # additionally shard params over the data axis (ZeRO-3)
+    seq_sharding: bool = False    # shard the residual stream's seq dim over
+                                  # the model axis between blocks (Megatron-SP
+                                  # style); §Perf hillclimb lever
+    expert_partition: str = "model"  # "model" (EP over TP axis) | "data"
+                                     # (EP over DP axis) | "replicate" |
+                                     # "model_x_data" (E→model, ff→data;
+                                     # required by moe_impl="shard_map")
+    moe_impl: str = "gspmd"          # "gspmd" | "shard_map" (explicit EP:
+                                     # local dispatch on model-replicated
+                                     # tokens, weight AG over data, one
+                                     # bf16 psum combine); §Perf lever
+    pure_dp: bool = False            # replicate all weights, batch over the
+                                     # whole mesh, ZeRO-1 moments sharded —
+                                     # for archs whose dims don't divide the
+                                     # TP axis (granite: 24H/40E vs 16);
+                                     # §Perf hillclimb lever
+    # attention implementation: "auto" picks pallas on TPU, xla elsewhere
+    attn_impl: str = "auto"       # "auto" | "xla" | "xla_chunked" | "pallas"
+
+    # ------------------------------------------------------------------ #
+    def block_kinds(self) -> Tuple[str, ...]:
+        """The per-layer block kind, pattern cycled to n_layers."""
+        if self.family == "rwkv6":
+            return ("rwkv6",) * self.n_layers
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_size
+
+    # -- parameter & FLOP accounting (roofline MODEL_FLOPS) -------------- #
+    def param_count(self) -> int:
+        """Exact parameter count — derived from the real ParamDef tree so
+        it can never drift from the implementation."""
+        import math as _math
+
+        from .layers import embed_defs          # lazy: avoids import cycle
+        from .shardings import ParamDef
+        from .transformer import stack_param_defs
+
+        import jax
+        defs = {"embed": embed_defs(self), **stack_param_defs(self)}
+        leaves = jax.tree.leaves(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        return sum(_math.prod(d.shape) for d in leaves)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        moe_total = self.n_layers * self.moe.num_experts * 3 * self.d_model * self.moe.d_ff
+        moe_active = self.n_layers * self.moe.top_k * 3 * self.d_model * self.moe.d_ff
+        return full - moe_total + moe_active
+
+    def model_flops(self, tokens: int, *, training: bool = True,
+                    include_attention: bool = True, seq_len: int = 0,
+                    decode: bool = False) -> float:
+        """6·N_active·D (+ attention quadratic term when requested)."""
+        mult = 6 if training else 2
+        flops = mult * self.active_param_count() * tokens
+        if include_attention and self.n_heads and seq_len:
+            attn_layers = sum(1 for kk in self.block_kinds() if kk in ("attn", "local_attn"))
+            # per token: 2 · ctx · q_dim MACs each for QKᵀ and PV; causal
+            # training/prefill sees ctx/2 on average, decode attends the
+            # full cache
+            ctx = seq_len if decode else seq_len / 2
+            flops += mult * attn_layers * tokens * 2 * ctx * self.q_dim
+        return float(flops)
+
+
+def reduced_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests: few layers, small
+    width/vocab/experts, same block structure."""
+    pat_period = len(cfg.block_pattern)
+    n_layers = max(pat_period, 2 if cfg.family != "griffin" else 3)
+    moe = None
+    if cfg.moe is not None:
+        # capacity_factor high enough that no token is ever dropped, so
+        # decode-vs-train consistency is exact (capacity dropping is
+        # batch-size-dependent by design)
+        moe = MoEConfig(num_experts=4, top_k=2, d_ff=64, capacity_factor=8.0)
+    return replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        d_ff=128,
+        vocab=256,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        window=16,
+        moe=moe,
+        lru_width=64 if cfg.lru_width else None,
+        rwkv_head_size=16,
+        frontend_prefix=4 if cfg.frontend != "none" else 0,
+        dtype="float32",
+        remat=False,
+        fsdp_params=False,
+    )

@@ -1,0 +1,103 @@
+"""Shared layers: RMSNorm, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .shardings import ParamDef, constrain
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def norm_def(dim: int) -> ParamDef:
+    return ParamDef((dim,), (None,), init="ones")
+
+
+# ----------------------------------------------------------------------- #
+# RoPE                                                                    #
+# ----------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                     # (..., S, 1, hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# MLPs                                                                    #
+# ----------------------------------------------------------------------- #
+def mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "d_ff")),
+            "w_up": ParamDef((d, f), ("embed", "d_ff")),
+            "w_down": ParamDef((f, d), ("d_ff", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("embed", "d_ff")),
+        "w_down": ParamDef((f, d), ("d_ff", "embed")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x: jax.Array, mesh, rules) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constrain(h, mesh, rules, "batch", None, "d_ff")
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------- #
+# Embedding / LM head                                                     #
+# ----------------------------------------------------------------------- #
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    defs = {
+        "tok": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                        init="embed", scale=1.0),
+        "final_norm": norm_def(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return defs
+
+
+def embed_tokens(p, tokens: jax.Array, dtype) -> jax.Array:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def lm_head(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return x @ w.astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL computed in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

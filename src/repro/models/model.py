@@ -1,0 +1,144 @@
+"""The language-model wrapper: init / train forward / loss / prefill /
+decode, with frontend stubs for the audio and vision architectures."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .config import ModelConfig
+from .layers import (cross_entropy, embed_defs, embed_tokens, lm_head,
+                     rmsnorm)
+from .shardings import (LogicalRules, ParamDef, constrain, init_tree,
+                        rules_for, tree_shardings, tree_specs)
+from .transformer import apply_stack, stack_cache_defs, stack_param_defs
+
+AUX_LOSS_COEF = 0.01
+
+
+@dataclass
+class LM:
+    cfg: ModelConfig
+    mesh: Optional[Mesh] = None
+
+    def __post_init__(self):
+        self.rules: LogicalRules = rules_for(self.cfg.fsdp_params)
+        ep = self.cfg.expert_partition
+        if ep == "data":
+            # EP over the DP axis: expert weights live whole on their
+            # owners (no FSDP all-gather); tokens all-to-all to experts
+            self.rules["expert"] = ("data",)
+            self.rules["expert_ff"] = ("model",)
+        elif ep == "replicate":
+            self.rules["expert"] = ()
+            self.rules["expert_ff"] = ()
+        elif ep == "model_x_data":
+            # fully-sharded expert weights: E over TP, ff over DP — the
+            # layout the shard_map EP implementation works in
+            self.rules["expert"] = ("model",)
+            self.rules["expert_ff"] = ("data",)
+        if self.cfg.pure_dp:
+            # batch across the whole mesh; weights replicated (ZeRO-1
+            # moments still shard over every device)
+            for ax in ("heads", "kv_heads", "d_ff", "expert", "expert_ff",
+                       "vocab", "lru", "cache_seq", "seq_act"):
+                self.rules[ax] = ()
+            self.rules["batch"] = ("pod", "data", "model")
+
+    # -- parameters ------------------------------------------------------- #
+    def param_defs(self) -> Dict[str, Any]:
+        return {"embed": embed_defs(self.cfg), **stack_param_defs(self.cfg)}
+
+    def init(self, key: jax.Array):
+        return init_tree(key, self.param_defs(), self.cfg.dtype)
+
+    def param_specs(self, mesh: Mesh):
+        return tree_specs(self.param_defs(), mesh, self.rules)
+
+    def param_shardings(self, mesh: Mesh):
+        return tree_shardings(self.param_defs(), mesh, self.rules)
+
+    # -- cache ------------------------------------------------------------- #
+    def cache_defs(self, batch: int, s_max: int) -> Dict[str, Any]:
+        return stack_cache_defs(self.cfg, batch, s_max)
+
+    def init_cache(self, batch: int, s_max: int):
+        return init_tree(jax.random.PRNGKey(0),
+                         self.cache_defs(batch, s_max), self.cfg.dtype)
+
+    def cache_specs(self, mesh: Mesh, batch: int, s_max: int):
+        return tree_specs(self.cache_defs(batch, s_max), mesh, self.rules)
+
+    # -- embedding of (tokens, frontend stub inputs) ----------------------- #
+    def _inputs_to_x(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        dtype = jnp.dtype(self.cfg.dtype)
+        fe = self.cfg.frontend
+        if fe == "audio":
+            # precomputed EnCodec frame embeddings are the whole sequence
+            return batch["frames"].astype(dtype)
+        toks = batch["tokens"]
+        x = embed_tokens(params["embed"], toks, dtype)
+        if fe == "vision" and "patches" in batch:
+            # precomputed InternViT patch embeddings prefix the text
+            # (absent during decode: the prefix already lives in the cache)
+            x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+        return x
+
+    # -- forward ------------------------------------------------------------ #
+    def forward(self, params, batch: Dict[str, jax.Array], *,
+                mode: str = "train", cache=None, pos=None,
+                unroll: bool = False):
+        cfg = self.cfg
+        x = self._inputs_to_x(params, batch)
+        x = constrain(x, self.mesh, self.rules, "batch", None, "embed")
+        x, new_cache, aux = apply_stack(cfg, params, x, mode=mode,
+                                        cache=cache, pos=pos, mesh=self.mesh,
+                                        rules=self.rules, unroll=unroll)
+        x = rmsnorm(x, params["embed"]["final_norm"], cfg.norm_eps)
+        logits = lm_head(cfg, params["embed"], x)
+        logits = constrain(logits, self.mesh, self.rules, "batch", None, "vocab")
+        return logits, new_cache, aux
+
+    # -- training loss ------------------------------------------------------ #
+    def loss_fn(self, params, batch: Dict[str, jax.Array], *,
+                unroll: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, _, aux = self.forward(params, batch, mode="train",
+                                      unroll=unroll)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        if self.cfg.frontend == "vision" and labels.shape[1] != logits.shape[1]:
+            # labels cover the text positions; prefix positions are masked
+            pad = logits.shape[1] - labels.shape[1]
+            labels = jnp.pad(labels, ((0, 0), (pad, 0)))
+            m = jnp.zeros(labels.shape, jnp.float32).at[:, pad:].set(1.0)
+            mask = m if mask is None else m * jnp.pad(mask, ((0, 0), (pad, 0)))
+        nll = cross_entropy(logits, labels, mask)
+        loss = nll + AUX_LOSS_COEF * aux
+        return loss, {"nll": nll, "aux": aux}
+
+    # -- serving -------------------------------------------------------------- #
+    def prefill(self, params, batch: Dict[str, jax.Array], cache,
+                *, unroll: bool = False):
+        """Full-sequence forward that fills the decode cache."""
+        logits, new_cache, _ = self.forward(params, batch, mode="prefill",
+                                            cache=cache, unroll=unroll)
+        return logits, new_cache
+
+def decode_step(lm: LM, params, cache, tokens: jax.Array, pos: jax.Array,
+                *, unroll: bool = False):
+    """One decode step against a cache. tokens (B,1) ids, or (B,1,d_model)
+    frame embeddings for the audio frontend; pos scalar int32."""
+    if lm.cfg.frontend == "audio":
+        batch = {"frames": tokens}
+    else:
+        batch = {"tokens": tokens}
+    logits, new_cache, _ = lm.forward(params, batch, mode="decode",
+                                      cache=cache, pos=pos, unroll=unroll)
+    return logits, new_cache
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)

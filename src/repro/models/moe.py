@@ -1,0 +1,229 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Dispatch is sort-based (argsort by expert id → rank-in-expert → scatter
+into an (E, C) buffer), so expert FLOPs are proportional to the *active*
+token slots (tokens × top_k × capacity_factor), not to the number of
+experts — this keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest
+for Kimi-K2's 384 experts where one-hot dispatch would inflate compute
+48×.
+
+Experts shard over the ``model`` mesh axis (EP) when the expert count
+divides it (Kimi: 384/16 = 24 experts per chip); otherwise the per-expert
+``d_ff`` takes the model axis (Granite: 40 experts → shard ff=512).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import norm_def, rmsnorm
+from .shardings import ParamDef, constrain
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    assert cfg.moe is not None
+    d, e, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_ff
+    return {
+        "router": ParamDef((d, e), ("embed", "expert"), init="small"),
+        "w_gate": ParamDef((e, d, f), ("expert", "embed", "expert_ff"),
+                           init="fan_in"),
+        "w_up": ParamDef((e, d, f), ("expert", "embed", "expert_ff"),
+                         init="fan_in"),
+        "w_down": ParamDef((e, f, d), ("expert", "expert_ff", "embed"),
+                           init="fan_in"),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(group_tokens * m.top_k * m.capacity_factor
+                        / m.num_experts))
+    return max(4, ((cap + 3) // 4) * 4)   # pad for TPU-friendly layout
+
+
+def _group_dispatch(cfg: ModelConfig, p, xf: jax.Array, cap: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Route one group's tokens. xf: (Tg, d) → (out (Tg, d), aux)."""
+    m = cfg.moe
+    t, d = xf.shape
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)  # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)               # (Tg, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style), per group
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((m.num_experts,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0)
+    ce = ce / (t * m.top_k)
+    aux = m.num_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch (local to the group) ----------------------- #
+    flat_expert = gate_idx.reshape(-1)                                # (Tg*K,)
+    flat_token = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                                  # stable
+    se, st_tok, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    counts = jnp.bincount(se, length=m.num_experts)
+    offsets = jnp.cumsum(counts) - counts                             # exclusive
+    rank = jnp.arange(t * m.top_k) - offsets[se]
+    keep = rank < cap
+
+    slot = se * cap + jnp.where(keep, rank, 0)                        # (Tg*K,)
+    disp = jnp.zeros((m.num_experts * cap, d), xf.dtype)
+    disp = disp.at[jnp.where(keep, slot, m.num_experts * cap - 1)].add(
+        jnp.where(keep[:, None], xf[st_tok], 0))
+    return disp.reshape(m.num_experts, cap, d), (slot, st_tok, sg, keep, aux)
+
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array, mesh, rules
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out, aux_loss).
+
+    GShard-style grouped routing: each batch row is a routing group with
+    its own capacity, so the argsort/scatter dispatch is *local* to the
+    group (no global sort → no cross-device resharding; groups ride the
+    batch sharding).  Expert FFNs run once over the (G, E, C, d) dispatch
+    tensor with experts on the model axis (EP)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    cap = moe_capacity(cfg, s)
+
+    disp, (slot, st_tok, sg, keep, aux) = jax.vmap(
+        lambda xg: _group_dispatch(cfg, p, xg, cap))(x)
+    disp = constrain(disp, mesh, rules, "batch", "expert", None, "embed")
+
+    # ---- expert FFN (SwiGLU) over (G, E, C, d) -------------------------- #
+    hg = jnp.einsum("gecd,edf->gecf", disp, p["w_gate"].astype(x.dtype))
+    hu = jnp.einsum("gecd,edf->gecf", disp, p["w_up"].astype(x.dtype))
+    hh = jax.nn.silu(hg) * hu
+    hh = constrain(hh, mesh, rules, "batch", "expert", None, "expert_ff")
+    eo = jnp.einsum("gecf,efd->gecd", hh, p["w_down"].astype(x.dtype))
+    eo = constrain(eo, mesh, rules, "batch", "expert", None, "embed")
+
+    # ---- combine (local per group) -------------------------------------- #
+    def combine(eo_g, slot_g, tok_g, sg_g, keep_g):
+        flat = eo_g.reshape(m.num_experts * cap, d)
+        gathered = flat[slot_g] * (sg_g * keep_g)[:, None].astype(x.dtype)
+        return jnp.zeros((s, d), x.dtype).at[tok_g].add(gathered)
+
+    out = jax.vmap(combine)(eo, slot, st_tok, sg, keep)
+    return out, jnp.mean(aux)
+
+
+def moe_block(cfg: ModelConfig, p, x: jax.Array, mesh, rules
+              ) -> Tuple[jax.Array, jax.Array]:
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    out, aux = moe_apply(cfg, p, h, mesh, rules)
+    return x + out, aux
+
+
+# --------------------------------------------------------------------- #
+# Explicit-EP implementation (shard_map)                                 #
+# --------------------------------------------------------------------- #
+def _local_group_dispatch(cfg: ModelConfig, router, xf: jax.Array,
+                          e0, e_loc: int, cap: int):
+    """Dispatch one group's tokens to the *local* expert range
+    [e0, e0+e_loc). Returns (disp (E_loc, C, d), slot, tok, gate, keep, aux)."""
+    m = cfg.moe
+    t, d = xf.shape
+    logits = (xf @ router.astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((m.num_experts,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0)
+    aux = m.num_experts * jnp.sum(me * ce / (t * m.top_k))
+
+    flat_expert = gate_idx.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, st_tok, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    counts = jnp.bincount(se, length=m.num_experts)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * m.top_k) - offsets[se]
+    local = (se >= e0) & (se < e0 + e_loc)
+    keep = local & (rank < cap)
+
+    slot = (se - e0) * cap + jnp.where(keep, rank, 0)
+    disp = jnp.zeros((e_loc * cap, d), xf.dtype)
+    disp = disp.at[jnp.where(keep, slot, e_loc * cap - 1)].add(
+        jnp.where(keep[:, None], xf[st_tok], 0))
+    return disp.reshape(e_loc, cap, d), slot, st_tok, sg, keep, aux
+
+
+def moe_apply_shard_map(cfg: ModelConfig, p, x: jax.Array, mesh, rules
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Explicit expert parallelism under shard_map.
+
+    Tokens are replicated across the ``model`` axis (their natural GSPMD
+    layout between TP blocks), so dispatch is *local*: each model rank
+    routes every token but materializes dispatch buffers only for its own
+    E/TP experts.  Expert weights live fully sharded (E→model, ff→data)
+    and are all-gathered over ``data`` for the layer (ZeRO-3 style; the
+    gather transposes to a grad reduce-scatter under AD).  The only
+    token-wise collective is ONE bf16 psum of the (B,S,d) combined output
+    per layer — versus GSPMD's pessimistic pair of (T·topk, d) all-
+    reduces measured in the baseline (§Perf, kimi-k2 iteration log).
+    """
+    import functools
+
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    assert mesh is not None, "shard_map MoE needs a mesh"
+    model_n = mesh.shape.get("model", 1)
+    assert m.num_experts % model_n == 0, (m.num_experts, model_n)
+    e_loc = m.num_experts // model_n
+    b, s, d = x.shape
+    cap = moe_capacity(cfg, s)
+    bt = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bt_spec = bt if len(bt) > 1 else (bt[0] if bt else None)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(bt_spec, None, None),          # x: batch-sharded, model-replicated
+                  P(),                              # router replicated
+                  P("model", None, data_axes),      # w_gate (E, d, f)
+                  P("model", None, data_axes),      # w_up
+                  P("model", data_axes, None)),     # w_down (E, f, d)
+        out_specs=(P(bt_spec, None, None), P()),
+        check_vma=False)
+    def run(x_loc, router, wg, wu, wd):
+        e0 = jax.lax.axis_index("model") * e_loc
+        # gather the local experts' full-ff weights (ZeRO-3 pattern)
+        wg_f = jax.lax.all_gather(wg, data_axes, axis=2, tiled=True)
+        wu_f = jax.lax.all_gather(wu, data_axes, axis=2, tiled=True)
+        wd_f = jax.lax.all_gather(wd, data_axes, axis=1, tiled=True)
+
+        disp, slot, tok, sg, keep, aux = jax.vmap(
+            lambda xg: _local_group_dispatch(cfg, router, xg, e0, e_loc, cap)
+        )(x_loc)
+
+        hg = jnp.einsum("gecd,edf->gecf", disp, wg_f.astype(x_loc.dtype))
+        hu = jnp.einsum("gecd,edf->gecf", disp, wu_f.astype(x_loc.dtype))
+        hh = jax.nn.silu(hg) * hu
+        eo = jnp.einsum("gecf,efd->gecd", hh, wd_f.astype(x_loc.dtype))
+
+        def combine(eo_g, slot_g, tok_g, sg_g, keep_g):
+            flat = eo_g.reshape(e_loc * cap, d)
+            gathered = flat[slot_g] * (sg_g * keep_g)[:, None].astype(x_loc.dtype)
+            return jnp.zeros((s, d), x_loc.dtype).at[tok_g].add(gathered)
+
+        out_partial = jax.vmap(combine)(eo, slot, tok, sg, keep)
+        # the single cross-shard exchange: bf16 psum of (B_loc, S, d)
+        out = jax.lax.psum(out_partial, "model")
+        aux_mean = jax.lax.pmean(jnp.mean(aux), "model")
+        if data_axes:
+            aux_mean = jax.lax.pmean(aux_mean, data_axes)
+        return out, aux_mean
+
+    out, aux = run(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux

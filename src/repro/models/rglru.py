@@ -1,0 +1,119 @@
+"""Griffin-style recurrent block: depthwise temporal conv + RG-LRU
+(Real-Gated Linear Recurrent Unit), as used by RecurrentGemma.
+
+    r_t = σ(W_r x_t);  i_t = σ(W_i x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)                (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the recurrence with ``lax.associative_scan``
+(log-depth); decode is a single fused step.  The block is
+x → [linear → conv1d → RG-LRU] ⊙ gelu(linear) → linear, Griffin-style.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import norm_def, rmsnorm
+from .shardings import ParamDef, constrain
+
+RG_LRU_C = 8.0
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    return {
+        "norm": norm_def(d),
+        "w_in": ParamDef((d, w), ("embed", "lru")),
+        "w_gate_branch": ParamDef((d, w), ("embed", "lru")),
+        "conv_kernel": ParamDef((cw, w), (None, "lru"), init="small"),
+        "conv_bias": ParamDef((w,), ("lru",), init="zeros"),
+        "w_rec_gate": ParamDef((w, w), ("lru", None)),
+        "w_in_gate": ParamDef((w, w), ("lru", None)),
+        "lam": ParamDef((w,), ("lru",), init="normal", scale=1.0),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_depthwise_conv(u: jax.Array, kernel: jax.Array, bias: jax.Array,
+                           carry: Optional[jax.Array]) -> jax.Array:
+    """u: (B, T, W); kernel: (CW, W). carry: (B, CW-1, W) previous inputs."""
+    cw = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([carry.astype(u.dtype), u], axis=1)   # (B, T+CW-1, W)
+    out = sum(ext[:, j:j + u.shape[1]] * kernel[cw - 1 - j].astype(u.dtype)
+              for j in range(cw))
+    return out + bias.astype(u.dtype)
+
+
+def _rg_lru_scan(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                 h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x/r/i: (B, T, W) fp32. Returns (h (B,T,W), h_last)."""
+    log_a = -RG_LRU_C * jax.nn.softplus(lam)[None, None, :] * r   # ≤ 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(cfg: ModelConfig, p, x: jax.Array, *, mode: str,
+                cache: Optional[Dict[str, jax.Array]] = None,
+                mesh=None, rules=None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, t, d = x.shape
+    xin = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = xin @ p["w_in"].astype(x.dtype)                  # (B,T,W)
+    u = constrain(u, mesh, rules, "batch", None, "lru")
+    gate = jax.nn.gelu(xin @ p["w_gate_branch"].astype(x.dtype))
+
+    conv_carry = cache.get("conv") if cache is not None else None
+    uc = _causal_depthwise_conv(u, p["conv_kernel"], p["conv_bias"],
+                                conv_carry if mode == "decode" else None)
+
+    ucf = uc.astype(jnp.float32)
+    r = jax.nn.sigmoid(ucf @ p["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(ucf @ p["w_in_gate"].astype(jnp.float32))
+    lam = p["lam"].astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None
+        h_prev = cache["h"]                               # (B, W) fp32
+        log_a = -RG_LRU_C * jax.nn.softplus(lam)[None, None, :] * r
+        a = jnp.exp(log_a)
+        h = a * h_prev[:, None, :] + \
+            jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * ucf)
+        h_last = h[:, -1]
+        cw = cfg.conv_width
+        new_conv = jnp.concatenate([conv_carry[:, 1:], u.astype(conv_carry.dtype)],
+                                   axis=1) if cw > 1 else conv_carry
+        new_cache = {"h": h_last, "conv": new_conv}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        h, h_last = _rg_lru_scan(ucf, r, i, lam, h0)
+        new_cache = None
+        if mode == "prefill":
+            cw = cfg.conv_width
+            tail = u[:, -(cw - 1):] if cw > 1 else u[:, :0]
+            if tail.shape[1] < cw - 1:
+                tail = jnp.pad(tail, ((0, 0), (cw - 1 - tail.shape[1], 0), (0, 0)))
+            new_cache = {"h": h_last, "conv": tail.astype(jnp.float32)}
+
+    merged = h.astype(x.dtype) * gate
+    out = merged @ p["w_out"].astype(x.dtype)
+    out = constrain(out, mesh, rules, "batch", None, "embed")
+    return x + out, new_cache

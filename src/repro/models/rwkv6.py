@@ -1,0 +1,208 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence per head (state S ∈ R^{hd×hd}):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · S_{t-1} + (r_t · (u ⊙ k_t)) v_t
+
+with **data-dependent per-channel decay** w_t = exp(-exp(w0 + lora(x_t)))
+— the hallmark of RWKV-6 vs RWKV-5.
+
+Training uses a chunked formulation (chunk C, ``lax.scan`` over chunks)
+in which *every* exponential is of a non-positive argument, so it is
+numerically bounded without clamps:
+
+    y_t  = Σ_{s<t} (r_t ⊙ e^{cum_{t-1}-cum_s}) · k_s  v_s   (intra, s<t)
+         + (r_t ⊙ e^{cum_{t-1}}) · S_in                      (inter)
+         + (r_t · (u ⊙ k_t)) v_t                             (diagonal)
+    S_out = diag(e^{cum_{C-1}}) S_in + Σ_s diag(e^{cum_{C-1}-cum_s}) k_sᵀ v_s
+
+where cum_t = Σ_{τ≤t} log w_τ ≤ 0.  The simplification vs upstream
+RWKV-6: static per-channel token-shift mixing for r/k/v/g (RWKV-5 style)
+while the decay w stays fully data-dependent (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import norm_def, rmsnorm
+from .shardings import ParamDef, constrain
+
+DECAY_LORA = 64
+W0_SHIFT = -3.0   # initial raw decay → w = exp(-exp(-3)) ≈ 0.95
+
+
+def timemix_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    nh = cfg.rwkv_heads
+    return {
+        "norm": norm_def(d),
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_v": ParamDef((d,), (None,), init="zeros"),
+        "mu_g": ParamDef((d,), (None,), init="zeros"),
+        "mu_w": ParamDef((d,), (None,), init="zeros"),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        "wo": ParamDef((d, d), ("heads", "embed")),
+        "w0": ParamDef((d,), (None,), init="zeros"),
+        "w_lora_a": ParamDef((d, DECAY_LORA), ("embed", None), init="small"),
+        "w_lora_b": ParamDef((DECAY_LORA, d), (None, None), init="small"),
+        "u": ParamDef((nh, hd), (None, None), init="small"),
+        "out_norm": norm_def(d),
+    }
+
+
+def channelmix_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": norm_def(d),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "wk": ParamDef((d, f), ("embed", "d_ff")),
+        "wv": ParamDef((f, d), ("d_ff", "embed")),
+        "wr": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """xx[t] = x[t-1]; position 0 takes ``last`` (decode carry) or zeros."""
+    if x.shape[1] == 1:
+        return last[:, None, :] if last is not None else jnp.zeros_like(x)
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = 32):
+    """Chunked WKV recurrence.
+
+    r/k/v/logw: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) fp32.
+    Returns (y (B,T,H,hd), s_final).
+    """
+    b, t, h, hd = r.shape
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+    dt = r.dtype
+
+    def resh(x):
+        return x.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)  # (nc,B,H,C,hd)
+
+    rc, kc, vc = resh(r), resh(k), resh(v)
+    lw = resh(logw.astype(jnp.float32))
+
+    def one_chunk(s, args):
+        rr, kk, vv, ww = args                      # (B,H,C,hd)
+        cum = jnp.cumsum(ww, axis=2)               # inclusive, ≤ 0 cumulative
+        cum_prev = cum - ww                        # cum_{t-1}
+        rrf = rr.astype(jnp.float32)
+        kkf = kk.astype(jnp.float32)
+        vvf = vv.astype(jnp.float32)
+        # inter-chunk: (r ⊙ e^{cum_prev}) · S_in
+        rdec = rrf * jnp.exp(cum_prev)
+        y_inter = jnp.einsum("bhtk,bhkv->bhtv", rdec, s)
+        # intra-chunk, strictly lower-triangular, bounded exponentials
+        diff = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,H,C,C,hd)
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        e = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+        att = jnp.einsum("bhtc,bhsc,bhtsc->bhts", rrf, kkf, e)
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", att, vvf)
+        # diagonal bonus
+        bonus = jnp.sum(rrf * u.astype(jnp.float32)[None, :, None, :] * kkf,
+                        axis=-1)
+        y_diag = bonus[..., None] * vvf
+        y = (y_inter + y_intra + y_diag).astype(dt)
+        # state update, all exponents ≤ 0
+        dec_all = jnp.exp(cum[:, :, -1:, :])                         # (B,H,1,hd)
+        k_dec = kkf * jnp.exp(cum[:, :, -1:, :] - cum)               # (B,H,C,hd)
+        s_new = dec_all[:, :, 0, :, None] * s + \
+            jnp.einsum("bhtk,bhtv->bhkv", k_dec, vvf)
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(one_chunk, s0.astype(jnp.float32),
+                               (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, hd)
+    return y, s_final
+
+
+def wkv_step(r, k, v, logw, u, s):
+    """Single-token recurrence for decode. r/k/v/logw: (B,1,H,hd)."""
+    rf = r[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    w = jnp.exp(logw[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", rf, s) + \
+        jnp.sum(rf * u.astype(jnp.float32)[None] * kf, axis=-1)[..., None] * vf
+    s_new = w[..., None] * s + kf[..., None] * vf[:, :, None, :]
+    return y[:, None].astype(r.dtype), s_new
+
+
+def timemix_apply(cfg: ModelConfig, p, x: jax.Array, *, mode: str,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  mesh=None, rules=None
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, t, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+    xin = rmsnorm(x, p["norm"], cfg.norm_eps)
+    last = cache["att_shift"] if cache is not None else None
+    xx = _token_shift(xin, last if mode == "decode" else None)
+
+    xr, xk, xv, xg, xw = (_mix(xin, xx, p[m]) for m in
+                          ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, t, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, t, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch mechanism)
+    w_raw = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32) + W0_SHIFT
+    logw = (-jnp.exp(w_raw)).reshape(b, t, h, hd)
+
+    if mode == "decode":
+        assert cache is not None
+        y, s_new = wkv_step(r, k, v, logw, p["u"], cache["state"])
+        new_cache = {"state": s_new, "att_shift": xin[:, -1]}
+    else:
+        s0 = cache["state"] if cache is not None else \
+            jnp.zeros((b, h, hd, hd), jnp.float32)
+        y, s_final = wkv_chunked(r, k, v, logw, p["u"], s0)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": s_final, "att_shift": xin[:, -1]}
+
+    y = y.reshape(b, t, d)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * g
+    out = y @ p["wo"].astype(x.dtype)
+    out = constrain(out, mesh, rules, "batch", None, "embed")
+    return x + out, new_cache
+
+
+def channelmix_apply(cfg: ModelConfig, p, x: jax.Array, *, mode: str,
+                     cache: Optional[Dict[str, jax.Array]] = None,
+                     mesh=None, rules=None
+                     ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    xin = rmsnorm(x, p["norm"], cfg.norm_eps)
+    last = cache["ffn_shift"] if cache is not None else None
+    xx = _token_shift(xin, last if mode == "decode" else None)
+    xk = _mix(xin, xx, p["mu_k"])
+    xr = _mix(xin, xx, p["mu_r"])
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = constrain(kk, mesh, rules, "batch", None, "d_ff")
+    vv = kk @ p["wv"].astype(x.dtype)
+    rr = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"ffn_shift": xin[:, -1]}
+    return x + rr * vv, new_cache

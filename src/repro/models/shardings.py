@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Every parameter is declared as a :class:`ParamDef` carrying *logical* axis
+names; :func:`spec_for` greedily maps logical axes to mesh axes, skipping
+assignments that do not divide evenly or that would reuse a mesh axis —
+so one rule set serves all ten architectures (e.g. Granite's 40 experts
+cannot shard over a 16-way model axis, so its expert ``d_ff`` takes the
+model axis instead).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered candidate mesh axes
+# ("data",) means: use "data" (and "pod" too if present and divisible)
+LogicalRules = Dict[str, Tuple[str, ...]]
+
+BASE_RULES: LogicalRules = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "d_ff": ("model",),
+    "expert": ("model",),
+    "expert_ff": ("model",),
+    "vocab": ("model",),
+    "lru": ("model",),
+    "layers": (),
+    "window": (),
+    "cache_seq": ("model",),   # long-context decode: shard KV cache on seq
+    "seq_act": ("model",),     # sequence sharding of the residual stream
+                               # (only applied when cfg.seq_sharding is on)
+    "stack": (),
+}
+
+# ZeRO-3/FSDP: weight dims additionally try the data axes once the model
+# axis is consumed — parameters and optimizer state then shard over the
+# full mesh.
+FSDP_EXTRA: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),
+    "d_ff": ("model", "data"),
+    "expert_ff": ("model", "data"),
+    "heads": ("model", "data"),
+    "kv_heads": ("model", "data"),
+    "vocab": ("model", "data"),
+    "expert": ("model", "data"),
+    "lru": ("model", "data"),
+}
+
+
+def rules_for(fsdp: bool) -> LogicalRules:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules.update(FSDP_EXTRA)
+    return rules
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Shape + logical axes + initializer for one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"          # "fan_in" | "zeros" | "ones" | "normal" | "embed" | "small"
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Dict[str, object]     # nested dict of ParamDef / arrays
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: LogicalRules) -> P:
+    """Greedy logical→mesh assignment with divisibility + reuse checks."""
+    used: set = set()
+    out: List[object] = []
+    for dim, ax in zip(shape, axes):
+        assigned: List[str] = []
+        if ax is not None:
+            for cand in rules.get(ax, ()):  # ordered candidates
+                if cand in used or cand not in mesh.axis_names:
+                    continue
+                size = mesh.shape[cand]
+                cur = math.prod([mesh.shape[a] for a in assigned]) if assigned else 1
+                if dim % (cur * size) == 0:
+                    assigned.append(cand)
+                    used.add(cand)
+        if not assigned:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(tuple(assigned))
+    # drop trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(defs: ParamTree, mesh: Mesh, rules: LogicalRules):
+    """ParamDef tree → PartitionSpec tree."""
+    return jax.tree.map(
+        lambda d: spec_for(d.axes, d.shape, mesh, rules),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_shardings(defs: ParamTree, mesh: Mesh, rules: LogicalRules):
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(d.axes, d.shape, mesh, rules)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _init_one(key, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[0] if d.shape else 1
+    if d.init == "embed":
+        std = d.scale
+    elif d.init == "normal":
+        std = d.scale
+    elif d.init == "small":
+        std = 0.02 * d.scale
+    else:  # fan_in
+        std = d.scale / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(key, defs: ParamTree, dtype) -> ParamTree:
+    """Materialize a ParamDef tree into arrays (abstract under eval_shape)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d, jnp.dtype(dtype)) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_defs(defs: ParamTree, n: int, axis_name: str = "layers") -> ParamTree:
+    """Prepend a stacked leading dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical(*names: Optional[str]) -> Tuple[Optional[str], ...]:
+    return tuple(names)
+
+
+def constrain(x: jax.Array, mesh: Optional[Mesh], rules: LogicalRules,
+              *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh).
+
+    Divisibility is checked against the actual array shape, so e.g. a
+    batch-1 long-context tensor silently stays replicated on the batch
+    axis instead of emitting an invalid spec.
+    """
+    if mesh is None or math.prod(mesh.shape.values()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, x.shape, mesh, rules)))

@@ -1,0 +1,256 @@
+"""Decoder stack assembly: heterogeneous block patterns, stacked params,
+``lax.scan`` over pattern units (compile-time compact), remat policies.
+
+Layers are grouped into *units* of ``len(cfg.block_pattern)`` consecutive
+blocks; unit parameters are stacked along a leading axis and scanned.
+Remaining tail layers (e.g. RecurrentGemma's 38 = 12×3 + 2) are applied
+unrolled.  ``cfg`` option ``unroll_layers`` (used by the roofline probe
+compiles) switches the scan to a Python loop so ``cost_analysis`` counts
+every layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, attn_defs
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_defs, norm_def
+from .moe import moe_apply, moe_defs
+from .rglru import rglru_block, rglru_defs
+from .rwkv6 import (channelmix_apply, channelmix_defs, timemix_apply,
+                    timemix_defs)
+from .layers import rmsnorm
+from .shardings import ParamDef, constrain, stack_defs
+
+
+# ----------------------------------------------------------------------- #
+# Per-layer defs                                                          #
+# ----------------------------------------------------------------------- #
+def layer_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind == "rwkv6":
+        return {"mix": timemix_defs(cfg), "ffn": channelmix_defs(cfg)}
+    if kind in ("attn", "local_attn"):
+        mix = attn_defs(cfg)
+    elif kind == "rglru":
+        mix = rglru_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.moe is not None:
+        ffn = {"norm": norm_def(cfg.d_model), **moe_defs(cfg)}
+    else:
+        ffn = {"norm": norm_def(cfg.d_model), **mlp_defs(cfg)}
+    return {"mix": mix, "ffn": ffn}
+
+
+def layer_cache_defs(cfg: ModelConfig, kind: str, batch: int, s_max: int
+                     ) -> Dict[str, Any]:
+    """ParamDef tree (init=zeros) describing one layer's decode cache."""
+    out: Dict[str, Any] = {}
+    hd = cfg.head_dim
+    if kind == "attn":
+        out["mix"] = {
+            "k": ParamDef((batch, s_max, cfg.n_kv_heads, hd),
+                          ("batch", "cache_seq", "kv_heads", None), init="zeros"),
+            "v": ParamDef((batch, s_max, cfg.n_kv_heads, hd),
+                          ("batch", "cache_seq", "kv_heads", None), init="zeros"),
+        }
+    elif kind == "local_attn":
+        w = min(cfg.window, s_max)
+        out["mix"] = {
+            "k": ParamDef((batch, w, cfg.n_kv_heads, hd),
+                          ("batch", "window", "kv_heads", None), init="zeros"),
+            "v": ParamDef((batch, w, cfg.n_kv_heads, hd),
+                          ("batch", "window", "kv_heads", None), init="zeros"),
+        }
+    elif kind == "rglru":
+        lw = cfg.lru_width or cfg.d_model
+        out["mix"] = {
+            "h": ParamDef((batch, lw), ("batch", "lru"), init="zeros"),
+            "conv": ParamDef((batch, cfg.conv_width - 1, lw),
+                             ("batch", None, "lru"), init="zeros"),
+        }
+    elif kind == "rwkv6":
+        h, rhd = cfg.rwkv_heads, cfg.rwkv_head_size
+        out["mix"] = {
+            "state": ParamDef((batch, h, rhd, rhd),
+                              ("batch", "heads", None, None), init="zeros"),
+            "att_shift": ParamDef((batch, cfg.d_model), ("batch", "embed"),
+                                  init="zeros"),
+        }
+        out["ffn"] = {
+            "ffn_shift": ParamDef((batch, cfg.d_model), ("batch", "embed"),
+                                  init="zeros"),
+        }
+    return out
+
+
+# ----------------------------------------------------------------------- #
+# Per-layer apply                                                         #
+# ----------------------------------------------------------------------- #
+def layer_apply(cfg: ModelConfig, kind: str, p, x, *, mode: str,
+                cache=None, pos=None, mesh=None, rules=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    mix_cache = cache.get("mix") if cache else None
+
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        x, new_mix = attention_block(cfg, p["mix"], x, mode=mode,
+                                     cache=mix_cache, pos=pos, window=window,
+                                     mesh=mesh, rules=rules)
+    elif kind == "rglru":
+        x, new_mix = rglru_block(cfg, p["mix"], x, mode=mode, cache=mix_cache,
+                                 mesh=mesh, rules=rules)
+    elif kind == "rwkv6":
+        x, new_mix = timemix_apply(cfg, p["mix"], x, mode=mode,
+                                   cache=mix_cache, mesh=mesh, rules=rules)
+    else:
+        raise ValueError(kind)
+
+    new_cache: Dict[str, Any] = {}
+    if new_mix is not None:
+        new_cache["mix"] = new_mix
+
+    if kind == "rwkv6":
+        ffn_cache = cache.get("ffn") if cache else None
+        x, new_ffn = channelmix_apply(cfg, p["ffn"], x, mode=mode,
+                                      cache=ffn_cache, mesh=mesh, rules=rules)
+        if new_ffn is not None:
+            new_cache["ffn"] = new_ffn
+    elif cfg.moe is not None:
+        h = rmsnorm(x, p["ffn"]["norm"], cfg.norm_eps)
+        if cfg.moe_impl == "shard_map" and mesh is not None:
+            from .moe import moe_apply_shard_map
+            out, aux = moe_apply_shard_map(cfg, p["ffn"], h, mesh, rules)
+        else:
+            out, aux = moe_apply(cfg, p["ffn"], h, mesh, rules)
+        x = x + out
+    else:
+        h = rmsnorm(x, p["ffn"]["norm"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, p["ffn"], h, mesh, rules)
+    return x, (new_cache if new_cache else None), aux
+
+
+# ----------------------------------------------------------------------- #
+# Stack assembly                                                          #
+# ----------------------------------------------------------------------- #
+def _pattern_units(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    kinds = cfg.block_kinds()
+    period = len(cfg.block_pattern) if cfg.family != "rwkv6" else 1
+    unit = tuple(kinds[:period])
+    n_units = cfg.n_layers // period
+    tail = tuple(kinds[n_units * period:])
+    return unit, n_units, tail
+
+
+def stack_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    unit, n_units, tail = _pattern_units(cfg)
+    unit_defs = {f"b{i}": layer_defs(cfg, kind) for i, kind in enumerate(unit)}
+    out: Dict[str, Any] = {"units": stack_defs(unit_defs, n_units, "stack")}
+    if tail:
+        out["tail"] = {f"b{i}": layer_defs(cfg, kind)
+                       for i, kind in enumerate(tail)}
+    return out
+
+
+def stack_cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> Dict[str, Any]:
+    unit, n_units, tail = _pattern_units(cfg)
+    unit_cache = {f"b{i}": layer_cache_defs(cfg, kind, batch, s_max)
+                  for i, kind in enumerate(unit)}
+    out: Dict[str, Any] = {"units": stack_defs(unit_cache, n_units, "stack")}
+    if tail:
+        out["tail"] = {f"b{i}": layer_cache_defs(cfg, kind, batch, s_max)
+                       for i, kind in enumerate(tail)}
+    return out
+
+
+def _unit_apply(cfg: ModelConfig, unit: Tuple[str, ...], params, x, *,
+                mode: str, cache=None, pos=None, mesh=None, rules=None):
+    new_cache: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(unit):
+        key = f"b{i}"
+        lcache = cache.get(key) if cache else None
+        x, nc, aux = layer_apply(cfg, kind, params[key], x, mode=mode,
+                                 cache=lcache, pos=pos, mesh=mesh, rules=rules)
+        aux_total = aux_total + aux
+        new_cache[key] = nc if nc is not None else {}
+    return x, new_cache, aux_total
+
+
+def apply_stack(cfg: ModelConfig, params, x, *, mode: str, cache=None,
+                pos=None, mesh=None, rules=None, unroll: bool = False):
+    """Run all layers. Returns (x, new_cache_or_None, aux_loss)."""
+    unit, n_units, tail = _pattern_units(cfg)
+    with_cache = mode in ("decode", "prefill")
+
+    seq_shard = cfg.seq_sharding and mode in ("train", "prefill")
+
+    def unit_fn(x, unit_params, unit_cache):
+        if seq_shard:
+            # Megatron-SP: the residual stream (and hence the remat-saved
+            # scan carry) is sequence-sharded over the model axis between
+            # blocks; GSPMD turns the blocks' TP all-reduces into
+            # reduce-scatter + all-gather pairs of equal volume.
+            x = constrain(x, mesh, rules, "batch", "seq_act", None)
+        x, nc, aux = _unit_apply(cfg, unit, unit_params, x, mode=mode,
+                                 cache=unit_cache, pos=pos, mesh=mesh,
+                                 rules=rules)
+        if seq_shard:
+            x = constrain(x, mesh, rules, "batch", "seq_act", None)
+        return x, nc, aux
+
+    if cfg.remat and mode == "train":
+        unit_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=())
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = None
+
+    if unroll:
+        new_unit_caches = []
+        for u in range(n_units):
+            up = jax.tree.map(lambda a: a[u], params["units"])
+            uc = jax.tree.map(lambda a: a[u], cache["units"]) if with_cache else None
+            x, nc, aux = unit_fn(x, up, uc)
+            aux_total = aux_total + aux
+            new_unit_caches.append(nc)
+        if with_cache:
+            new_caches = {"units": jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_unit_caches)}
+    else:
+        if with_cache:
+            def scan_fn(xc, xs):
+                up, uc = xs
+                xo, nc, aux = unit_fn(xc, up, uc)
+                return xo, (nc, aux)
+            x, (stacked_caches, auxs) = jax.lax.scan(
+                scan_fn, x, (params["units"], cache["units"]))
+            new_caches = {"units": stacked_caches}
+        else:
+            def scan_fn(xc, up):
+                xo, _, aux = unit_fn(xc, up, None)
+                return xo, aux
+            x, auxs = jax.lax.scan(scan_fn, x, params["units"])
+        aux_total = aux_total + jnp.sum(auxs)
+
+    if tail:
+        tcache = cache.get("tail") if with_cache and cache else None
+        new_tail: Dict[str, Any] = {}
+        for i, kind in enumerate(tail):
+            key = f"b{i}"
+            lcache = tcache.get(key) if tcache else None
+            x, nc, aux = layer_apply(cfg, kind, params["tail"][key], x,
+                                     mode=mode, cache=lcache, pos=pos,
+                                     mesh=mesh, rules=rules)
+            aux_total = aux_total + aux
+            new_tail[key] = nc if nc is not None else {}
+        if with_cache:
+            assert new_caches is not None
+            new_caches["tail"] = new_tail
+
+    return x, new_caches, aux_total

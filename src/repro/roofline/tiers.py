@@ -1,0 +1,56 @@
+"""Attribute collectives to interconnect tiers (ICI vs cross-pod DCN)
+from their replica groups.
+
+Mesh device order: id = pod·256 + data·16 + model (row-major).  A
+collective whose replica groups contain a stride ≥ devices-per-pod spans
+pods → DCN tier; everything else stays on ICI.  Handles both explicit
+``replica_groups={{0,1,..},..}`` and iota ``[G,S]<=[N]...`` formats; when
+a format cannot be parsed the bytes are charged to ICI (optimistic for
+DCN, conservative for the collective term's lower bound — flagged in the
+artifact).
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def group_stride_max(line: str) -> Optional[int]:
+    """Largest index stride inside one replica group, or None if unknown."""
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        if len(ids) < 2:
+            return 0
+        return max(b - a for a, b in zip(ids, ids[1:]))
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) else None
+        # iota over [N] reshaped to `reshape`, transposed by `perm`, then
+        # grouped into g rows of s columns: the column stride in flattened
+        # id space tells the tier.
+        if perm is None or perm == list(range(len(reshape))):
+            return 1 if s > 1 else 0
+        # common case: 2D transpose — columns advance along the first
+        # (pre-transpose) dim, i.e. stride = product of trailing dims
+        if len(reshape) == 2 and perm == [1, 0]:
+            return reshape[1]
+        # general: stride of the fastest-varying post-transpose axis
+        strides = [1] * len(reshape)
+        for i in range(len(reshape) - 2, -1, -1):
+            strides[i] = strides[i + 1] * reshape[i + 1]
+        return strides[perm[-1]]
+    return None
+
+
+def tier_of(line: str, devices_per_pod: int) -> str:
+    stride = group_stride_max(line)
+    if stride is None:
+        return "ici?"
+    return "dcn" if stride >= devices_per_pod else "ici"

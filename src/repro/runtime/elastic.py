@@ -1,0 +1,119 @@
+"""Elastic membership-driven runtime: the Snow protocol as the training
+cluster's control plane.
+
+Each training *host* runs a ``SnowNode`` (the exact protocol from
+``repro.core`` — joins, graceful leaves, SWIM eviction, anti-entropy,
+Reliable-Message announcements).  The controller consumes membership
+transitions and translates them into trainer actions:
+
+* membership grew/shrank → re-carve the data-parallel axis to the
+  largest usable host count, checkpoint-restore into the new mesh, and
+  fan parameters out over the Coloring two-tree
+  (:mod:`repro.checkpoint.distribution`);
+* a silent failure is evicted by SWIM within seconds (paper §4.5.3) and
+  handled like a shrink — the paper's churn guarantee means the
+  *surviving* hosts' membership view never disagrees about each other,
+  so the re-carve is deterministic on every host without a coordinator;
+* per-step duration reports feed the straggler monitor (§2): a host
+  slower than ``threshold ×`` the cluster median flips gradient sync to
+  the dual-path (Coloring) schedule, mirroring the paper's mitigation.
+
+In this repository hosts are simulated in-process (single CPU); the
+controller logic is identical for a real deployment — the transport
+underneath ``repro.core`` is the only substitution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.membership import MembershipView
+from repro.core.scenarios import build_cluster
+from repro.core.sim import NodeProfile
+from repro.core.snow_node import SnowNode
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    """Data-axis carve for the currently-usable hosts."""
+    n_hosts: int
+    data_parallel: int            # usable hosts (largest power of two)
+    spares: int
+
+    @property
+    def changed(self) -> bool:
+        return True
+
+
+def carve(n_hosts: int) -> MeshPlan:
+    """Largest power-of-two data-parallel group; the rest are hot spares
+    (they keep serving membership + anti-entropy and absorb the next
+    failure without a re-carve)."""
+    dp = 1 << max(0, (n_hosts).bit_length() - 1)
+    return MeshPlan(n_hosts=n_hosts, data_parallel=dp, spares=n_hosts - dp)
+
+
+class ElasticController:
+    """Wraps a simulated Snow cluster of training hosts."""
+
+    def __init__(self, n_hosts: int, k: int = 4, seed: int = 0,
+                 straggler_threshold: float = 3.0):
+        self.cluster = build_cluster("snow", n_hosts, k, seed,
+                                     straggler_frac=0.0,
+                                     enable_swim=True,
+                                     enable_anti_entropy=True)
+        self.k = k
+        self.straggler_threshold = straggler_threshold
+        self._durations: Dict[int, List[float]] = {}
+        self._next_id = n_hosts
+        self.events: List[str] = []
+
+    # -- time ------------------------------------------------------------ #
+    def advance(self, seconds: float) -> None:
+        self.cluster.sim.run(until=self.cluster.sim.now + seconds)
+
+    # -- membership ops ---------------------------------------------------- #
+    def active_hosts(self, observer: int = 0) -> List[int]:
+        node: SnowNode = self.cluster.nodes[observer]
+        return [m for m in node.view if self.cluster.net.alive(m)]
+
+    def plan(self) -> MeshPlan:
+        return carve(len(self.active_hosts()))
+
+    def join_host(self) -> int:
+        hid = self._next_id
+        self._next_id += 1
+        node = SnowNode(hid, self.cluster.sim, self.cluster.net,
+                        self.cluster.metrics, MembershipView([hid]), self.k,
+                        NodeProfile(), enable_swim=True,
+                        enable_anti_entropy=True)
+        node.join_via(self.cluster.nodes[self.active_hosts()[0]])
+        self.cluster.nodes[hid] = node
+        self.events.append(f"join:{hid}")
+        return hid
+
+    def leave_host(self, hid: int, graceful: bool = True) -> None:
+        if graceful:
+            self.cluster.nodes[hid].leave(linger=2.0)
+            self.events.append(f"leave:{hid}")
+        else:
+            self.cluster.net.crash(hid)
+            self.events.append(f"crash:{hid}")
+
+    # -- stragglers --------------------------------------------------------- #
+    def report_step(self, host: int, seconds: float) -> None:
+        self._durations.setdefault(host, []).append(seconds)
+
+    def stragglers(self) -> Set[int]:
+        lasts = {h: d[-1] for h, d in self._durations.items() if d}
+        if len(lasts) < 2:
+            return set()
+        med = sorted(lasts.values())[len(lasts) // 2]
+        return {h for h, t in lasts.items()
+                if t > self.straggler_threshold * max(med, 1e-9)}
+
+    def collective_policy(self) -> str:
+        """'two_tree' (dual-path Coloring, §4.6) while any straggler is
+        live; 'ring' otherwise (bandwidth-optimal steady state)."""
+        return "two_tree" if self.stragglers() else "ring"

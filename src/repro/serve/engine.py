@@ -1,0 +1,79 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+A deliberately small but real engine: fixed-capacity batch slots, greedy
+or temperature sampling, per-slot positions, and ring-buffer window
+caches for the hybrid archs.  The decode step is the same jitted
+``serve_step`` the dry-run lowers for the production mesh — this engine
+is the CPU-scale driver of it (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import LM, decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S0,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params, *, batch_slots: int = 4,
+                 max_seq: int = 512, seed: int = 0):
+        self.lm = lm
+        self.params = params
+        self.b = batch_slots
+        self.smax = max_seq
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(lm, p, c, t, pos))
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Simple batched generation: pad prompts to a common prefill
+        length per micro-batch of ``batch_slots`` requests."""
+        out: List[List[int]] = []
+        for i in range(0, len(requests), self.b):
+            out.extend(self._run_batch(requests[i:i + self.b]))
+        return out
+
+    def _run_batch(self, reqs: List[Request]) -> List[List[int]]:
+        b = len(reqs)
+        s0 = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, s0), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, s0 - len(r.prompt):] = r.prompt   # left-pad
+        cache = self.lm.init_cache(b, self.smax)
+        logits, cache = self.lm.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache)
+        last = logits[:, -1]
+        results: List[List[int]] = [[] for _ in reqs]
+        max_new = max(r.max_new_tokens for r in reqs)
+        cur = None
+        for step in range(max_new):
+            self.key, sub = jax.random.split(self.key)
+            nxt = self._sample(last, reqs, sub)
+            for i, r in enumerate(reqs):
+                if step < r.max_new_tokens:
+                    results[i].append(int(nxt[i]))
+            cur = nxt[:, None].astype(jnp.int32)
+            pos = jnp.int32(s0 + step)
+            logits, cache = self._decode(self.params, cache, cur, pos)
+            last = logits[:, -1]
+        return results
+
+    def _sample(self, logits: jax.Array, reqs: List[Request], key):
+        temps = jnp.asarray([max(r.temperature, 0.0) for r in reqs])
+        greedy = jnp.argmax(logits, axis=-1)
+        scaled = logits / jnp.maximum(temps[:, None], 1e-6)
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        return jnp.where(temps > 0, sampled, greedy)

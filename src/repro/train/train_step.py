@@ -1,0 +1,70 @@
+"""The jitted training step: loss → grads → AdamW, with optional
+gradient-accumulation microbatching.
+
+``make_train_step`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for
+``jax.jit(..., in_shardings=..., out_shardings=...)`` and for the
+multi-pod dry-run (lower + compile on ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim import adamw
+
+
+def make_train_step(lm: LM, opt_cfg: adamw.AdamWConfig,
+                    *, microbatches: int = 1, unroll: bool = False
+                    ) -> Callable[[Dict, Dict], Tuple[Dict, Dict]]:
+    """state = {"params", "opt"}; batch = model inputs."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: lm.loss_fn(p, b, unroll=unroll), has_aux=True)
+
+    def step_full(state, batch):
+        (loss, metrics), grads = grad_fn(state["params"], batch)
+        return loss, metrics, grads
+
+    def step_microbatched(state, batch):
+        """Split the batch dim into microbatches and accumulate grads —
+        trades peak activation memory for a scan."""
+        def resplit(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(resplit, batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = grad_fn(state["params"], mbatch)
+            acc_g, acc_loss = acc
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                                 acc_g, grads)
+            return (acc_g, acc_loss + loss / microbatches), metrics
+
+        (grads, loss), metrics = jax.lax.scan(body, (zero_g, jnp.zeros((), jnp.float32)), mb)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        if microbatches > 1:
+            loss, metrics, grads = step_microbatched(state, batch)
+        else:
+            loss, metrics, grads = step_full(state, batch)
+        new_params, new_opt, stats = adamw.apply_updates(
+            opt_cfg, state["params"], grads, state["opt"])
+        out_metrics = {"loss": loss, **metrics, **stats}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def init_train_state(lm: LM, key: jax.Array) -> Dict[str, Any]:
+    params = lm.init(key)
+    return {"params": params, "opt": adamw.init_state(params)}

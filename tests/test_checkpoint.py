@@ -1,0 +1,51 @@
+"""Checkpointer: roundtrip, retention, resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _state(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 4)),
+                       "b": jnp.zeros(4)},
+            "opt": {"step": jnp.int32(seed), "m": {"w": jnp.ones((4, 4))}}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, async_write=False)
+    st = _state(3)
+    ck.save(3, st)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    restored, step = ck.restore(abstract)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(tmp_path, async_write=True)
+    ck.save(7, _state(7))
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(tmp_path, async_write=False)
+    ck.save(1, _state(1))
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct((9,), jnp.float32),
+                       _state(1))
+    try:
+        ck.restore(bad)
+        assert False, "must raise"
+    except ValueError:
+        pass

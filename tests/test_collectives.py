@@ -1,0 +1,19 @@
+"""Snow ppermute collectives — run in a subprocess with 8 host devices
+(XLA device count locks at first jax import, so the main test process
+must keep its single CPU device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).parent / "helpers" / "collective_check.py"
+
+
+def test_collectives_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).parents[1] / "src")
+    res = subprocess.run([sys.executable, str(SCRIPT)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "ALL-OK" in res.stdout

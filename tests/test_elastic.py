@@ -1,0 +1,46 @@
+"""Elastic controller: Snow membership drives the mesh plan."""
+from repro.runtime.elastic import ElasticController, carve
+
+
+def test_carve_power_of_two():
+    assert carve(8).data_parallel == 8
+    assert carve(11).data_parallel == 8 and carve(11).spares == 3
+    assert carve(16).data_parallel == 16
+
+
+def test_join_grows_active_set():
+    ec = ElasticController(8, seed=1)
+    ec.advance(1.0)
+    assert len(ec.active_hosts()) == 8
+    ec.join_host()
+    ec.advance(5.0)
+    assert len(ec.active_hosts()) == 9
+    assert ec.plan().data_parallel == 8 and ec.plan().spares == 1
+
+
+def test_graceful_leave_shrinks():
+    ec = ElasticController(9, seed=2)
+    ec.advance(1.0)
+    ec.leave_host(5, graceful=True)
+    ec.advance(8.0)
+    assert len(ec.active_hosts()) == 8
+    assert 5 not in ec.active_hosts()
+
+
+def test_crash_is_evicted_by_swim():
+    ec = ElasticController(8, seed=3)
+    ec.advance(1.0)
+    ec.leave_host(3, graceful=False)
+    ec.advance(10.0)     # SWIM probe + indirect + evict broadcast
+    assert 3 not in ec.active_hosts()
+    assert ec.plan().data_parallel == 4  # 7 hosts -> dp 4 + 3 spares
+
+
+def test_straggler_flips_collective_policy():
+    ec = ElasticController(4, seed=4)
+    for h in range(4):
+        ec.report_step(h, 0.1)
+    assert ec.collective_policy() == "ring"
+    ec.report_step(2, 1.0)
+    assert ec.collective_policy() == "two_tree"
+    assert 2 in ec.stragglers()

@@ -1,0 +1,51 @@
+"""MembershipView: ring math, merge semantics, tombstones."""
+from hypothesis import given, strategies as st
+
+from repro.core.membership import MembershipView
+
+
+def test_basic_ring_ops():
+    v = MembershipView([5, 1, 9, 3])
+    assert list(v) == [1, 3, 5, 9]
+    assert v.successor(9) == 1
+    assert v.predecessor(1) == 9
+    assert v.ring_distance(3, 9) == 2
+    assert v.arc(5, 3) == [5, 9, 1, 3]
+    assert v.arc(3, 3) == [3]
+
+
+def test_tombstones_block_resurrection():
+    a = MembershipView([1, 2, 3])
+    b = MembershipView([1, 2, 3])
+    a.remove(2)
+    assert 2 not in a
+    a.merge(b)
+    assert 2 not in a, "anti-entropy must not resurrect removed nodes"
+    b.merge(a)
+    assert 2 not in b, "tombstones propagate through merge"
+
+
+def test_ensure_bypasses_tombstone():
+    v = MembershipView([1, 3])
+    v.remove(2)
+    v.ensure(2)     # boundary carried by a message is authoritative
+    assert 2 in v
+
+
+@given(st.sets(st.integers(0, 1000), min_size=2, max_size=60),
+       st.sets(st.integers(0, 1000), min_size=0, max_size=60))
+def test_merge_is_union_minus_tombstones(m1, m2):
+    a, b = MembershipView(m1), MembershipView(m2)
+    dead = sorted(m1)[0]
+    a.remove(dead)
+    a.merge(b)
+    expect = (set(m1) | set(m2)) - {dead}
+    assert set(a.members()) == expect
+
+
+@given(st.sets(st.integers(0, 10_000), min_size=2, max_size=100))
+def test_arc_full_ring(members):
+    v = MembershipView(members)
+    first = v.at(0)
+    assert v.arc(v.successor(first), v.predecessor(first)) == \
+        [m for m in list(v)[1:]] + []

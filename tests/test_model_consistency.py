@@ -1,0 +1,80 @@
+"""Per-arch smoke + the strongest model invariant: prefill+decode must
+reproduce the train-mode forward exactly (caches, RoPE offsets, ring
+buffers, recurrent states)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import LM, decode_step
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _batch(cfg, B, S):
+    if cfg.frontend == "audio":
+        frames = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        return ({"frames": frames, "labels": labels},
+                {"frames": frames},
+                lambda t: frames[:, t:t + 1])
+    if cfg.frontend == "vision":
+        P = cfg.frontend_prefix
+        toks = jax.random.randint(KEY, (B, S - P), 0, cfg.vocab)
+        patches = jax.random.normal(KEY, (B, P, cfg.d_model), jnp.float32)
+        return ({"tokens": toks, "patches": patches, "labels": toks},
+                {"tokens": toks, "patches": patches},
+                lambda t: toks[:, t - P:t - P + 1])
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    return ({"tokens": toks, "labels": toks},
+            {"tokens": toks},
+            lambda t: toks[:, t:t + 1])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(KEY)
+    B, S = 2, 32
+    train_batch, _, _ = _batch(cfg, B, S)
+    loss, metrics = jax.jit(lm.loss_fn)(params, train_batch)
+    assert np.isfinite(float(loss))
+    logits, _, _ = lm.forward(params, train_batch, mode="train")
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_train_forward(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(KEY)
+    B, S, S0 = 2, 16, 8
+    train_batch, full_in, step_in = _batch(cfg, B, S)
+    logits_full, _, _ = lm.forward(params, full_in, mode="train")
+    pre_in = {k: (v[:, :S0] if k in ("tokens", "frames") else v)
+              for k, v in full_in.items()}
+    if cfg.frontend == "vision":
+        pre_in["tokens"] = full_in["tokens"][:, :S0 - cfg.frontend_prefix]
+    cache = lm.init_cache(B, S)
+    logits_pre, cache = lm.prefill(params, pre_in, cache)
+    np.testing.assert_allclose(np.asarray(logits_pre, np.float32),
+                               np.asarray(logits_full[:, :S0], np.float32),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(S0, S):
+        lg, cache = decode_step(lm, params, cache, step_in(t), jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(logits_full[:, t], np.float32), rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_vs_defs(arch):
+    """The analytic param_count must match the real parameter tree."""
+    cfg = get_config(arch)
+    lm = LM(cfg)
+    abstract = jax.eval_shape(lm.init, KEY)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abstract))
+    assert total == cfg.param_count(), (total, cfg.param_count())

@@ -1,0 +1,97 @@
+"""End-to-end protocol behaviour in the event simulator (paper §5)."""
+import math
+
+import pytest
+
+from repro.core.scenarios import (build_cluster, run_breakdown, run_churn,
+                                  run_stable, summarize)
+
+
+def test_stable_snow_is_atomic_and_lean():
+    c = run_stable("snow", n=120, k=4, n_messages=10, seed=3)
+    s = summarize(c)
+    assert s["reliability"] == 1.0
+    assert abs(s["rmr"] - 122.0) < 1e-6       # one 122 B frame per node
+    assert s["ldt"] < 3.0
+
+
+def test_stable_coloring_double_rmr_faster_ldt():
+    snow = summarize(run_stable("snow", n=120, k=4, n_messages=10, seed=3))
+    col = summarize(run_stable("coloring", n=120, k=4, n_messages=10, seed=3))
+    assert col["reliability"] == 1.0
+    assert abs(col["rmr"] - 2 * snow["rmr"]) < 1.0     # §4.6: exactly 2×
+    assert col["ldt"] < snow["ldt"]                     # stragglers dodged
+
+
+def test_gossip_not_atomic():
+    s = summarize(run_stable("gossip", n=150, k=4, n_messages=10, seed=5))
+    assert s["reliability"] < 1.0
+    assert s["rmr"] > 3 * 108                           # duplicate-heavy
+
+
+def test_churn_does_not_disturb_stable_nodes():
+    for proto in ("snow", "coloring"):
+        s = summarize(run_churn(proto, n=100, k=4, n_messages=30, seed=7))
+        assert s["reliability"] == 1.0, proto
+
+
+def test_breakdown_detected_and_evicted():
+    c = run_breakdown("snow", n=80, k=4, n_messages=30, seed=2,
+                      crash_every=10)
+    s = summarize(c)
+    # crashed-but-not-yet-evicted nodes depress reliability below 1.0 ...
+    assert 0.95 < s["reliability"] < 1.0
+    # ... and SWIM evicts them: survivors' views drop the crashed nodes
+    crashed = c.net.crashed
+    assert crashed
+    survivors = [n for i, n in c.nodes.items() if c.net.alive(i)]
+    evicted_counts = sum(
+        all(x not in node.view for x in crashed) for node in survivors)
+    assert evicted_counts > 0.9 * len(survivors)
+
+
+def test_reliable_message_converges_at_root():
+    c = build_cluster("snow", 40, 4, seed=1)
+    mid = c.broadcast_from(0, reliable=True)
+    c.sim.run(until=30.0)
+    root = c.nodes[0]
+    assert mid in root.converged, "root must collect all ACKs (§4.4)"
+
+
+def test_reliable_redelivery_after_crash():
+    """Critical messages survive a mid-broadcast crash via timeout +
+    rebroadcast against the post-eviction view (§4.4/§4.5.3)."""
+    c = build_cluster("snow", 60, 4, seed=9, enable_swim=True)
+    victim = 17
+    c.sim.at(0.0, lambda: c.net.crash(victim))
+    c.sim.at(0.5, lambda: c.broadcast_from(0, reliable=True))
+    c.sim.run(until=40.0)
+    rows = c.metrics.per_message()
+    assert rows, "message must be recorded"
+    alive = [i for i in c.fixed if c.net.alive(i) and i != 0]
+    fd = c.metrics.first_delivery[rows[0]["mid"]]
+    missing = [i for i in alive if i not in fd]
+    assert not missing, f"alive nodes missed a Reliable Message: {missing}"
+
+
+def test_join_then_leave_views_converge():
+    c = build_cluster("snow", 30, 4, seed=4, enable_anti_entropy=True)
+    from repro.core.membership import MembershipView
+    from repro.core.sim import NodeProfile
+    from repro.core.snow_node import SnowNode
+
+    def join():
+        node = SnowNode(999, c.sim, c.net, c.metrics, MembershipView([999]),
+                        4, NodeProfile(), enable_anti_entropy=True)
+        c.nodes[999] = node
+        node.join_via(c.nodes[0])
+
+    c.sim.at(1.0, join)
+    c.sim.run(until=8.0)
+    seen = sum(999 in c.nodes[i].view for i in c.fixed)
+    assert seen == len(c.fixed), "JOIN broadcast must reach every node"
+
+    c.sim.at(c.sim.now, lambda: c.nodes[999].leave(linger=2.0))
+    c.sim.run(until=c.sim.now + 10.0)
+    still = sum(999 in c.nodes[i].view for i in c.fixed)
+    assert still == 0, "LEAVE broadcast must remove the node everywhere"

@@ -1,0 +1,54 @@
+"""Algorithm 1 (FindNode) properties: exact coverage, no duplicates,
+termination, height bound (Eq. 8)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.membership import MembershipView
+from repro.core.regions import find_children, partition_balanced
+from repro.core.tree import expected_height, trace_broadcast
+
+
+@given(st.integers(1, 500), st.integers(1, 16))
+def test_partition_balanced_covers(count, parts):
+    ranges = partition_balanced(count, parts)
+    covered = []
+    for lo, hi in ranges:
+        assert lo <= hi
+        covered.extend(range(lo, hi + 1))
+    assert covered == list(range(count))
+    sizes = [hi - lo + 1 for lo, hi in ranges]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(st.integers(2, 400), st.sampled_from([2, 4, 6, 8]),
+       st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_broadcast_reaches_everyone_once(n, k, root_seed):
+    view = MembershipView(range(n))
+    root = root_seed % n
+    t = trace_broadcast(root, view, k)
+    assert t.delivered == frozenset(range(n))
+    assert t.duplicates == 0
+    assert t.sends == n - 1          # each node receives exactly once
+
+
+@given(st.integers(2, 1500), st.sampled_from([2, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_height_within_eq8(n, k):
+    view = MembershipView(range(n))
+    t = trace_broadcast(0, view, k)
+    assert t.height <= expected_height(n, k)
+
+
+def test_fanout_bounded():
+    n, k = 300, 4
+    view = MembershipView(range(n))
+    t = trace_broadcast(7, view, k)
+    for node, kids in t.children.items():
+        assert len(kids) <= k, (node, kids)
+
+
+def test_k_must_be_even():
+    view = MembershipView(range(10))
+    with pytest.raises(ValueError):
+        find_children(view, 0, None, None, 3)

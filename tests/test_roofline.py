@@ -1,0 +1,66 @@
+"""Roofline machinery: HLO parsing, tier attribution, extrapolation."""
+import pytest
+
+from repro.roofline.analysis import (RooflineTerms, _shape_bytes,
+                                     extrapolate, parse_collectives)
+from repro.roofline.tiers import group_stride_max, tier_of
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096,8192]{2,1,0}") == 16 * 4096 * 8192 * 2
+    assert _shape_bytes("f32[80]{0}") == 320
+    assert _shape_bytes("(f32[4]{0}, bf16[2,2]{1,0})") == 16 + 8
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_operands():
+    hlo = """
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(%p0), replica_groups={{0,1},{2,3}}
+  %ag = bf16[256,256]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}
+  %cp = bf16[128,256]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+"""
+    st = parse_collectives(hlo)
+    nb = 128 * 256 * 2
+    assert st.bytes_by_op["all-reduce"] == nb
+    assert st.bytes_by_op["all-gather"] == nb          # operand (shard) bytes
+    assert st.bytes_by_op["collective-permute"] == nb
+    assert st.count_by_op == {"all-reduce": 1, "all-gather": 1,
+                              "collective-permute": 1}
+
+
+def test_tier_attribution_strides():
+    # consecutive ids (model axis) → ICI
+    assert tier_of("all-reduce(...), replica_groups={{0,1,2,3}}", 256) == "ici"
+    # stride 256 (pod axis on a 512-device mesh) → DCN
+    assert tier_of("all-reduce(...), replica_groups={{0,256}}", 256) == "dcn"
+    # iota format, no transpose: consecutive → ICI
+    assert tier_of("all-reduce(...), replica_groups=[32,16]<=[512]", 256) == "ici"
+    # iota with 2D transpose: column stride = trailing reshape dim
+    assert group_stride_max("replica_groups=[16,32]<=[32,16]T(1,0)") == 16
+    # pod-axis groups {i, i+256} on the 512-device mesh → DCN
+    assert group_stride_max("replica_groups=[256,2]<=[2,256]T(1,0)") == 256
+    assert tier_of("ar, replica_groups=[256,2]<=[2,256]T(1,0)", 256) == "dcn"
+    # {i, i+2} pairs are intra-pod despite the transpose form
+    assert tier_of("ar, replica_groups=[2,256]<=[256,2]T(1,0)", 256) == "ici"
+
+
+def test_extrapolate_linear():
+    p1 = {"flops": 10.0, "bytes": 4.0}
+    p2 = {"flops": 16.0, "bytes": 6.0}
+    full = extrapolate(p1, p2, 10)
+    assert full["flops"] == 10 + 9 * 6
+    assert full["bytes"] == 4 + 9 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    t = RooflineTerms(flops=197e12, hbm_bytes=819e9 * 2, ici_bytes=0,
+                      dcn_bytes=0, chips=1, model_flops=98.5e12)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(2.0)
+    assert t.bottleneck == "memory"
+    assert t.roofline_fraction == pytest.approx(0.25)
+    t2 = RooflineTerms(flops=0, hbm_bytes=0, ici_bytes=50e9, dcn_bytes=25e9,
+                       chips=1)
+    assert t2.t_collective == pytest.approx(2.0)
+    assert t2.bottleneck == "collective"

@@ -1,0 +1,24 @@
+"""Tiny end-to-end training runs: loss decreases; restart resumes."""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models.model import LM
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_loss_decreases_and_resumes(tmp_path):
+    cfg = get_smoke_config("qwen3-0.6b")
+    lm = LM(cfg)
+    opt = adamw.AdamWConfig(lr=3e-3, weight_decay=0.0)
+    tcfg = TrainerConfig(total_steps=30, checkpoint_every=10, log_every=5,
+                         batch_size=4, seq_len=32,
+                         checkpoint_dir=str(tmp_path))
+    out = Trainer(lm, opt, tcfg).run()
+    assert out["final_loss"] < out["first_loss"], out
+    # simulate preemption: resume and continue to 40
+    tcfg2 = TrainerConfig(total_steps=40, checkpoint_every=10, log_every=5,
+                          batch_size=4, seq_len=32,
+                          checkpoint_dir=str(tmp_path))
+    out2 = Trainer(lm, opt, tcfg2).run()
+    assert out2["steps"] == 10, "must resume from step 30, not restart"
