@@ -1,0 +1,170 @@
+"""Children-computation microbenchmark: seed list-based ``find_children``
+vs the index-space rewrite, plus the whole-tree planner.
+
+The seed implementation materialized the full region arc at every hop
+(O(region) allocations, O(region) ``arc.index`` scan); the index-space
+version computes its ≤ k children in O(k log n).  Summed over a whole
+broadcast that is O(n·height) vs O(n·k·log n) work — this benchmark
+measures both over every hop of an n=1500 tree and reports the speedup
+(acceptance floor: ≥ 5×), and the planner's single-pass whole-tree
+expansion for scale context.  Results land in
+``benchmarks/results/children_micro.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.ids import NodeId
+from repro.core.membership import MembershipView
+from repro.core.planner import plan_broadcast
+from repro.core.regions import Child, find_children
+from repro.core.tree import trace_broadcast
+
+RESULTS = Path(__file__).parent / "results" / "children_micro.json"
+
+
+# --------------------------------------------------------------------- #
+# Seed (PR-0) list-based implementation, kept verbatim as the baseline   #
+# --------------------------------------------------------------------- #
+def _seed_partition_balanced(count: int, parts: int) -> List[Tuple[int, int]]:
+    parts = min(parts, count)
+    if parts <= 0 or count <= 0:
+        return []
+    cuts = [round(i * count / parts) for i in range(parts + 1)]
+    return [(cuts[i], cuts[i + 1] - 1) for i in range(parts)]
+
+
+def _seed_split_side(arc: Sequence[NodeId], kprime: int) -> List[Child]:
+    children: List[Child] = []
+    for lo, hi in _seed_partition_balanced(len(arc), kprime):
+        mid = (lo + hi + 1) // 2
+        node = arc[mid]
+        children.append(Child(node=node, lb=arc[lo], rb=arc[hi], leaf=(lo == hi)))
+    return children
+
+
+def _seed_root_halves(arc):
+    nprime = len(arc) // 2
+    return arc[:nprime], arc[nprime:]
+
+
+def _seed_arc(view: MembershipView, lb: NodeId, rb: NodeId) -> List[NodeId]:
+    """The seed's ``MembershipView.arc``: one Python-level modulo index
+    per member of the region (the current ``arc`` shim slices the cached
+    tuple instead, so it cannot stand in for the seed baseline)."""
+    members = view.members()
+    i, j = view.index_of(lb), view.index_of(rb)
+    n = len(members)
+    span = (j - i) % n
+    return [members[(i + s) % n] for s in range(span + 1)]
+
+
+def seed_find_children(view: MembershipView, self_id: NodeId,
+                       lb: Optional[NodeId], rb: Optional[NodeId],
+                       k: int) -> List[Child]:
+    """The seed's list-walking find_children: materializes the arc."""
+    kprime = k // 2
+    view.ensure(self_id)
+    if len(view) <= 1:
+        return []
+    if lb is None or rb is None:
+        arc = _seed_arc(view, view.successor(self_id), view.predecessor(self_id))
+        right_part, left_part = _seed_root_halves(arc)
+    else:
+        view.ensure(lb)
+        view.ensure(rb)
+        arc = _seed_arc(view, lb, rb)
+        if self_id in arc:
+            i = arc.index(self_id)
+            left_part, right_part = arc[:i], arc[i + 1:]
+        else:
+            right_part, left_part = _seed_root_halves(arc)
+    region = list(left_part) + list(right_part)
+    if len(region) <= k:
+        return [Child(node=m, lb=m, rb=m, leaf=True) for m in region]
+    children = _seed_split_side(right_part, kprime)
+    children += _seed_split_side(left_part, kprime)
+    return children
+
+
+# --------------------------------------------------------------------- #
+def _tree_hops(n: int, k: int):
+    """All (self, lb, rb) hop inputs of one broadcast, root included."""
+    t = trace_broadcast(0, MembershipView.from_sorted(range(n)), k)
+    plan = plan_broadcast(range(n), 0, k)
+    hops = [(0, None, None)]
+    import numpy as np
+    rlen = np.asarray(plan.region_len)
+    rstart = np.asarray(plan.region_start)
+    depth = np.asarray(plan.depth)
+    for i in range(n):
+        if depth[i] >= 1 and rlen[i] > 1:          # internal, non-root hop
+            lb = int(plan.members[int(rstart[i]) % n])
+            rb = int(plan.members[(int(rstart[i]) + int(rlen[i]) - 1) % n])
+            hops.append((int(plan.members[i]), lb, rb))
+    return hops, t.height
+
+
+def _time_impl(impl, view, hops, k, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for self_id, lb, rb in hops:
+            impl(view, self_id, lb, rb, k)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 1500, k: int = 4, reps: int = 5):
+    hops, height = _tree_hops(n, k)
+    view = MembershipView.from_sorted(range(n))
+    # cross-check first: both implementations agree on every hop
+    for self_id, lb, rb in hops:
+        a = seed_find_children(view, self_id, lb, rb, k)
+        b = find_children(view, self_id, lb, rb, k)
+        assert a == b, (self_id, lb, rb)
+
+    t_seed = _time_impl(seed_find_children, view, hops, k, reps)
+    t_new = _time_impl(find_children, view, hops, k, reps)
+    # the full-ring hop: children computation over a region of all n
+    # members — the per-broadcast origination cost the seed paid in O(n)
+    root_hop = [(0, None, None)]
+    t_seed_root = _time_impl(seed_find_children, view, root_hop, k,
+                             reps * 50)
+    t_new_root = _time_impl(find_children, view, root_hop, k, reps * 50)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        plan_broadcast(view, 0, k)
+    t_plan = (time.perf_counter() - t0) / reps
+    return {
+        "n": n, "k": k, "hops": len(hops), "height": height,
+        "seed_fullring_hop_us": t_seed_root * 1e6,
+        "index_fullring_hop_us": t_new_root * 1e6,
+        "speedup_fullring_hop": t_seed_root / t_new_root,
+        "seed_whole_tree_ms": t_seed * 1e3,
+        "index_whole_tree_ms": t_new * 1e3,
+        "planner_whole_tree_ms": t_plan * 1e3,
+        "speedup_index_vs_seed": t_seed / t_new,
+        "speedup_planner_vs_seed": t_seed / t_plan,
+    }
+
+
+def main(smoke: bool = False):
+    r = run(n=600 if smoke else 1500, reps=2 if smoke else 5)
+    if not smoke:  # smoke runs must not clobber the tracked trajectory
+        RESULTS.parent.mkdir(parents=True, exist_ok=True)
+        RESULTS.write_text(json.dumps(r, indent=2) + "\n")
+    return [
+        f"n={r['n']} k={r['k']} internal hops={r['hops']} height={r['height']}",
+        f"full-ring hop (region = n): seed {r['seed_fullring_hop_us']:7.2f} us"
+        f" -> index {r['index_fullring_hop_us']:6.2f} us"
+        f"   ({r['speedup_fullring_hop']:.1f}x)",
+        f"seed list-based   whole-tree children: {r['seed_whole_tree_ms']:8.2f} ms",
+        f"index-space       whole-tree children: {r['index_whole_tree_ms']:8.2f} ms"
+        f"   ({r['speedup_index_vs_seed']:.1f}x)",
+        f"vectorized planner whole-tree expand:  {r['planner_whole_tree_ms']:8.2f} ms"
+        f"   ({r['speedup_planner_vs_seed']:.1f}x)",
+    ] + ([] if smoke else [f"(json: {RESULTS})"])

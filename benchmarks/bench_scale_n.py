@@ -1,30 +1,95 @@
-"""Paper Figure 6A: fixed k=4, n from 100 to 1500 — LDT grows only with
-tree height (stepwise), RMR flat."""
+"""Paper Figure 6A + cloud-scale extension: fixed k=4, n from 100 up to
+50,000 — LDT grows only with tree height (stepwise), RMR flat.
+
+Two sections:
+
+* the paper's figure range (event-driven simulation, per-node views),
+* a large-scale section (n = 5k / 10k / 50k) running the stable scenario
+  over a shared frozen view (`share_view=True`) plus whole-tree planner
+  timings — the perf trajectory tracked in
+  ``benchmarks/results/scale_n.json`` from PR 1 onward.
+"""
 from __future__ import annotations
 
+import json
+import time
+from pathlib import Path
+
+from repro.core.membership import MembershipView
+from repro.core.planner import plan_broadcast
 from repro.core.scenarios import run_stable, summarize
 from repro.core.tree import expected_height, trace_broadcast
-from repro.core.membership import MembershipView
+
+RESULTS = Path(__file__).parent / "results" / "scale_n.json"
 
 
 def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
-        n_messages: int = 20, seed: int = 3):
+        n_messages: int = 20, seed: int = 3, share_view: bool = False):
     rows = []
     for n in ns:
+        t0 = time.time()
         s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
-                                 seed=seed))
-        t = trace_broadcast(0, MembershipView(range(n)), k)
+                                 seed=seed, share_view=share_view))
+        wall = time.time() - t0
+        t = trace_broadcast(0, MembershipView.from_sorted(range(n)), k)
         rows.append({"n": n, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
                      "reliability": s["reliability"], "height": t.height,
-                     "eq8_bound": expected_height(n, k)})
+                     "eq8_bound": expected_height(n, k),
+                     "n_messages": n_messages, "wall_s": wall})
     return rows
 
 
-def main():
-    out = [f"{'n':>5s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
-           f"{'height':>6s} {'eq8':>4s}"]
-    for r in run():
-        out.append(f"{r['n']:5d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
-                   f"{r['reliability']:5.3f} {r['height']:6d} "
-                   f"{r['eq8_bound']:4d}")
+def run_large(ns=(5000, 10_000, 50_000), k: int = 4, seed: int = 3):
+    """Cloud-scale stable runs: shared frozen view, few messages (the
+    metric distributions stabilize fast), planner timing per n."""
+    rows = []
+    for n in ns:
+        n_messages = 2 if n >= 50_000 else 5
+        t0 = time.time()
+        s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
+                                 seed=seed, rate_s=0.5, share_view=True))
+        wall = time.time() - t0
+        view = MembershipView.from_sorted(range(n))
+        t1 = time.time()
+        plan = plan_broadcast(view, 0, k)
+        plan_ms = (time.time() - t1) * 1000
+        rows.append({"n": n, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
+                     "reliability": s["reliability"], "height": plan.height,
+                     "eq8_bound": expected_height(n, k),
+                     "n_messages": n_messages, "wall_s": wall,
+                     "plan_ms": plan_ms})
+    return rows
+
+
+def _fmt(rows, plan_col=False):
+    hdr = (f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
+           f"{'height':>6s} {'eq8':>4s} {'wall_s':>7s}"
+           + (f" {'plan_ms':>8s}" if plan_col else ""))
+    out = [hdr]
+    for r in rows:
+        line = (f"{r['n']:6d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                f"{r['reliability']:5.3f} {r['height']:6d} "
+                f"{r['eq8_bound']:4d} {r['wall_s']:7.2f}")
+        if plan_col:
+            line += f" {r['plan_ms']:8.2f}"
+        out.append(line)
+    return out
+
+
+def main(smoke: bool = False):
+    if smoke:
+        fig = run(ns=(100, 300), n_messages=3)
+        large = run_large(ns=(2000,))
+    else:
+        fig = run()
+        large = run_large()
+    out = _fmt(fig)
+    out.append("")
+    out.append("-- large-scale (shared frozen view) --")
+    out += _fmt(large, plan_col=True)
+    if not smoke:  # smoke runs must not clobber the tracked trajectory
+        RESULTS.parent.mkdir(parents=True, exist_ok=True)
+        RESULTS.write_text(json.dumps(
+            {"figure_6a": fig, "large_scale": large}, indent=2) + "\n")
+        out.append(f"(json: {RESULTS})")
     return out

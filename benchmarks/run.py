@@ -1,28 +1,73 @@
 """Benchmark runner — one section per paper table/figure plus the
 framework benches.  Prints ``name,us_per_call,derived`` CSV lines at the
-end for machine consumption; full tables above them."""
+end for machine consumption; full tables above them.
+
+``--smoke`` runs a reduced-size pass of the sections that support it
+(CI's post-test sanity run); ``--only a,b`` restricts to named sections.
+"""
 from __future__ import annotations
 
+import argparse
+import inspect
+import sys
 import time
+from pathlib import Path
+
+# runnable as `python benchmarks/run.py` from anywhere: repo root (for
+# the benchmarks package) and src (for repro) on the path
+_ROOT = Path(__file__).resolve().parents[1]
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 
-def main() -> None:
+# single source of truth: section name -> benchmark module (imported
+# lazily so `--only` runs don't pay for jax-heavy modules)
+SECTION_MODULES = {
+    "protocols_table2": "bench_protocols",
+    "scale_n_fig6a": "bench_scale_n",
+    "fanout_k_fig6b": "bench_fanout_k",
+    "children_micro": "bench_children_micro",
+    "collectives": "bench_collectives",
+    "kernels": "bench_kernels",
+    "roofline": "bench_roofline",
+}
+SECTIONS = tuple(SECTION_MODULES)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes; skip the heavy kernel sections")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section names to run")
+    args = ap.parse_args(argv)
+
+    import importlib
+
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+    if only:
+        unknown = [s for s in only if s not in SECTIONS]
+        if unknown:
+            ap.error(f"unknown section(s) {unknown}; choose from {SECTIONS}")
+        names = [s for s in SECTIONS if s in only]
+    elif args.smoke:
+        # protocol-layer sections only; the jax kernel/roofline benches
+        # have their own timings and dominate smoke wall-time
+        names = ["scale_n_fig6a", "children_micro"]
+    else:
+        names = list(SECTIONS)
+
     sections = []
-    from benchmarks import (bench_collectives, bench_fanout_k,
-                            bench_kernels, bench_protocols,
-                            bench_roofline, bench_scale_n)
-    for name, mod in (
-        ("protocols_table2", bench_protocols),
-        ("scale_n_fig6a", bench_scale_n),
-        ("fanout_k_fig6b", bench_fanout_k),
-        ("collectives", bench_collectives),
-        ("kernels", bench_kernels),
-        ("roofline", bench_roofline),
-    ):
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{SECTION_MODULES[name]}")
         t0 = time.time()
         print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
         try:
-            for line in mod.main():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+                kwargs["smoke"] = True
+            for line in mod.main(**kwargs):
                 print(line)
             sections.append((name, (time.time() - t0) * 1e6, "ok"))
         except Exception as e:  # noqa: BLE001
@@ -32,6 +77,8 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in sections:
         print(f"{name},{us:.0f},{derived}")
+    if any(d.startswith("fail") for _, _, d in sections):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 """Map Snow's broadcast trees onto device-axis ``ppermute`` schedules.
 
 The *same protocol code* that routes messages in the control plane
-(:mod:`repro.core`) decides which device talks to which here: we trace a
-Snow broadcast over a ring of device indices and compile the
+(:mod:`repro.core`) decides which device talks to which here: we plan a
+Snow broadcast over a ring of device indices with the vectorized
+whole-tree planner (:mod:`repro.core.planner`) and compile the
 first-delivery edges into rounds of disjoint (src → dst) pairs.  Each
 round is one ``lax.ppermute``; a parent with k children occupies k
 consecutive rounds (one outgoing message per device per round — the
@@ -19,23 +20,24 @@ import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.coloring import PRIMARY, SECONDARY
-from repro.core.membership import MembershipView
-from repro.core.tree import Trace, trace_broadcast, trace_two_trees
+from repro.core.planner import TreePlan, plan_broadcast, plan_two_trees
+from repro.core.tree import Trace
 
 Round = List[Tuple[int, int]]
 
 
-def _schedule_from_trace(t: Trace) -> List[Round]:
+def _schedule_from_children(root: int, children: Dict[int, List[int]]
+                            ) -> List[Round]:
     """Compile first-delivery edges into ppermute rounds.
 
     A node may send in round r only if it received in some round < r;
     each node sends at most one message per round, and each destination
     receives exactly once overall.
     """
-    recv_round: Dict[int, int] = {t.root: -1}
-    pending = {n: list(t.children.get(n, [])) for n in t.children}
+    recv_round: Dict[int, int] = {root: -1}
+    pending = {n: list(kids) for n, kids in children.items()}
     rounds: List[Round] = []
-    done = {t.root}
+    done = {root}
     remaining = sum(len(v) for v in pending.values())
     r = 0
     while remaining > 0:
@@ -60,13 +62,24 @@ def _schedule_from_trace(t: Trace) -> List[Round]:
     return rounds
 
 
+def _schedule_from_trace(t: Trace) -> List[Round]:
+    """Compatibility wrapper for callers holding a :class:`Trace`."""
+    return _schedule_from_children(t.root, t.children)
+
+
+def _schedule_from_plan(p: TreePlan) -> List[Round]:
+    """Planner fast path: children lists come straight from the plan's
+    (parent, depth, slot) arrays — device ids equal ring indexes on a
+    dense ``range(axis_size)`` ring, so no id translation is needed."""
+    return _schedule_from_children(p.root, p.children_lists())
+
+
 @functools.lru_cache(maxsize=256)
 def broadcast_schedule(axis_size: int, root: int = 0, k: int = 2
                        ) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
     """Standard Snow tree → tuple of ppermute rounds (hashable/cacheable)."""
-    view = MembershipView(range(axis_size))
-    t = trace_broadcast(root, view, k)
-    return tuple(tuple(rnd) for rnd in _schedule_from_trace(t))
+    p = plan_broadcast(range(axis_size), root, k)
+    return tuple(tuple(rnd) for rnd in _schedule_from_plan(p))
 
 
 @functools.lru_cache(maxsize=256)
@@ -82,10 +95,9 @@ def reduce_schedule(axis_size: int, root: int = 0, k: int = 2
 @functools.lru_cache(maxsize=256)
 def two_tree_schedules(axis_size: int, root: int = 0, k: int = 2):
     """(primary, secondary) schedules of the Coloring double tree."""
-    view = MembershipView(range(axis_size))
-    p, s = trace_two_trees(root, view, k)
-    return (tuple(tuple(r) for r in _schedule_from_trace(p)),
-            tuple(tuple(r) for r in _schedule_from_trace(s)))
+    p, s = plan_two_trees(range(axis_size), root, k)
+    return (tuple(tuple(r) for r in _schedule_from_plan(p)),
+            tuple(tuple(r) for r in _schedule_from_plan(s)))
 
 
 def schedule_depth(axis_size: int, k: int, root: int = 0) -> int:

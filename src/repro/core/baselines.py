@@ -49,7 +49,9 @@ class GossipNode(NodeBase):
     def _fanout(self, msg: GossipData, exclude: Optional[NodeId],
                 immediate: bool = False) -> None:
         def do_send() -> None:
-            cands = [m for m in self.view if m != self.id and m != exclude]
+            # cached members tuple: one filtered copy, no per-call iterator
+            cands = [m for m in self.view.members()
+                     if m != self.id and m != exclude]
             targets = self.rng.sample(cands, min(self.k, len(cands)))
             for t in targets:
                 self.send(t, msg)
@@ -66,7 +68,7 @@ class FloodingNode(GossipNode):
     def _fanout(self, msg: GossipData, exclude: Optional[NodeId],
                 immediate: bool = False) -> None:
         def do_send() -> None:
-            for t in self.view:
+            for t in self.view.members():
                 if t != self.id and t != exclude:
                     self.send(t, msg)
         if immediate:

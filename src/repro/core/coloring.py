@@ -13,6 +13,13 @@ every node owns two disjoint delivery paths (Appendix D).
 The initiator sends k+1 messages: its k primary children plus the
 secondary root.
 
+Like :mod:`repro.core.regions`, everything is **index-space**: the color
+of the member at ring index ``j`` is ``((j - i0) % n) % 2``, so the
+on-color members of a side form (at most two, see the odd-``n`` seam
+below) arithmetic progressions of stride 2 — counting them and selecting
+the q-th one is O(1) arithmetic, no arc materialization and no per-member
+color scan.
+
 With *odd* ``n`` the parity alternation has a seam at the ring wrap (the
 paper implicitly assumes clean alternation); delivery is still guaranteed
 — only strict path-disjointness can degrade at the seam node.  The
@@ -20,11 +27,12 @@ production benchmarks use even ``n`` (as does the paper: n = 500/600).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Tuple
 
 from .ids import NodeId
 from .membership import MembershipView
-from .regions import Child, midpoint_offset, partition_balanced, root_halves
+from .regions import (Child, Side, direct_delivery, midpoint_offset,
+                      partition_balanced, region_sides, root_split)
 
 PRIMARY = 0
 SECONDARY = 1
@@ -54,15 +62,45 @@ def tree_color(tree: int) -> int:
     return 0 if tree == PRIMARY else 1
 
 
+def oncolor_positions(n: int, start: int, length: int, i0: int, want: int
+                      ) -> Tuple[int, Callable[[int], int]]:
+    """On-color offsets of the side ``(start, length)`` as arithmetic.
+
+    The member at side offset ``t`` has ring distance ``(d0 + t) % n``
+    from the initiator (``d0 = (start - i0) % n``), so its color is the
+    parity of ``d0 + t`` until the ring wraps at ``t_w = n - d0`` and the
+    parity of ``d0 + t - n`` after (for even ``n`` the two agree and the
+    progression is seamless).  Returns ``(count, at)`` where ``at(q)`` is
+    the side offset of the q-th on-color member — both O(1), the
+    index-space replacement for materializing the arc and color-scanning
+    it.
+    """
+    d0 = (start - i0) % n
+    tw = n - d0                       # first wrapped offset (d0 >= 1 ⇒ tw <= n)
+    len_a = min(length, tw)
+    a0 = (want - d0) % 2
+    cnt_a = max(0, (len_a - a0 + 1) // 2)
+    b_par = (want - d0 + n) % 2
+    b0 = tw + ((b_par - tw) % 2)
+    cnt_b = max(0, (length - b0 + 1) // 2)
+
+    def at(q: int) -> int:
+        if q < cnt_a:
+            return a0 + 2 * q
+        return b0 + 2 * (q - cnt_a)
+
+    return cnt_a + cnt_b, at
+
+
 def _split_side_colored(
-    arc: Sequence[NodeId],
+    view: MembershipView,
+    side: Side,
     kprime: int,
     want: int,
-    view: MembershipView,
-    initiator: NodeId,
+    i0: int,
 ) -> List[Child]:
-    """Divide one side's arc into sub-regions whose midpoints have the
-    tree's internal color.  Sub-region spans tile the whole arc so that
+    """Divide one side into sub-regions whose midpoints have the tree's
+    internal color.  Sub-region spans tile the whole side so that
     off-color nodes remain covered (they are delivered deeper as leaves).
 
     If the side has no on-color node at all, every node in the side is
@@ -71,27 +109,31 @@ def _split_side_colored(
     within its assigned region, calculated separately for the left and
     right regions").
     """
-    if not arc:
+    s0, length = side
+    if length == 0:
         return []
-    pref = [i for i, m in enumerate(arc) if color_of(view, initiator, m) == want]
-    if not pref:
-        return [Child(node=m, lb=m, rb=m, leaf=True) for m in arc]
+    cnt, at = oncolor_positions(len(view), s0, length, i0, want)
+    if cnt == 0:
+        return [Child(m, m, m, True) for m in view.slice_ring(s0, length)]
 
-    children: List[Child] = []
-    groups = partition_balanced(len(pref), kprime)
+    groups = partition_balanced(cnt, kprime)
     # Spans between consecutive groups are cut halfway between the last
     # on-color node of one group and the first of the next; the first/last
-    # spans extend to the arc edges, so the spans tile the arc exactly.
+    # spans extend to the side edges, so the spans tile the side exactly.
     starts, ends = [], []
     for gi, (lo, hi) in enumerate(groups):
         starts.append(0 if gi == 0 else ends[-1] + 1)
         if gi == len(groups) - 1:
-            ends.append(len(arc) - 1)
+            ends.append(length - 1)
         else:
-            ends.append((pref[hi] + pref[groups[gi + 1][0]]) // 2)
+            ends.append((at(hi) + at(groups[gi + 1][0])) // 2)
+    mem = view.members()
+    n = len(mem)
+    children: List[Child] = []
     for (lo, hi), s, e in zip(groups, starts, ends):
-        mid = arc[pref[midpoint_offset(lo, hi)]]
-        children.append(Child(node=mid, lb=arc[s], rb=arc[e], leaf=(s == e)))
+        mid = at(midpoint_offset(lo, hi))
+        children.append(Child(mem[(s0 + mid) % n], mem[(s0 + s) % n],
+                              mem[(s0 + e) % n], s == e))
     return children
 
 
@@ -120,8 +162,8 @@ def find_children_colored(
         return []
 
     if lb is None or rb is None:
-        arc = view.arc(view.successor(self_id), view.predecessor(self_id))
-        right_part, left_part = root_halves(arc)
+        i = view.index_of(self_id)
+        right, left = root_split(i + 1, len(view) - 1)
     elif (RECENTER_SECONDARY and tree == SECONDARY and rb == self_id
           and view.predecessor(initiator) == self_id
           and lb == view.successor(initiator)):
@@ -131,28 +173,23 @@ def find_children_colored(
         # midpoint between the left and right regions" — re-center on the
         # reduced ring so the secondary tree's height matches the
         # primary's ("the height of the constructed Secondary Tree is
-        # similar to that of the Primary Tree").
-        arc = [m for m in view.arc(view.successor(self_id),
-                                   view.predecessor(self_id))
-               if m != initiator]
-        right_part, left_part = root_halves(arc)
+        # similar to that of the Primary Tree").  The arc of everyone-but-
+        # self starts at our successor — the initiator — so dropping the
+        # initiator shifts the start by one more.
+        i = view.index_of(self_id)
+        right, left = root_split(i + 2, len(view) - 2)
     else:
         view.ensure(lb)
         view.ensure(rb)
-        arc = view.arc(lb, rb)
-        if self_id in arc:
-            i = arc.index(self_id)
-            left_part, right_part = arc[:i], arc[i + 1:]
-        else:
-            right_part, left_part = root_halves(arc)
+        left, right = region_sides(view, self_id, lb, rb)
 
-    region = list(left_part) + list(right_part)
-    if len(region) <= k:
-        return [Child(node=m, lb=m, rb=m, leaf=True) for m in region]
+    if left[1] + right[1] <= k:
+        return direct_delivery(view, left, right)
 
     want = tree_color(tree)
-    children = _split_side_colored(right_part, kprime, want, view, initiator)
-    children += _split_side_colored(left_part, kprime, want, view, initiator)
+    i0 = view.index_of(initiator)
+    children = _split_side_colored(view, right, kprime, want, i0)
+    children += _split_side_colored(view, left, kprime, want, i0)
     return children
 
 

@@ -5,6 +5,11 @@ ids; the array is read as a logical ring (``N_n == N_0``).  Views may
 diverge across nodes during churn — all region math below is therefore
 expressed *per view*.
 
+Regions are handled in **index space**: a region is a ``(start_index,
+length)`` pair over the sorted array (see DESIGN.md), so the hot region
+math in :mod:`repro.core.regions` never materializes member lists.
+:meth:`MembershipView.arc` survives as a compatibility shim.
+
 Tombstones: a node removed via LEAVE/EVICT is remembered so that
 anti-entropy cannot resurrect it (the paper relies on multi-minute linger
 windows; a tombstone set is the standard mechanical equivalent).
@@ -12,7 +17,7 @@ windows; a tombstone set is the standard mechanical equivalent).
 from __future__ import annotations
 
 import bisect
-from typing import Iterable, Iterator, List, Optional, Sequence
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from .ids import NodeId
 
@@ -20,11 +25,30 @@ from .ids import NodeId
 class MembershipView:
     """A sorted, ring-ordered membership list for one node."""
 
-    __slots__ = ("_members", "_tombstones")
+    __slots__ = ("_members", "_tombstones", "_cached_tuple", "_cached_array")
 
     def __init__(self, members: Iterable[NodeId] = (), tombstones: Iterable[NodeId] = ()):
         self._members: List[NodeId] = sorted(set(members))
         self._tombstones = set(tombstones)
+        self._cached_tuple: Optional[Tuple[NodeId, ...]] = None
+        self._cached_array = None
+
+    @classmethod
+    def from_sorted(cls, members: Sequence[NodeId],
+                    tombstones: Iterable[NodeId] = ()) -> "MembershipView":
+        """Build from an already-sorted, duplicate-free sequence without
+        re-sorting — O(n) instead of O(n log n); the difference matters
+        when instantiating tens of thousands of per-node views."""
+        v = cls.__new__(cls)
+        v._members = list(members)
+        v._tombstones = set(tombstones)
+        v._cached_tuple = None
+        v._cached_array = None
+        return v
+
+    def _invalidate(self) -> None:
+        self._cached_tuple = None
+        self._cached_array = None
 
     # -- basic container ops -------------------------------------------------
     def __len__(self) -> int:
@@ -37,14 +61,25 @@ class MembershipView:
         i = bisect.bisect_left(self._members, node)
         return i < len(self._members) and self._members[i] == node
 
-    def members(self) -> Sequence[NodeId]:
-        return tuple(self._members)
+    def members(self) -> Tuple[NodeId, ...]:
+        """The sorted members as a cached tuple (no per-call copy)."""
+        if self._cached_tuple is None:
+            self._cached_tuple = tuple(self._members)
+        return self._cached_tuple
+
+    def members_array(self):
+        """The sorted members as a cached NumPy array (planner input)."""
+        import numpy as np
+
+        if self._cached_array is None:
+            self._cached_array = np.asarray(self._members)
+        return self._cached_array
 
     def tombstones(self) -> frozenset:
         return frozenset(self._tombstones)
 
     def copy(self) -> "MembershipView":
-        return MembershipView(self._members, self._tombstones)
+        return MembershipView.from_sorted(self._members, self._tombstones)
 
     # -- mutation -------------------------------------------------------------
     def add(self, node: NodeId) -> bool:
@@ -55,6 +90,7 @@ class MembershipView:
         if i < len(self._members) and self._members[i] == node:
             return False
         self._members.insert(i, node)
+        self._invalidate()
         return True
 
     def ensure(self, node: NodeId) -> None:
@@ -66,11 +102,13 @@ class MembershipView:
         i = bisect.bisect_left(self._members, node)
         if i >= len(self._members) or self._members[i] != node:
             self._members.insert(i, node)
+            self._invalidate()
 
     def remove(self, node: NodeId, tombstone: bool = True) -> bool:
         i = bisect.bisect_left(self._members, node)
         if i < len(self._members) and self._members[i] == node:
             del self._members[i]
+            self._invalidate()
             if tombstone:
                 self._tombstones.add(node)
             return True
@@ -84,6 +122,7 @@ class MembershipView:
         self._tombstones |= other._tombstones
         merged = set(self._members) | set(other._members)
         self._members = sorted(m for m in merged if m not in self._tombstones)
+        self._invalidate()
 
     # -- ring arithmetic -------------------------------------------------------
     def index_of(self, node: NodeId) -> int:
@@ -105,13 +144,34 @@ class MembershipView:
         """Clockwise hops from src to dst."""
         return (self.index_of(dst) - self.index_of(src)) % len(self._members)
 
+    # -- index-space regions ---------------------------------------------------
+    def arc_bounds(self, lb: NodeId, rb: NodeId) -> Tuple[int, int]:
+        """The region ``[lb, rb]`` as an index-space ``(start, length)``
+        pair: ``length`` members starting at ring index ``start``, walking
+        clockwise.  O(log n); nothing is materialized."""
+        i, j = self.index_of(lb), self.index_of(rb)
+        return i, (j - i) % len(self._members) + 1
+
+    def slice_ring(self, start: int, length: int) -> Tuple[NodeId, ...]:
+        """``length`` members clockwise from ring index ``start`` as a
+        tuple — at most two C-level slices of the cached member tuple
+        (one when the run does not wrap)."""
+        mem = self.members()
+        n = len(mem)
+        s = start % n
+        e = s + length
+        if e <= n:
+            return mem[s:e]
+        return mem[s:] + mem[:e - n]
+
     def arc(self, lb: NodeId, rb: NodeId) -> List[NodeId]:
         """All members from ``lb`` to ``rb`` inclusive, walking clockwise.
 
         ``lb == rb`` yields the single node.  The arc never silently skips
         members: it is exactly the region ``[lb, rb]`` of the paper.
+
+        Compatibility shim: the protocol hot path works on
+        :meth:`arc_bounds` offsets and never materializes arcs.
         """
-        i, j = self.index_of(lb), self.index_of(rb)
-        n = len(self._members)
-        span = (j - i) % n
-        return [self._members[(i + s) % n] for s in range(span + 1)]
+        start, length = self.arc_bounds(lb, rb)
+        return list(self.slice_ring(start, length))

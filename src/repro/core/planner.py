@@ -1,0 +1,404 @@
+"""Array-native whole-tree dissemination planner.
+
+Snow never *stores* a tree — every hop recomputes its children from its
+local view (§4.3).  But for a **frozen** view (a stable cluster, a
+device mesh, an analysis snapshot) the entire dissemination tree is a
+pure function of ``(members, root, k)``, and because sibling regions are
+disjoint ``(start, length)`` index ranges, a whole *level* of the tree
+can be expanded in one batched array operation.  This module does
+exactly that: level-synchronous expansion where each level is O(1)
+NumPy/JAX calls over a frontier of regions, producing parent / depth /
+region arrays for every node in ~``log_k n`` batched steps.
+
+The planner is the scale path: :mod:`repro.core.tree` routes uniform
+single-view traces through it, :mod:`repro.collectives.topology` builds
+``ppermute`` schedules from its arrays, and the benchmarks use it for
+whole-tree timings at n = 50k+.  Per-hop semantics are defined by
+:func:`repro.core.regions.find_children` /
+:func:`repro.core.coloring.find_children_colored`; the planner is
+verified equivalent to the recursion node-for-node (tests/test_planner.py).
+
+Backends: ``backend="numpy"`` (default) or ``backend="jax"`` —the same
+code path runs on ``jax.numpy``, leaving the plan arrays on device for
+collective schedule construction.  The loop over levels stays on the
+host; each level's math is pure array ops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .ids import NodeId
+from .membership import MembershipView
+
+PRIMARY = 0
+SECONDARY = 1
+
+_MAX_LEVELS = 128          # >> any real height (Eq. 8: ~log_k n + 1)
+
+
+def _get_xp(backend: Union[str, Any]):
+    if backend == "numpy" or backend is np:
+        return np
+    if backend == "jax":
+        import jax.numpy as jnp
+        return jnp
+    return backend
+
+
+def _scatter(xp, arr, idx, vals):
+    if xp is np:
+        arr[idx] = vals
+        return arr
+    return arr.at[idx].set(vals)
+
+
+@dataclass(frozen=True)
+class TreePlan:
+    """The complete dissemination tree of one broadcast over a frozen view.
+
+    All per-node arrays are indexed by **ring index** (position in the
+    sorted member array).  ``parent[root] == -1``; ``depth`` is -1 for
+    nodes the tree does not reach (cannot happen for a uniform view).
+    ``region_len == 1`` marks a leaf assignment (``lb == rb == node``).
+    ``slot`` is the emission order among siblings, so the exact child
+    ordering of the per-hop recursion can be reconstructed.
+    """
+
+    members: np.ndarray          #: (n,) sorted node ids
+    root: int                    #: ring index of the tree root
+    parent: Any                  #: (n,) ring index of parent; -1 for the root
+    depth: Any                   #: (n,) hop count from the root
+    region_start: Any            #: (n,) ring index of the assigned region
+    region_len: Any              #: (n,) assigned region length (1 ⇒ leaf)
+    slot: Any                    #: (n,) emission order among siblings
+    k: int
+    tree: Optional[int] = None   #: None=standard, 0=primary, 1=secondary
+
+    def __len__(self) -> int:
+        return int(self.members.shape[0])
+
+    @property
+    def n(self) -> int:
+        return len(self)
+
+    @property
+    def height(self) -> int:
+        d = np.asarray(self.depth)
+        return int(d.max()) if d.size else 0
+
+    @property
+    def leaf_mask(self):
+        return np.asarray(self.region_len) == 1
+
+    def node_id(self, idx: int) -> NodeId:
+        return self.members[int(idx) % self.n].item()
+
+    def region_bounds(self, idx: int) -> Tuple[NodeId, NodeId]:
+        """The ``(lb, rb)`` node-id boundaries assigned to ring index ``idx``."""
+        s = int(np.asarray(self.region_start)[idx])
+        ln = int(np.asarray(self.region_len)[idx])
+        return self.node_id(s), self.node_id(s + ln - 1)
+
+    def children_lists(self) -> Dict[int, List[int]]:
+        """Ring-index children of every internal node, in emission order."""
+        parent = np.asarray(self.parent)
+        depth = np.asarray(self.depth)
+        slot = np.asarray(self.slot)
+        reached = np.nonzero((depth >= 1) & (parent >= 0))[0]
+        order = reached[np.lexsort((slot[reached], depth[reached]))]
+        out: Dict[int, List[int]] = {}
+        for idx in order.tolist():
+            out.setdefault(int(parent[idx]), []).append(idx)
+        return out
+
+    def to_trace(self):
+        """Compatibility bridge to :class:`repro.core.tree.Trace`."""
+        from .tree import Trace
+
+        members = self.members
+        parent = np.asarray(self.parent)
+        depth = np.asarray(self.depth)
+        slot = np.asarray(self.slot)
+        t = Trace(root=members[self.root].item())
+        reached = np.nonzero(depth >= 0)[0]
+        order = reached[np.lexsort((slot[reached], depth[reached]))]
+        for idx in order.tolist():
+            nid = members[idx].item()
+            t.depth[nid] = int(depth[idx])
+            p = int(parent[idx])
+            if p < 0:
+                t.parent[nid] = None
+            else:
+                pid = members[p].item()
+                t.parent[nid] = pid
+                t.children.setdefault(pid, []).append(nid)
+                t.sends += 1
+        return t
+
+
+@dataclass
+class _Records:
+    """Per-level child emissions, concatenated at the end of planning."""
+
+    idx: List[Any] = field(default_factory=list)       # child ring index
+    parent: List[Any] = field(default_factory=list)
+    depth: List[Any] = field(default_factory=list)
+    start: List[Any] = field(default_factory=list)     # assigned region
+    length: List[Any] = field(default_factory=list)
+    slot: List[Any] = field(default_factory=list)
+
+    def add(self, xp, idx, parent, depth, start, length, slot):
+        self.idx.append(idx)
+        self.parent.append(parent)
+        self.depth.append(xp.full(idx.shape, depth, dtype=idx.dtype))
+        self.start.append(start)
+        self.length.append(length)
+        self.slot.append(slot)
+
+
+def _split_sides_plain(xp, start, length, kprime, slot_base):
+    """Balanced split of one side for a whole frontier at once.
+
+    Vectorized :func:`repro.core.regions.split_side`: ``(R,)`` side
+    arrays → ``(R, k')`` child region arrays + validity mask.  ``rint``
+    is round-half-even, matching Python's ``round`` in
+    ``partition_balanced`` bit for bit.
+    """
+    parts = xp.minimum(kprime, length)
+    J = xp.arange(kprime)[None, :]
+    valid = J < parts[:, None]
+    denom = xp.maximum(parts, 1)[:, None]
+    lo = xp.rint(J * length[:, None] / denom).astype(start.dtype)
+    hi = xp.rint((J + 1) * length[:, None] / denom).astype(start.dtype) - 1
+    mid = (lo + hi + 1) // 2          # midpoint_offset: right-of-centre
+    cstart = start[:, None] + lo
+    clen = hi - lo + 1
+    selfoff = mid - lo
+    slot = slot_base + J
+    return cstart, clen, selfoff, slot, valid
+
+
+def _split_sides_colored(xp, n, start, length, kprime, want, i0, slot_base):
+    """Vectorized :func:`repro.core.coloring._split_side_colored`.
+
+    On-color side offsets form two stride-2 arithmetic progressions —
+    one before the ring-wrap seam at ``t_w = n - d0``, one after (they
+    fuse into a single progression for even ``n``) — so counting and
+    selecting the q-th on-color member is pure arithmetic; see
+    :func:`repro.core.coloring.oncolor_positions`.
+
+    Returns the split-children tuple plus a row mask of sides that have
+    no on-color member at all (handled by the caller as direct leaves).
+    """
+    d0 = (start - i0) % n
+    tw = n - d0
+    len_a = xp.minimum(length, tw)
+    a0 = (want - d0) % 2
+    cnt_a = xp.maximum((len_a - a0 + 1) // 2, 0)
+    b_par = (want - d0 + n) % 2
+    b0 = tw + ((b_par - tw) % 2)
+    cnt_b = xp.maximum((length - b0 + 1) // 2, 0)
+    cnt = cnt_a + cnt_b
+
+    def at(q):
+        return xp.where(q < cnt_a[:, None], a0[:, None] + 2 * q,
+                        b0[:, None] + 2 * (q - cnt_a[:, None]))
+
+    parts = xp.minimum(kprime, cnt)
+    J = xp.arange(kprime)[None, :]
+    valid = (J < parts[:, None]) & (length[:, None] > 0)
+    denom = xp.maximum(parts, 1)[:, None]
+    lo = xp.rint(J * cnt[:, None] / denom).astype(start.dtype)
+    hi = xp.rint((J + 1) * cnt[:, None] / denom).astype(start.dtype) - 1
+    mid_off = at((lo + hi + 1) // 2)
+    # Group spans tile the side: cut halfway between the last on-color
+    # member of one group and the first of the next; edge spans extend to
+    # the side boundaries.
+    at_hi = at(hi)
+    at_next_lo = at(xp.roll(lo, -1, axis=1))
+    is_last = (J + 1) >= parts[:, None]
+    end = xp.where(is_last, length[:, None] - 1, (at_hi + at_next_lo) // 2)
+    prev_end = xp.roll(end, 1, axis=1)
+    sstart = xp.where(J == 0, xp.zeros_like(end), prev_end + 1)
+
+    cstart = start[:, None] + sstart
+    clen = end - sstart + 1
+    selfoff = mid_off - sstart
+    slot = slot_base + J
+    allleaf = (cnt == 0) & (length > 0)
+    return cstart, clen, selfoff, slot, valid, allleaf
+
+
+def _emit_leaf_run(xp, rec, n, depth, node, start, length, slot0):
+    """Record every member of ``(start, length)`` runs as leaf children
+    of ``node`` — the ≤ k direct-delivery rows and the no-on-color sides."""
+    if int(length.shape[0]) == 0:
+        return
+    cap = int(length.max()) if int(length.shape[0]) else 0
+    if cap <= 0:
+        return
+    T = xp.arange(cap)[None, :]
+    valid = T < length[:, None]
+    idx = (start[:, None] + T)[valid] % n
+    rec.add(xp, idx,
+            xp.broadcast_to(node[:, None], (node.shape[0], cap))[valid],
+            depth, idx, xp.ones_like(idx), (slot0[:, None] + T)[valid])
+
+
+def _expand(xp, n, k, frontier, depth, rec, want=None, i0=None):
+    """One synchronous level: expand every frontier region at once.
+
+    ``frontier`` is ``(node, Ls, Ll, Rs, Rl)`` — each region as its two
+    index-space sides around the owning node.  Returns the next frontier.
+    """
+    node, Ls, Ll, Rs, Rl = frontier
+    kprime = k // 2
+    m = Ll + Rl
+
+    # -- direct delivery rows (Alg. 1 lines 4-12): whole region ≤ k ------
+    dmask = (m <= k) & (m > 0)
+    if bool(dmask.any()):
+        # unified left-then-right run; one batched call over both sides,
+        # slot offsets keep the recursion's region order
+        dnode, dLs, dLl, dRs, dRl = (a[dmask] for a in (node, Ls, Ll, Rs, Rl))
+        _emit_leaf_run(xp, rec, n, depth + 1,
+                       xp.concatenate((dnode, dnode)),
+                       xp.concatenate((dLs, dRs)),
+                       xp.concatenate((dLl, dRl)),
+                       xp.concatenate((xp.zeros_like(dLl), dLl)))
+
+    # -- split rows: balanced (or colored) side splitting -----------------
+    smask = m > k
+    if not bool(smask.any()):
+        empty = node[:0]
+        return (empty, empty, empty, empty, empty)
+    snode, sLs, sLl, sRs, sRl = (a[smask] for a in (node, Ls, Ll, Rs, Rl))
+    # both sides in one batched call: right rows fan out with slot base 0,
+    # left rows with base k (not k', so no-on-color leaf runs can never
+    # collide with the other side's slots)
+    pnode = xp.concatenate((snode, snode))
+    side_start = xp.concatenate((sRs, sLs))
+    side_len = xp.concatenate((sRl, sLl))
+    slot_base = xp.concatenate(
+        (xp.zeros_like(sRl), xp.full(sLl.shape, k, dtype=sLl.dtype)))[:, None]
+    if want is None:
+        cstart, clen, selfoff, slot, valid = _split_sides_plain(
+            xp, side_start, side_len, kprime, slot_base)
+    else:
+        cstart, clen, selfoff, slot, valid, allleaf = _split_sides_colored(
+            xp, n, side_start, side_len, kprime, want, i0, slot_base)
+        if bool(allleaf.any()):
+            _emit_leaf_run(xp, rec, n, depth + 1, pnode[allleaf],
+                           side_start[allleaf], side_len[allleaf],
+                           slot_base[allleaf, 0])
+    cidx = (cstart + selfoff)[valid] % n
+    cstart_v, clen_v, selfoff_v = cstart[valid], clen[valid], selfoff[valid]
+    rec.add(xp, cidx,
+            xp.broadcast_to(pnode[:, None], valid.shape)[valid],
+            depth + 1, cstart_v % n, clen_v, slot[valid])
+    recurse = clen_v > 1
+    node2 = cidx[recurse]
+    start2 = cstart_v[recurse] % n
+    off2 = selfoff_v[recurse]
+    len2 = clen_v[recurse]
+    return (node2, start2, off2, start2 + off2 + 1, len2 - off2 - 1)
+
+
+def _plan(members: np.ndarray, root_idx: int, k: int, backend,
+          tree: Optional[int]) -> TreePlan:
+    if k < 2 or k % 2 != 0:
+        raise ValueError(f"fan-out k must be a positive multiple of 2, got {k}")
+    xp = _get_xp(backend)
+    n = int(members.shape[0])
+    i0 = root_idx
+    rec = _Records()
+    one = lambda v: xp.asarray([v])  # noqa: E731
+
+    # Bootstrap: the tree root's region is everyone else, centre-split
+    # (Eq. 1-3); the secondary root owns the same region from its edge.
+    if tree == SECONDARY:
+        if n < 2:
+            frontier = None
+        else:
+            sroot = (i0 - 1) % n
+            rec.add(xp, one(sroot), one(i0), 1, one((i0 + 1) % n),
+                    one(n - 1), one(0))
+            frontier = (one(sroot), one((i0 + 1) % n), one(n - 2),
+                        one(i0), one(0))
+            depth = 1
+    if tree != SECONDARY:
+        arclen = n - 1
+        nprime = arclen // 2
+        frontier = (one(i0), one((i0 + 1 + nprime) % n), one(arclen - nprime),
+                    one((i0 + 1) % n), one(nprime))
+        depth = 0
+    want = None if tree is None else (0 if tree == PRIMARY else 1)
+
+    if frontier is not None:
+        for _ in range(_MAX_LEVELS):
+            if int(frontier[0].shape[0]) == 0:
+                break
+            frontier = _expand(xp, n, k, frontier, depth, rec,
+                               want=want, i0=i0)
+            depth += 1
+        else:  # pragma: no cover - structurally impossible
+            raise RuntimeError("planner did not converge")
+
+    itype = one(0).dtype
+    parent = xp.full((n,), -1, dtype=itype)
+    depths = xp.full((n,), -1, dtype=itype)
+    rstart = xp.full((n,), 0, dtype=itype)
+    rlen = xp.full((n,), 0, dtype=itype)
+    slots = xp.full((n,), 0, dtype=itype)
+    # the root owns the full ring
+    parent = _scatter(xp, parent, i0, -1)
+    depths = _scatter(xp, depths, i0, 0)
+    rstart = _scatter(xp, rstart, i0, i0)
+    rlen = _scatter(xp, rlen, i0, n)
+    if rec.idx:
+        idx = xp.concatenate(rec.idx)
+        parent = _scatter(xp, parent, idx, xp.concatenate(rec.parent))
+        depths = _scatter(xp, depths, idx, xp.concatenate(rec.depth))
+        rstart = _scatter(xp, rstart, idx, xp.concatenate(rec.start))
+        rlen = _scatter(xp, rlen, idx, xp.concatenate(rec.length))
+        slots = _scatter(xp, slots, idx, xp.concatenate(rec.slot))
+    return TreePlan(members=members, root=root_idx, parent=parent,
+                    depth=depths, region_start=rstart, region_len=rlen,
+                    slot=slots, k=k, tree=tree)
+
+
+def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId
+             ) -> Tuple[np.ndarray, int]:
+    if isinstance(view, MembershipView):
+        members = view.members_array()
+    else:
+        members = np.asarray(sorted(set(view)))
+    i = int(np.searchsorted(members, root))
+    if i >= members.shape[0] or members[i] != root:
+        raise KeyError(root)
+    return members, i
+
+
+def plan_broadcast(view: Union[MembershipView, Sequence[NodeId]],
+                   root: NodeId, k: int, backend="numpy") -> TreePlan:
+    """Whole-tree plan of a standard Snow broadcast over a frozen view."""
+    members, root_idx = _resolve(view, root)
+    return _plan(members, root_idx, k, backend, tree=None)
+
+
+def plan_colored(view: Union[MembershipView, Sequence[NodeId]],
+                 root: NodeId, k: int, tree: int, backend="numpy") -> TreePlan:
+    """Whole-tree plan of one Coloring tree (§4.6)."""
+    members, root_idx = _resolve(view, root)
+    return _plan(members, root_idx, k, backend, tree=tree)
+
+
+def plan_two_trees(view: Union[MembershipView, Sequence[NodeId]],
+                   root: NodeId, k: int, backend="numpy"
+                   ) -> Tuple[TreePlan, TreePlan]:
+    """(primary, secondary) plans of the Coloring double tree."""
+    return (plan_colored(view, root, k, PRIMARY, backend),
+            plan_colored(view, root, k, SECONDARY, backend))

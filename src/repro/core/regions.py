@@ -5,9 +5,17 @@ Pure functions: given a node's membership view, its own id, the
 fan-out ``k``, compute the child messages to emit.  No tree state is ever
 stored — this is the paper's central claim ("self-organizing", §4.3).
 
+All region math is **index-space**: a region is a ``(start, length)``
+pair of offsets over the sorted ring (``MembershipView.arc_bounds``), so
+computing the ≤ k children of a hop costs O(k log n) — the log is the
+boundary lookups — and materializes nothing.  The wire format is
+unchanged: children still carry ``(lb, rb)`` *node ids*, because views
+diverge and indexes are view-relative.
+
 Conventions
 -----------
-* A *region* is a clockwise arc ``[lb .. rb]`` of the ring (inclusive).
+* A *region* is a clockwise arc ``[lb .. rb]`` of the ring (inclusive),
+  held as ``(start_index, length)`` while being split.
 * The current node sits inside its region (root: the region is everyone
   else and the node acts as the logical midpoint between the two halves).
 * ``k`` must be a multiple of 2 (paper §4.2); ``k' = k//2`` children are
@@ -26,16 +34,19 @@ the Appendix-A delivery invariant in the general case.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 from .ids import NodeId
 from .membership import MembershipView
 
 
-@dataclass(frozen=True)
-class Child:
-    """One outgoing forwarding assignment."""
+class Child(NamedTuple):
+    """One outgoing forwarding assignment.
+
+    NamedTuple rather than a dataclass: construction sits on the per-hop
+    hot path (≤ k instances per received message) and tuple creation is
+    several times cheaper than a frozen dataclass ``__init__``.
+    """
 
     node: NodeId  #: the midpoint node the message is sent to
     lb: NodeId    #: left boundary of the region the child is responsible for
@@ -45,6 +56,11 @@ class Child:
     @property
     def boundaries(self) -> Tuple[NodeId, NodeId]:
         return (self.lb, self.rb)
+
+
+#: An index-space side of a region: ``length`` members starting at ring
+#: index ``start`` (clockwise).  Plain tuple to keep the hot path cheap.
+Side = Tuple[int, int]
 
 
 def partition_balanced(count: int, parts: int) -> List[Tuple[int, int]]:
@@ -63,25 +79,73 @@ def midpoint_offset(lo: int, hi: int) -> int:
     return (lo + hi + 1) // 2
 
 
-def split_side(arc: Sequence[NodeId], kprime: int) -> List[Child]:
-    """Divide one side's arc into ≤ k' balanced sub-regions and pick each
-    sub-region's midpoint as the forwarding target (Alg. 1 lines 13-20)."""
+def split_side(view: MembershipView, side: Side, kprime: int) -> List[Child]:
+    """Divide one side into ≤ k' balanced sub-regions and pick each
+    sub-region's midpoint as the forwarding target (Alg. 1 lines 13-20).
+
+    Pure offset arithmetic: only the ≤ k' boundary/midpoint members are
+    ever looked up.
+    """
+    start, length = side
+    mem = view.members()
+    n = len(mem)
     children: List[Child] = []
-    for lo, hi in partition_balanced(len(arc), kprime):
-        mid = midpoint_offset(lo, hi)
-        node = arc[mid]
-        children.append(Child(node=node, lb=arc[lo], rb=arc[hi], leaf=(lo == hi)))
+    for lo, hi in partition_balanced(length, kprime):
+        mid = (lo + hi + 1) // 2  # midpoint_offset, inlined (hot path)
+        children.append(Child(mem[(start + mid) % n], mem[(start + lo) % n],
+                              mem[(start + hi) % n], lo == hi))
     return children
 
 
-def root_halves(arc: Sequence[NodeId]) -> Tuple[Sequence[NodeId], Sequence[NodeId]]:
-    """Split the root's full-ring arc into (right, left) halves (Eq. 2-3).
+def root_split(start: int, length: int) -> Tuple[Side, Side]:
+    """Split a root's full-ring region into (right, left) sides (Eq. 2-3).
 
     'If the number of nodes cannot be evenly divided, the left region gets
     one more node than the right' — right gets floor((n-1)/2).
     """
+    nprime = length // 2
+    return (start, nprime), (start + nprime, length - nprime)
+
+
+def root_halves(arc: Sequence[NodeId]) -> Tuple[Sequence[NodeId], Sequence[NodeId]]:
+    """List-based compatibility shim of :func:`root_split`."""
     nprime = len(arc) // 2
     return arc[:nprime], arc[nprime:]
+
+
+def region_sides(
+    view: MembershipView,
+    self_id: NodeId,
+    lb: Optional[NodeId],
+    rb: Optional[NodeId],
+) -> Tuple[Side, Side]:
+    """Resolve a message's region into index-space (left, right) sides
+    around ``self_id``.  Assumes ``self_id``/``lb``/``rb`` are present
+    (callers ``ensure`` them first)."""
+    n = len(view)
+    if lb is None or rb is None:
+        # Root: everyone else, clockwise starting at our successor.
+        i = view.index_of(self_id)
+        right, left = root_split(i + 1, n - 1)
+        return left, right
+    start, length = view.arc_bounds(lb, rb)
+    off = (view.index_of(self_id) - start) % n
+    if off < length:
+        return (start, off), (start + off + 1, length - off - 1)
+    # Defensive: divergent views can hand us a region we are not inside
+    # (we were evicted from our own list, say).  Act as an external
+    # coordinator: centre-split like a root.  Not covered by the paper;
+    # preserves delivery.
+    right, left = root_split(start, length)
+    return left, right
+
+
+def direct_delivery(view: MembershipView, left: Side, right: Side) -> List[Child]:
+    """Alg. 1 lines 4-12: the whole (≤ k member) region is delivered
+    directly; everyone is a leaf."""
+    return [Child(m, m, m, True)
+            for start, length in (left, right)
+            for m in view.slice_ring(start, length)]
 
 
 def find_children(
@@ -105,33 +169,15 @@ def find_children(
     view.ensure(self_id)  # a node always routes with itself on the ring
     if len(view) <= 1:
         return []
-
-    if lb is None or rb is None:
-        # Root: everyone else, clockwise starting at our successor.
-        arc = view.arc(view.successor(self_id), view.predecessor(self_id))
-        left_part: Sequence[NodeId]
-        right_part, left_part = root_halves(arc)
-    else:
+    if lb is not None and rb is not None:
         view.ensure(lb)
         view.ensure(rb)
-        arc = view.arc(lb, rb)
-        if self_id in arc:
-            i = arc.index(self_id)
-            left_part, right_part = arc[:i], arc[i + 1:]
-        else:
-            # Defensive: divergent views can hand us a region we are not
-            # inside (we were evicted from our own list, say).  Act as an
-            # external coordinator: centre-split like a root.  Not covered
-            # by the paper; preserves delivery.
-            right_part, left_part = root_halves(arc)
 
-    region = list(left_part) + list(right_part)
-    if len(region) <= k:
-        # Alg. 1 lines 4-12: direct delivery, everyone is a leaf.
-        return [Child(node=m, lb=m, rb=m, leaf=True) for m in region]
-
-    children = split_side(right_part, kprime)
-    children += split_side(left_part, kprime)
+    left, right = region_sides(view, self_id, lb, rb)
+    if left[1] + right[1] <= k:
+        return direct_delivery(view, left, right)
+    children = split_side(view, right, kprime)
+    children += split_side(view, left, kprime)
     return children
 
 

@@ -159,13 +159,21 @@ class Network:
         self.departed.add(node)
 
     def send(self, src: NodeId, dst: NodeId, msg) -> None:
-        """Fire-and-forget unicast with link latency."""
+        """Fire-and-forget unicast with link latency.
+
+        Messages addressed to unknown nodes never hit the wire (there is
+        no endpoint to connect to), so they are dropped *before* the
+        global send/byte accounting — counting them inflated
+        ``bytes_total`` for every divergent-view send to a departed node.
+        Crashed nodes still count: their traffic is blackholed in-network
+        (§5.5), not refused at connect time.
+        """
         if src in self.crashed or src in self.departed:
+            return
+        if dst not in self.nodes:
             return
         self.sends += 1
         self.bytes_total += msg.size
-        if dst not in self.nodes:
-            return
         delay = self.latency.sample(self.sim.rng)
         self.sim.after(delay, lambda: self._deliver(src, dst, msg))
 

@@ -24,7 +24,7 @@ from .coloring import (PRIMARY, SECONDARY, find_children_colored,
 from .ids import NodeId
 from .membership import MembershipView
 from .messages import (Ack, Data, MemberUpdate, Probe, SyncReq, fresh_mid)
-from .regions import find_children
+from .regions import find_children, leaf_assignment
 from .sim import Metrics, Network, NodeBase, Sim
 
 
@@ -160,7 +160,7 @@ class SnowNode(NodeBase):
         """Compute children from *our* view and send after fwd delay."""
         key = (msg.mid, msg.tree, msg.epoch)
         self.forwarded.add(key)
-        is_leaf = msg.lb is not None and msg.lb == msg.rb == self.id
+        is_leaf = msg.lb is not None and leaf_assignment(msg.lb, msg.rb, self.id)
         if is_leaf:
             if msg.reliable and parent is not None:
                 self.send(parent, Ack(msg.mid, msg.epoch))
@@ -267,9 +267,14 @@ class SnowNode(NodeBase):
     def _probe_tick(self) -> None:
         if not self.net.alive(self.id):
             return
-        members = [m for m in self.view if m != self.id]
-        if members:
-            target = self.rng.choice(members)
+        members = self.view.members()  # cached tuple — no O(n) copy per tick
+        # a peer exists unless the view is empty or contains only us (we
+        # may be absent from our own view after a false eviction merged in)
+        if members and (len(members) > 1 or members[0] != self.id):
+            while True:
+                target = members[self.rng.randrange(len(members))]
+                if target != self.id:
+                    break
             self._probe_waiting[target] = self.sim.now
             self.send(target, Probe("ping", target))
             self.sim.after(self.probe_timeout,
@@ -316,9 +321,12 @@ class SnowNode(NodeBase):
     def _anti_entropy_tick(self) -> None:
         if not self.net.alive(self.id):
             return
-        members = [m for m in self.view if m != self.id]
-        if members:
-            target = self.rng.choice(members)
+        members = self.view.members()  # cached tuple — no O(n) copy per tick
+        if members and (len(members) > 1 or members[0] != self.id):
+            while True:
+                target = members[self.rng.randrange(len(members))]
+                if target != self.id:
+                    break
             peer = self.net.nodes.get(target)
             if peer is not None and self.net.alive(target) and isinstance(peer, SnowNode):
                 # model: request + response, then merge both directions

@@ -9,6 +9,11 @@ and the Coloring double tree (§4.6).
 Used by: Appendix A/B/C/D property tests, the Eq. 8 height check, and
 :mod:`repro.collectives.topology` (which turns traced trees into
 ``ppermute`` schedules).
+
+Uniform single-view traces are routed through the vectorized whole-tree
+planner (:mod:`repro.core.planner`) — one batched array pass per tree
+level instead of a Python walk; the per-hop recursion remains the
+reference path for divergent per-node views (Appendix B).
 """
 from __future__ import annotations
 
@@ -70,7 +75,15 @@ def trace_broadcast(
     ``views`` is either one shared view (stable cluster) or a per-node
     mapping (divergent views, Appendix B).  Nodes absent from the mapping
     drop the message (they do not exist / have crashed).
+
+    A uniform single view is planned whole-tree by
+    :func:`repro.core.planner.plan_broadcast` (vectorized, no per-hop
+    recursion); a mapping falls back to the per-hop walk.
     """
+    if isinstance(views, MembershipView) and root in views:
+        from .planner import plan_broadcast
+
+        return plan_broadcast(views, root, k).to_trace()
     t = Trace(root=root)
     t.parent[root] = None
     t.depth[root] = 0
@@ -104,7 +117,23 @@ def trace_colored(
     tree: int,
     copy_views: bool = True,
 ) -> Trace:
-    """Trace one of the two Coloring trees (§4.6)."""
+    """Trace one of the two Coloring trees (§4.6).
+
+    Uniform single views go through the whole-tree planner, which also
+    records the initiator at depth 0 of the secondary tree (the per-hop
+    walk leaves it implicit); delivery/paths are identical.
+    """
+    from .coloring import RECENTER_SECONDARY
+
+    if (isinstance(views, MembershipView) and root in views
+            and (tree == PRIMARY or len(views) >= 2)
+            and not RECENTER_SECONDARY):
+        # the planner models the (default, measured-better) edge-rooted
+        # secondary tree; the re-centering experiment flag falls back to
+        # the per-hop walk
+        from .planner import plan_colored
+
+        return plan_colored(views, root, k, tree).to_trace()
     t = Trace(root=root)
     base_view = _views_for(views, root)
     assert base_view is not None, "initiator must have a view"

@@ -6,6 +6,9 @@ regardless of how the views otherwise differ.
 """
 import random
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.membership import MembershipView

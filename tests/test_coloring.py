@@ -1,5 +1,8 @@
 """Node Coloring proofs as properties: Appendix C (off-color nodes are
 always leaves) and Appendix D (two disjoint delivery paths)."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coloring import color_of, tree_color

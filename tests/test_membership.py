@@ -1,4 +1,7 @@
 """MembershipView: ring math, merge semantics, tombstones."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.membership import MembershipView

@@ -1,0 +1,85 @@
+"""MembershipView index-space API and cache-invalidation behaviour.
+
+Hypothesis-free twin of the basics in test_membership.py, so the ring
+math and the cached members tuple/array stay covered even where
+hypothesis is not installed.
+"""
+import numpy as np
+
+from repro.core.membership import MembershipView
+
+
+def test_basic_ring_ops():
+    v = MembershipView([5, 1, 9, 3])
+    assert list(v) == [1, 3, 5, 9]
+    assert v.successor(9) == 1
+    assert v.predecessor(1) == 9
+    assert v.ring_distance(3, 9) == 2
+    assert v.arc(5, 3) == [5, 9, 1, 3]
+    assert v.arc(3, 3) == [3]
+
+
+def test_arc_bounds_matches_arc():
+    v = MembershipView([2, 4, 6, 8, 10])
+    for lb in v:
+        for rb in v:
+            start, length = v.arc_bounds(lb, rb)
+            assert v.at(start) == lb
+            assert v.at(start + length - 1) == rb
+            assert list(v.slice_ring(start, length)) == v.arc(lb, rb)
+
+
+def test_slice_ring_wraps():
+    v = MembershipView([1, 3, 5, 9])
+    assert v.slice_ring(2, 3) == (5, 9, 1)
+    assert v.slice_ring(3, 4) == (9, 1, 3, 5)
+    assert v.slice_ring(7, 2) == (9, 1)      # start beyond n is reduced
+
+
+def test_members_cache_invalidation():
+    v = MembershipView([1, 3])
+    t0 = v.members()
+    assert v.members() is t0                 # cached
+    v.add(2)
+    assert v.members() == (1, 2, 3)
+    v.remove(3)
+    assert v.members() == (1, 2)
+    v.ensure(7)
+    assert v.members() == (1, 2, 7)
+    other = MembershipView([5, 6])
+    v.merge(other)
+    assert v.members() == (1, 2, 5, 6, 7)
+    assert 3 not in v                        # tombstoned, not resurrected
+    arr = v.members_array()
+    assert arr.tolist() == [1, 2, 5, 6, 7]
+    assert v.members_array() is arr          # cached
+    v.add(4)
+    assert v.members_array().tolist() == [1, 2, 4, 5, 6, 7]
+
+
+def test_from_sorted_and_copy():
+    v = MembershipView.from_sorted([1, 2, 3])
+    v.remove(2)
+    c = v.copy()
+    assert list(c) == [1, 3]
+    c.add(2)
+    assert 2 not in c, "copy must carry tombstones"
+    v.add(9)
+    assert 9 not in c, "copy must be independent"
+
+
+def test_tombstones_block_resurrection():
+    a = MembershipView([1, 2, 3])
+    b = MembershipView([1, 2, 3])
+    a.remove(2)
+    a.merge(b)
+    assert 2 not in a
+    b.merge(a)
+    assert 2 not in b
+
+
+def test_ensure_bypasses_tombstone():
+    v = MembershipView([1, 3])
+    v.remove(2)
+    v.ensure(2)
+    assert 2 in v

@@ -1,0 +1,197 @@
+"""Planner ⇔ per-hop recursion equivalence (the tentpole invariant).
+
+The vectorized whole-tree expansion (:mod:`repro.core.planner`) must
+produce exactly the same (parent, depth, region, leaf) assignment for
+every node as walking the tree hop by hop with
+``find_children`` / ``find_children_colored`` — for random views, random
+fan-outs, and post-churn views with sparse, divergent member ids.
+
+Deliberately hypothesis-free (deterministic seeds, many trials) so the
+core invariant is exercised even where hypothesis is not installed.
+"""
+import random
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.coloring import (PRIMARY, SECONDARY, find_children_colored,
+                                 secondary_root, secondary_root_boundaries)
+from repro.core.membership import MembershipView
+from repro.core.planner import (TreePlan, plan_broadcast, plan_colored,
+                                plan_two_trees)
+from repro.core.regions import find_children
+
+
+def walk_reference(view, root, k, tree=None):
+    """Per-hop recursive expansion: node -> (parent, depth, lb, rb, leaf)."""
+    out = {root: (None, 0, None, None, False)}
+    q = deque()
+    if tree == SECONDARY:
+        sroot = secondary_root(view, root)
+        lb, rb = secondary_root_boundaries(view, root)
+        out[sroot] = (root, 1, lb, rb, lb == rb == sroot)
+        q.append((sroot, lb, rb, 1))
+    else:
+        q.append((root, None, None, 0))
+    while q:
+        node, lb, rb, d = q.popleft()
+        if lb is not None and lb == rb == node:
+            continue
+        if tree is None:
+            kids = find_children(view, node, lb, rb, k)
+        else:
+            kids = find_children_colored(view, node, root, lb, rb, k, tree)
+        for ch in kids:
+            assert ch.node not in out, f"duplicate delivery to {ch.node}"
+            out[ch.node] = (node, d + 1, ch.lb, ch.rb, ch.leaf)
+            q.append((ch.node, ch.lb, ch.rb, d + 1))
+    return out
+
+
+def assert_plan_matches(plan: TreePlan, ref, view, root):
+    members = plan.members
+    parent = np.asarray(plan.parent)
+    depth = np.asarray(plan.depth)
+    rlen = np.asarray(plan.region_len)
+    n = len(members)
+    reached = {members[i].item() for i in range(n) if depth[i] >= 0}
+    assert reached == set(ref), (sorted(set(ref) - reached),
+                                 sorted(reached - set(ref)))
+    for i in range(n):
+        nid = members[i].item()
+        p_ref, d_ref, lb_ref, rb_ref, leaf_ref = ref[nid]
+        assert depth[i] == d_ref, (nid, int(depth[i]), d_ref)
+        p = int(parent[i])
+        assert (None if p < 0 else members[p].item()) == p_ref, nid
+        if lb_ref is not None:
+            assert plan.region_bounds(i) == (lb_ref, rb_ref), nid
+            assert bool(rlen[i] == 1) == leaf_ref, nid
+
+
+def _random_view(rng, n, sparse=True):
+    ids = rng.sample(range(0, 10 * n + 10), n) if sparse else list(range(n))
+    return MembershipView(ids)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_standard_plan_equals_recursion(seed):
+    rng = random.Random(seed)
+    for _ in range(25):
+        n = rng.randint(2, 250)
+        view = _random_view(rng, n)
+        k = rng.choice([2, 4, 6, 8])
+        root = rng.choice(list(view))
+        ref = walk_reference(view.copy(), root, k)
+        plan = plan_broadcast(view, root, k)
+        assert_plan_matches(plan, ref, view, root)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("tree", [PRIMARY, SECONDARY])
+def test_colored_plan_equals_recursion(seed, tree):
+    rng = random.Random(1000 + seed)
+    for _ in range(15):
+        n = rng.randint(3, 250)           # both parities of n: odd-seam too
+        view = _random_view(rng, n)
+        k = rng.choice([2, 4, 8])
+        root = rng.choice(list(view))
+        ref = walk_reference(view.copy(), root, k, tree=tree)
+        plan = plan_colored(view, root, k, tree)
+        assert_plan_matches(plan, ref, view, root)
+
+
+def test_post_churn_views():
+    """Views that went through joins/leaves/evictions (tombstones, holes
+    in the id space, divergent membership from the original ring)."""
+    rng = random.Random(7)
+    for trial in range(30):
+        n = rng.randint(10, 150)
+        view = _random_view(rng, n)
+        # churn it: evict some, join some
+        members = list(view)
+        for m in rng.sample(members, rng.randint(1, n // 3)):
+            view.remove(m)
+        for j in range(rng.randint(1, 10)):
+            view.add(20_000 + rng.randint(0, 5000))
+        if len(view) < 3:
+            continue
+        k = rng.choice([2, 4])
+        root = rng.choice(list(view))
+        ref = walk_reference(view.copy(), root, k)
+        assert_plan_matches(plan_broadcast(view, root, k), ref, view, root)
+        for tree in (PRIMARY, SECONDARY):
+            ref = walk_reference(view.copy(), root, k, tree=tree)
+            assert_plan_matches(plan_colored(view, root, k, tree),
+                                ref, view, root)
+
+
+def test_plan_covers_everyone_exactly_once():
+    for n in (2, 3, 17, 64, 500, 1777):
+        plan = plan_broadcast(range(n), 0, 4)
+        depth = np.asarray(plan.depth)
+        assert (depth >= 0).all()
+        parent = np.asarray(plan.parent)
+        assert int((parent < 0).sum()) == 1      # exactly one root
+        assert plan.height <= 2 + int(np.ceil(np.log(max(n, 2)) / np.log(4)))
+
+
+def test_two_trees_internal_colors_disjoint():
+    """Appendix C via the planner: primary internal nodes are even-
+    distance from the initiator, secondary internals odd."""
+    n, k, root = 200, 4, 13
+    p, s = plan_two_trees(range(n), root, k)
+    for plan, want in ((p, 0), (s, 1)):
+        parent = np.asarray(plan.parent)
+        rlen = np.asarray(plan.region_len)
+        internal = set(parent[(parent >= 0)].tolist())
+        internal.discard(plan.root)
+        if plan.tree == SECONDARY:
+            internal.discard((root - 1) % n)  # handled below
+        for i in internal:
+            assert (i - root) % n % 2 == want, (plan.tree, i)
+        # non-leaf ⇔ shows up as someone's parent (or is a tree root)
+        nonleaf = {i for i in range(n)
+                   if rlen[i] > 1 and np.asarray(plan.depth)[i] >= 0}
+        roots = {plan.root} | ({(root - 1) % n} if plan.tree == SECONDARY else set())
+        assert internal <= (nonleaf | roots)
+
+
+def test_jax_backend_matches_numpy():
+    jax = pytest.importorskip("jax")
+    view = MembershipView(range(501))
+    for tree in (None, PRIMARY, SECONDARY):
+        if tree is None:
+            a = plan_broadcast(view, 7, 4)
+            b = plan_broadcast(view, 7, 4, backend="jax")
+        else:
+            a = plan_colored(view, 7, 4, tree)
+            b = plan_colored(view, 7, 4, tree, backend="jax")
+        for f in ("parent", "depth", "region_start", "region_len", "slot"):
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f))), (tree, f)
+
+
+def test_trace_fast_path_equals_recursive_trace():
+    """trace_broadcast on a uniform view (planner path) must equal the
+    mapping path (per-hop recursion) node for node."""
+    from repro.core.tree import trace_broadcast, trace_colored
+
+    view = MembershipView(range(300))
+    ref = trace_broadcast(5, {m: view for m in view}, 4)
+    fast = trace_broadcast(5, view, 4)
+    assert fast.parent == ref.parent
+    assert fast.depth == ref.depth
+    assert fast.children == ref.children
+    assert fast.sends == ref.sends and fast.duplicates == 0
+
+    for tree in (PRIMARY, SECONDARY):
+        ref = trace_colored(5, {m: view for m in view}, 4, tree)
+        fast = trace_colored(5, view, 4, tree)
+        fd, fp = dict(fast.depth), dict(fast.parent)
+        if tree == SECONDARY:
+            # planner records the initiator at depth 0; recursion leaves
+            # it implicit
+            assert fd.pop(5) == 0 and fp.pop(5) is None
+        assert fd == ref.depth and fp == ref.parent
+        assert fast.children == ref.children

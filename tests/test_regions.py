@@ -1,6 +1,8 @@
 """Algorithm 1 (FindNode) properties: exact coverage, no duplicates,
 termination, height bound (Eq. 8)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.membership import MembershipView

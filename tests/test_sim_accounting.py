@@ -1,0 +1,54 @@
+"""Network send/byte accounting semantics (§5.5 substrate)."""
+from repro.core.messages import GossipData
+from repro.core.sim import LatencyModel, Metrics, Network, NodeBase, NodeProfile, Sim
+
+
+class _Sink(NodeBase):
+    def __init__(self, node_id, sim, net):
+        super().__init__(node_id, sim, net, NodeProfile())
+        self.got = []
+
+    def on_message(self, src, msg):
+        self.got.append((src, msg))
+
+
+def _mk():
+    sim = Sim(seed=0)
+    net = Network(sim, Metrics(), LatencyModel())
+    return sim, net
+
+
+def test_unknown_destination_not_counted():
+    sim, net = _mk()
+    a = _Sink(1, sim, net)
+    msg = GossipData(0, 1)
+    net.send(1, 999, msg)                 # 999 does not exist
+    assert net.sends == 0
+    assert net.bytes_total == 0
+    net.send(1, 1, msg)                   # known destination counts
+    assert net.sends == 1
+    assert net.bytes_total == msg.size
+
+
+def test_crashed_destination_still_counts():
+    """Traffic to a crashed-but-known node hits the wire and is
+    blackholed in-network — it must stay in the global byte counters."""
+    sim, net = _mk()
+    a, b = _Sink(1, sim, net), _Sink(2, sim, net)
+    net.crash(2)
+    msg = GossipData(0, 1)
+    net.send(1, 2, msg)
+    assert net.sends == 1
+    assert net.bytes_total == msg.size
+    sim.run()
+    assert b.got == []                    # ... but is never delivered
+
+
+def test_crashed_source_sends_nothing():
+    sim, net = _mk()
+    a, b = _Sink(1, sim, net), _Sink(2, sim, net)
+    net.crash(1)
+    net.send(1, 2, GossipData(0, 1))
+    assert net.sends == 0 and net.bytes_total == 0
+    sim.run()
+    assert b.got == []
