@@ -1,13 +1,18 @@
 """Paper Figure 6A + cloud-scale extension: fixed k=4, n from 100 up to
-50,000 — LDT grows only with tree height (stepwise), RMR flat.
+1,000,000 — LDT grows only with tree height (stepwise), RMR flat.
 
-Two sections:
+Three sections:
 
 * the paper's figure range (event-driven simulation, per-node views),
 * a large-scale section (n = 5k / 10k / 50k) running the stable scenario
-  over a shared frozen view (`share_view=True`) plus whole-tree planner
-  timings — the perf trajectory tracked in
-  ``benchmarks/results/scale_n.json`` from PR 1 onward.
+  through BOTH engines — the event loop over a shared frozen view and
+  the closed-form vectorized engine — on one shared DelayBank, so the
+  events-vs-vectorized column is an apples-to-apples wall-clock ratio on
+  identical metrics,
+* a huge-scale section (n = 100k / 500k / 1M, ≥20 seeds each) that only
+  the closed-form engine can reach, with a ``jax.jit`` backend timing.
+
+The perf trajectory is tracked in ``benchmarks/results/scale_n.json``.
 """
 from __future__ import annotations
 
@@ -15,12 +20,18 @@ import json
 import time
 from pathlib import Path
 
+import numpy as np
+
+from repro.core.engine import broadcast_times, bank_for_stable, stable_plans, stable_sweep
 from repro.core.membership import MembershipView
 from repro.core.planner import plan_broadcast
 from repro.core.scenarios import run_stable, summarize
 from repro.core.tree import expected_height, trace_broadcast
 
 RESULTS = Path(__file__).parent / "results" / "scale_n.json"
+
+#: metrics of the last smoke invocation, read by ``run.py --check``
+LAST_SMOKE = {}
 
 
 def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
@@ -29,7 +40,8 @@ def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
     for n in ns:
         t0 = time.time()
         s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
-                                 seed=seed, share_view=share_view))
+                                 seed=seed, share_view=share_view,
+                                 engine="events"))
         wall = time.time() - t0
         t = trace_broadcast(0, MembershipView.from_sorted(range(n)), k)
         rows.append({"n": n, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
@@ -40,56 +52,132 @@ def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
 
 
 def run_large(ns=(5000, 10_000, 50_000), k: int = 4, seed: int = 3):
-    """Cloud-scale stable runs: shared frozen view, few messages (the
-    metric distributions stabilize fast), planner timing per n."""
+    """Cloud-scale stable runs, both engines on the shared DelayBank: the
+    closed-form engine must reproduce the event loop's metrics exactly
+    while being orders of magnitude faster."""
     rows = []
     for n in ns:
         n_messages = 2 if n >= 50_000 else 5
+        kw = dict(n=n, k=k, n_messages=n_messages, seed=seed, rate_s=0.5)
         t0 = time.time()
-        s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
-                                 seed=seed, rate_s=0.5, share_view=True))
-        wall = time.time() - t0
+        se = summarize(run_stable("snow", share_view=True, engine="events",
+                                  **kw))
+        wall_events = time.time() - t0
+        t0 = time.time()
+        sv = summarize(run_stable("snow", engine="vectorized", **kw))
+        wall_vec = time.time() - t0
+        assert sv["ldt"] == se["ldt"], "engines must agree bit-exactly"
         view = MembershipView.from_sorted(range(n))
         t1 = time.time()
         plan = plan_broadcast(view, 0, k)
         plan_ms = (time.time() - t1) * 1000
-        rows.append({"n": n, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
-                     "reliability": s["reliability"], "height": plan.height,
+        rows.append({"n": n, "ldt_ms": sv["ldt"] * 1000, "rmr_B": sv["rmr"],
+                     "reliability": sv["reliability"], "height": plan.height,
                      "eq8_bound": expected_height(n, k),
-                     "n_messages": n_messages, "wall_s": wall,
+                     "n_messages": n_messages,
+                     "wall_events_s": wall_events, "wall_vec_s": wall_vec,
+                     "speedup": wall_events / max(wall_vec, 1e-9),
                      "plan_ms": plan_ms})
     return rows
 
 
-def _fmt(rows, plan_col=False):
-    hdr = (f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
-           f"{'height':>6s} {'eq8':>4s} {'wall_s':>7s}"
-           + (f" {'plan_ms':>8s}" if plan_col else ""))
-    out = [hdr]
+def run_huge(ns=(100_000, 500_000, 1_000_000), k: int = 4, n_seeds: int = 20,
+             n_messages: int = 2):
+    """Beyond the event horizon: multi-seed sweeps only the closed-form
+    engine can complete (the event loop would need ~n_seeds × 30 s per
+    broadcast at n = 1M)."""
+    rows = []
+    for n in ns:
+        tp = time.time()
+        plans = stable_plans("snow", np.arange(n), 0, k)
+        plan_s = time.time() - tp
+        t0 = time.time()
+        seed_rows = stable_sweep("snow", n, k, seeds=range(n_seeds),
+                                 n_messages=n_messages, plans=plans)
+        wall = time.time() - t0
+        ldts = np.array([r["ldt"] for r in seed_rows])
+        # jax.jit backend: one warm-up compile, then one timed sweep
+        bank = bank_for_stable(0, n, "snow", n_messages)
+        broadcast_times(plans, bank, n_messages, backend="jax")
+        t1 = time.time()
+        broadcast_times(plans, bank, n_messages, backend="jax")
+        jax_s = time.time() - t1
+        rows.append({
+            "n": n, "k": k, "seeds": n_seeds, "n_messages": n_messages,
+            "ldt_ms_mean": float(ldts.mean() * 1000),
+            "ldt_ms_std": float(ldts.std(ddof=1) * 1000),
+            "ldt_ms_ci95": float(1.96 * ldts.std(ddof=1) * 1000
+                                 / np.sqrt(len(ldts))),
+            "rmr_B": seed_rows[0]["rmr"],
+            "reliability": min(r["reliability"] for r in seed_rows),
+            "height": int(np.asarray(plans[0].depth).max()),
+            "eq8_bound": expected_height(n, k),
+            "wall_s": wall, "per_seed_s": wall / n_seeds,
+            "plan_s": plan_s, "jax_sweep_s": jax_s,
+            "per_seed": seed_rows,
+        })
+    return rows
+
+
+def _fmt(rows):
+    out = [(f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
+            f"{'height':>6s} {'eq8':>4s} {'wall_s':>7s}")]
     for r in rows:
-        line = (f"{r['n']:6d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
-                f"{r['reliability']:5.3f} {r['height']:6d} "
-                f"{r['eq8_bound']:4d} {r['wall_s']:7.2f}")
-        if plan_col:
-            line += f" {r['plan_ms']:8.2f}"
-        out.append(line)
+        out.append(f"{r['n']:6d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['height']:6d} "
+                   f"{r['eq8_bound']:4d} {r['wall_s']:7.2f}")
+    return out
+
+
+def _fmt_large(rows):
+    out = [(f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
+            f"{'events_s':>8s} {'vec_s':>7s} {'speedup':>7s} {'plan_ms':>8s}")]
+    for r in rows:
+        out.append(f"{r['n']:6d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['wall_events_s']:8.2f} "
+                   f"{r['wall_vec_s']:7.3f} {r['speedup']:6.0f}x "
+                   f"{r['plan_ms']:8.2f}")
+    return out
+
+
+def _fmt_huge(rows):
+    out = [(f"{'n':>8s} {'seeds':>5s} {'ldt_ms':>7s} {'±ci95':>6s} "
+            f"{'rmr_B':>6s} {'rel':>5s} {'wall_s':>7s} {'s/seed':>7s} "
+            f"{'jax_s':>7s}")]
+    for r in rows:
+        out.append(f"{r['n']:8d} {r['seeds']:5d} {r['ldt_ms_mean']:7.0f} "
+                   f"{r['ldt_ms_ci95']:6.1f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['wall_s']:7.2f} "
+                   f"{r['per_seed_s']:7.3f} {r['jax_sweep_s']:7.3f}")
     return out
 
 
 def main(smoke: bool = False):
+    global LAST_SMOKE
     if smoke:
         fig = run(ns=(100, 300), n_messages=3)
         large = run_large(ns=(2000,))
+        huge = run_huge(ns=(20_000,), n_seeds=3)
+        LAST_SMOKE = {
+            "ldt_ms": fig[0]["ldt_ms"],
+            "reliability": min(r["reliability"] for r in fig + large + huge),
+            "vec_speedup": large[0]["speedup"],
+        }
     else:
         fig = run()
         large = run_large()
+        huge = run_huge()
     out = _fmt(fig)
     out.append("")
-    out.append("-- large-scale (shared frozen view) --")
-    out += _fmt(large, plan_col=True)
+    out.append("-- large-scale: events vs closed-form engine (shared bank) --")
+    out += _fmt_large(large)
+    out.append("")
+    out.append("-- huge-scale: closed-form engine only, multi-seed --")
+    out += _fmt_huge(huge)
     if not smoke:  # smoke runs must not clobber the tracked trajectory
         RESULTS.parent.mkdir(parents=True, exist_ok=True)
         RESULTS.write_text(json.dumps(
-            {"figure_6a": fig, "large_scale": large}, indent=2) + "\n")
+            {"figure_6a": fig, "large_scale": large, "huge_scale": huge},
+            indent=2) + "\n")
         out.append(f"(json: {RESULTS})")
     return out

@@ -35,15 +35,103 @@ SECTION_MODULES = {
 SECTIONS = tuple(SECTION_MODULES)
 
 
+BASELINE = Path(__file__).parent / "results" / "smoke_baseline.json"
+
+# --check tolerance bands (compared against the committed baseline)
+WALL_RATIO = 2.0          # fail a section on > 2× wall-time regression
+WALL_HEADROOM_S = 1.0     # ... with absolute headroom for tiny sections
+LDT_REL_TOL = 0.35        # seeded smoke LDT may drift only this much
+MIN_VEC_SPEEDUP = 5.0     # closed-form engine must stay clearly ahead
+
+
+def _calibrate() -> float:
+    """Machine-speed probe: min-of-3 wall time of a fixed planner
+    workload.  Stored in the baseline and re-measured at check time so
+    the >2× wall band compares *this* machine against itself-at-baseline
+    scaled by relative speed — heterogeneous CI runners don't flake the
+    gate on hardware alone."""
+    import numpy as np
+
+    from repro.core.planner import plan_broadcast
+
+    members = np.arange(20_000)
+    plan_broadcast(members, 0, 4)            # warm caches / imports
+    best = min(_timed(lambda: plan_broadcast(members, 0, 4))
+               for _ in range(3))
+    return best
+
+
+def _timed(fn) -> float:
+    t0 = time.time()
+    fn()
+    return time.time() - t0
+
+
+def _check(sections, metrics) -> list:
+    """Compare a smoke pass against the committed baseline; returns a
+    list of human-readable violations (empty = pass)."""
+    import json
+
+    if not BASELINE.exists():
+        return [f"missing baseline {BASELINE}; run --smoke --write-baseline"]
+    doc = json.loads(BASELINE.read_text())
+    base = doc["sections"]
+    # hardware normalization: >1 means this machine is slower than the
+    # one that wrote the baseline (clamped — calibration is a probe, not
+    # an excuse for an order-of-magnitude regression)
+    factor = 1.0
+    if doc.get("calibration_s"):
+        factor = min(max(_calibrate() / doc["calibration_s"], 0.5), 8.0)
+    problems = []
+    for name, us, derived in sections:
+        if derived.startswith("fail"):
+            problems.append(f"{name}: {derived}")
+            continue
+        b = base.get(name)
+        if b is None:
+            continue          # new section, no baseline yet
+        wall_s = us / 1e6
+        scaled = b["wall_s"] * factor
+        limit = max(WALL_RATIO * scaled, scaled + WALL_HEADROOM_S)
+        if wall_s > limit:
+            problems.append(
+                f"{name}: wall {wall_s:.2f}s > {limit:.2f}s (baseline "
+                f"{b['wall_s']:.2f}s x machine factor {factor:.2f}, "
+                f"band {WALL_RATIO}x)")
+        m, bm = metrics.get(name, {}), b.get("metrics", {})
+        if "ldt_ms" in m and "ldt_ms" in bm and bm["ldt_ms"]:
+            rel = abs(m["ldt_ms"] - bm["ldt_ms"]) / bm["ldt_ms"]
+            if rel > LDT_REL_TOL:
+                problems.append(f"{name}: ldt_ms {m['ldt_ms']:.0f} vs "
+                                f"baseline {bm['ldt_ms']:.0f} ({rel:.0%})")
+        if m.get("reliability", 1.0) < bm.get("reliability", 0.0) - 1e-9:
+            problems.append(f"{name}: reliability dropped to "
+                            f"{m['reliability']}")
+        if "vec_speedup" in m and m["vec_speedup"] < MIN_VEC_SPEEDUP:
+            problems.append(f"{name}: closed-form speedup "
+                            f"{m['vec_speedup']:.1f}x < {MIN_VEC_SPEEDUP}x")
+    return problems
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes; skip the heavy kernel sections")
     ap.add_argument("--only", default="",
                     help="comma-separated section names to run")
+    ap.add_argument("--check", action="store_true",
+                    help="compare the smoke pass against the committed "
+                         "baseline (results/smoke_baseline.json); exit 1 "
+                         "on >2x wall-time regression or metric drift")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write results/smoke_baseline.json from this "
+                         "smoke pass")
     args = ap.parse_args(argv)
+    if args.check or args.write_baseline:
+        args.smoke = True
 
     import importlib
+    import json
 
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     if only:
@@ -59,6 +147,7 @@ def main(argv=None) -> None:
         names = list(SECTIONS)
 
     sections = []
+    metrics = {}
     for name in names:
         mod = importlib.import_module(f"benchmarks.{SECTION_MODULES[name]}")
         t0 = time.time()
@@ -70,6 +159,7 @@ def main(argv=None) -> None:
             for line in mod.main(**kwargs):
                 print(line)
             sections.append((name, (time.time() - t0) * 1e6, "ok"))
+            metrics[name] = dict(getattr(mod, "LAST_SMOKE", {}))
         except Exception as e:  # noqa: BLE001
             print(f"FAILED: {e!r}")
             sections.append((name, (time.time() - t0) * 1e6, f"fail:{e!r}"))
@@ -77,6 +167,26 @@ def main(argv=None) -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in sections:
         print(f"{name},{us:.0f},{derived}")
+
+    if args.write_baseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        BASELINE.write_text(json.dumps({
+            "calibration_s": _calibrate(),
+            "sections": {
+                name: {"wall_s": us / 1e6, "metrics": metrics.get(name, {})}
+                for name, us, derived in sections if derived == "ok"
+            }}, indent=2) + "\n")
+        print(f"baseline written: {BASELINE}")
+
+    if args.check:
+        problems = _check(sections, metrics)
+        if problems:
+            print("\nCHECK FAILED:")
+            for p in problems:
+                print(f"  - {p}")
+            raise SystemExit(1)
+        print("\ncheck ok: within tolerance of committed baseline")
+
     if any(d.startswith("fail") for _, _, d in sections):
         raise SystemExit(1)
 

@@ -22,13 +22,14 @@ from repro.collectives.schedule import DCN, best_broadcast
 from repro.collectives.tree_collectives import (snow_allreduce,
                                                 snow_broadcast,
                                                 two_tree_broadcast)
+from repro.compat import shard_map
 
 mesh = jax.make_mesh((8,), ("hosts",))
 x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
 
 
 def run(fn):
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("hosts"),
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("hosts"),
                        out_specs=P("hosts"), check_vma=False)
     def body(xx):
         return fn(xx[0])[None]

@@ -1,0 +1,45 @@
+"""Version-compatibility shims for jax API drift.
+
+Two surfaces moved between the jax versions this repo runs against:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map.shard_map``
+  to the top-level ``jax.shard_map``.
+* ``jax.sharding.AbstractMesh`` changed its constructor from
+  ``AbstractMesh(((name, size), ...))`` to
+  ``AbstractMesh(axis_sizes, axis_names)``.
+
+Import from here instead of pinning either spelling.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg renamed to
+    whatever this jax version expects (``check_vma`` ⇄ ``check_rep``)."""
+    if "check_vma" in kwargs and "check_vma" not in _SM_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SM_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Construct ``jax.sharding.AbstractMesh`` under either signature."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # older jax: a single ((name, size), ...) tuple
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

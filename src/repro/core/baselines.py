@@ -58,7 +58,7 @@ class GossipNode(NodeBase):
         if immediate:
             do_send()
         else:
-            self.sim.after(self.forward_delay(), do_send)
+            self.sim.after(self.forward_delay(msg.mid), do_send)
 
 
 class FloodingNode(GossipNode):
@@ -74,7 +74,7 @@ class FloodingNode(GossipNode):
         if immediate:
             do_send()
         else:
-            self.sim.after(self.forward_delay(), do_send)
+            self.sim.after(self.forward_delay(msg.mid), do_send)
 
 
 class PlumtreeNode(NodeBase):
@@ -157,7 +157,7 @@ class PlumtreeNode(NodeBase):
         if immediate:
             do_send()
         else:
-            self.sim.after(self.forward_delay(), do_send)
+            self.sim.after(self.forward_delay(msg.mid), do_send)
 
     def _maybe_graft(self, mid: int) -> None:
         self._timers.discard(mid)

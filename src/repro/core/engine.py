@@ -1,0 +1,438 @@
+"""Closed-form vectorized broadcast engine: delivery times over TreePlan.
+
+For a **frozen** uniform view, Snow's first-delivery times are a pure
+function of the dissemination tree plus the sampled delays (the paper's
+Eq. 8 height bound is exactly this structural predictability):
+
+    t[v] = t0 + Σ over ancestors u of v  (fwd_delay(u) + link_latency(u→v))
+
+with ``fwd_delay(root) = 0`` (the initiator forwards immediately).  This
+module evaluates that sum for *every* node of a :class:`TreePlan` with a
+level-synchronous gather-and-add over the plan's ``parent``/``depth``
+arrays — O(log_k n) host steps, each one batched NumPy/JAX op — batched
+across messages (and, at the benchmark layer, seeds) in one shot.
+Coloring is the elementwise ``min`` of the primary/secondary tree times;
+LDT / RMR / Reliability reduce straight from the arrays.
+
+Bit-exactness against the event-driven simulator
+------------------------------------------------
+Both engines consume the same :class:`DelayBank` — delays pre-sampled per
+``(node, message, tree)`` — and the level sweep reproduces the event
+loop's float grouping exactly: the event path schedules the forward at
+``t_parent + fwd`` and the delivery at ``(t_parent + fwd) + link``, so
+the sweep computes ``(t[parent] + fwd[parent]) + link[v]`` as two
+separate adds in that order.  ``tests/test_engine.py`` asserts exact
+(not statistical) equality of every first-delivery time.
+
+The engine is sound only where its premises hold — frozen uniform view,
+no reliable retries; churn / breakdown / SWIM paths keep the event loop.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+import numpy as np
+
+from .ids import NodeId
+from .messages import Data
+from .planner import (PRIMARY, SECONDARY, TreePlan, plan_broadcast,
+                      plan_colored)
+from .sim import LatencyModel, Metrics, Sim, straggler_sample
+
+
+def _slot(tree: Optional[int]) -> int:
+    """Standard and primary broadcasts share slot 0; secondary is 1."""
+    return 1 if tree == SECONDARY else 0
+
+
+class DelayBank:
+    """Pre-sampled per-(node, message, tree-slot) delays.
+
+    The single source of randomness for a stable run: the event engine
+    reads scalars out of it (``NodeBase.forward_delay`` /
+    ``Network.send``) while the closed-form engine consumes whole
+    ``(messages, nodes)`` planes — so the two produce identical times.
+
+    Message ids map to columns on first use, in broadcast order (the
+    initiator's immediate root sends touch the bank at origination time,
+    which is strictly increasing across messages).
+    """
+
+    def __init__(self, members: np.ndarray, fwd: np.ndarray,
+                 link: np.ndarray):
+        self.members = np.ascontiguousarray(members)
+        self.fwd = fwd        #: (n, M, S) forwarding delay, seconds
+        self.link = link      #: (n, M, S) inbound link latency, seconds
+        self.n_messages = int(fwd.shape[1])
+        self.n_slots = int(fwd.shape[2])
+        self._cols: Dict[int, int] = {}
+        n = int(self.members.shape[0])
+        # ids == ring indices (the common scenarios case) → O(1) lookups
+        self._identity = bool(n and self.members[0] == 0
+                              and self.members[-1] == n - 1)
+
+    @classmethod
+    def sample(cls, seed: int, members: np.ndarray,
+               stragglers: Set[NodeId], n_messages: int, n_slots: int = 1,
+               *, lo: float = 0.010, hi: float = 0.200,
+               straggler_delay: float = 1.0,
+               latency: Optional[LatencyModel] = None) -> "DelayBank":
+        """Vectorized §5.2 sampling: uniform 10–200 ms forwarding delay
+        (stragglers pinned at 1 s), lognormal sub-ms link latency."""
+        latency = latency or LatencyModel()
+        members = np.ascontiguousarray(members)
+        n = int(members.shape[0])
+        g = np.random.default_rng(
+            np.random.SeedSequence([seed & 0xFFFFFFFF, 0xDE1A]))
+        fwd = g.uniform(lo, hi, (n, n_messages, n_slots))
+        link = latency.median_s * np.exp(
+            g.normal(0.0, latency.sigma, (n, n_messages, n_slots)))
+        if stragglers:
+            smask = np.isin(members,
+                            np.fromiter(stragglers, dtype=members.dtype))
+            fwd[smask] = straggler_delay
+        return cls(members, fwd, link)
+
+    # -- scalar views (event-engine side) ---------------------------------
+    def column(self, mid: int) -> Optional[int]:
+        """The bank column of ``mid``; assigned on first use, in order."""
+        col = self._cols.get(mid)
+        if col is None and len(self._cols) < self.n_messages:
+            col = len(self._cols)
+            self._cols[mid] = col
+        return col
+
+    def _index(self, node: NodeId) -> Optional[int]:
+        if self._identity:
+            i = int(node)
+            return i if 0 <= i < self.members.shape[0] else None
+        i = int(np.searchsorted(self.members, node))
+        if i < self.members.shape[0] and self.members[i] == node:
+            return i
+        return None
+
+    def fwd_for(self, node: NodeId, mid: int, tree: Optional[int] = None,
+                epoch: int = 0) -> Optional[float]:
+        if epoch != 0:
+            return None       # retries re-time their forwards (live RNG)
+        s = _slot(tree)
+        if s >= self.n_slots:
+            return None
+        i = self._index(node)
+        if i is None:
+            return None
+        # column assignment last: an out-of-coverage query must not burn
+        # a column and shift every later message off its samples
+        col = self.column(mid)
+        if col is None:
+            return None
+        return float(self.fwd[i, col, s])
+
+    def link_for(self, dst: NodeId, msg) -> Optional[float]:
+        """Latency of the send carrying ``msg`` into ``dst`` — covered
+        only for first-epoch broadcast DATA frames (the frames the
+        closed-form engine models); anything else falls back to the live
+        RNG in :meth:`Network.send`."""
+        mid = getattr(msg, "mid", None)
+        tree = getattr(msg, "tree", -2)
+        if mid is None or tree == -2 or getattr(msg, "epoch", 0) != 0:
+            return None
+        s = _slot(tree)
+        if s >= self.n_slots:
+            return None
+        i = self._index(dst)
+        if i is None:
+            return None
+        col = self.column(mid)   # last — see fwd_for
+        if col is None:
+            return None
+        return float(self.link[i, col, s])
+
+    # -- plane views (closed-form side) -----------------------------------
+    def fwd_plane(self, slot: int, n_messages: Optional[int] = None):
+        """(M, n) forwarding delays for one tree slot."""
+        m = self.n_messages if n_messages is None else n_messages
+        return np.ascontiguousarray(self.fwd[:, :m, slot].T)
+
+    def link_plane(self, slot: int, n_messages: Optional[int] = None):
+        m = self.n_messages if n_messages is None else n_messages
+        return np.ascontiguousarray(self.link[:, :m, slot].T)
+
+
+def bank_for_stable(seed: int, n: int, protocol: str, n_messages: int,
+                    *, straggler_frac: float = 0.05,
+                    straggler_delay: float = 1.0) -> DelayBank:
+    """The bank ``run_stable`` shares between engines: same straggler draw
+    as ``build_cluster``/``assign_profiles`` (first use of the profile
+    RNG), two tree slots for coloring."""
+    rng = random.Random(seed ^ 0x5EED)
+    stragglers = straggler_sample(rng, range(n), straggler_frac)
+    return DelayBank.sample(seed, np.arange(n), stragglers, n_messages,
+                            n_slots=2 if protocol == "coloring" else 1,
+                            straggler_delay=straggler_delay)
+
+
+# ------------------------------------------------------------------ #
+# Level-synchronous closed-form sweep                                 #
+# ------------------------------------------------------------------ #
+def _levels(depth: np.ndarray) -> List[np.ndarray]:
+    """Ring-index groups per depth 1..height, via one stable argsort."""
+    height = int(depth.max()) if depth.size else 0
+    order = np.argsort(depth, kind="stable")
+    dsorted = depth[order]
+    bounds = np.searchsorted(dsorted, np.arange(1, height + 2))
+    return [order[bounds[h]:bounds[h + 1]] for h in range(height)]
+
+
+def delivery_times(plan: TreePlan, fwd, link, t0=0.0,
+                   backend: str = "numpy"):
+    """First-delivery time of every node of ``plan``, closed form.
+
+    ``fwd``/``link`` are ``(..., n)`` arrays (leading batch dims are
+    broadcast together, typically ``(M, n)`` for M messages); ``t0`` is a
+    scalar or ``(...,)`` start-time array.  Returns ``(..., n)`` float64
+    absolute times; NaN marks nodes the tree does not reach.  The float
+    grouping ``(t[parent] + fwd[parent]) + link[v]`` matches the event
+    loop exactly (see module docstring).
+    """
+    parent = np.asarray(plan.parent)
+    depth = np.asarray(plan.depth)
+    fwd = np.asarray(fwd, dtype=np.float64)
+    link = np.asarray(link, dtype=np.float64)
+    if backend == "jax":
+        return _delivery_times_jax(parent, depth, plan.root, fwd, link, t0)
+    t = np.full(np.broadcast_shapes(fwd.shape, link.shape), np.nan)
+    t[..., plan.root] = t0
+    root = plan.root
+    for idx in _levels(depth):
+        p = parent[idx]
+        fp = np.where(p == root, 0.0, fwd[..., p])
+        t[..., idx] = (t[..., p] + fp) + link[..., idx]
+    return t
+
+
+_JIT_SWEEP = None
+
+
+def _delivery_times_jax(parent, depth, root, fwd, link, t0):
+    """``jax.jit``-compiled variant of the level sweep.
+
+    The per-level gather runs over all n nodes with a ``where`` mask
+    inside ``lax.fori_loop`` — O(n·H) device work instead of O(n), but
+    every step is one fused XLA op and the whole sweep is a single
+    compiled call (cached per shape).
+    """
+    global _JIT_SWEEP
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if _JIT_SWEEP is None:
+        def sweep(parent, depth, fwd, link, t0, *, root, height):
+            t = jnp.full(jnp.broadcast_shapes(fwd.shape, link.shape),
+                         jnp.nan, dtype=fwd.dtype)
+            t = t.at[..., root].set(t0)
+            fp = jnp.where(parent == root, 0.0,
+                           jnp.take(fwd, parent, axis=-1))
+
+            def body(h, t):
+                cand = (jnp.take(t, parent, axis=-1) + fp) + link
+                return jnp.where(depth == h, cand, t)
+
+            return lax.fori_loop(1, height + 1, body, t)
+
+        _JIT_SWEEP = jax.jit(sweep, static_argnames=("root", "height"))
+
+    height = int(depth.max()) if depth.size else 0
+    # device default dtype (f32 unless jax_enable_x64): the jit sweep is
+    # the throughput backend; exactness lives on the numpy path
+    dt = jnp.result_type(float)
+    out = _JIT_SWEEP(jnp.asarray(parent), jnp.asarray(depth),
+                     jnp.asarray(fwd.astype(dt)), jnp.asarray(link.astype(dt)),
+                     jnp.asarray(np.asarray(t0, dtype=dt)),
+                     root=int(root), height=height)
+    return np.asarray(out)
+
+
+def stable_plans(protocol: str, members: np.ndarray, root: NodeId,
+                 k: int) -> Tuple[TreePlan, ...]:
+    """The plan set one broadcast propagates over: one standard tree for
+    snow, the primary/secondary double tree for coloring.  The event
+    engine only hands off the secondary root for views larger than two
+    (snow_node.broadcast), so degenerate coloring clusters propagate
+    over the primary tree alone."""
+    if protocol == "coloring":
+        plans = (plan_colored(members, root, k, PRIMARY),)
+        if int(members.shape[0]) > 2:
+            plans += (plan_colored(members, root, k, SECONDARY),)
+        return plans
+    return (plan_broadcast(members, root, k),)
+
+
+def plan_bytes(plans: Sequence[TreePlan], payload: int) -> int:
+    """Total DATA bytes one broadcast moves: one frame per delivery, one
+    delivery per node reached per tree — identical to the event engine's
+    per-receipt ``Metrics.add_bytes`` accounting on the stable path."""
+    size = Data(0, 0, None, None, payload).size
+    return size * sum(int((np.asarray(p.depth) >= 1).sum()) for p in plans)
+
+
+def broadcast_times(plans: Sequence[TreePlan], bank: DelayBank,
+                    n_messages: int, rate_s: float = 1.0,
+                    backend: str = "numpy") -> np.ndarray:
+    """(M, n) absolute first-delivery times for M broadcasts originating
+    at ``i * rate_s`` — the elementwise min over the plan set."""
+    t0 = np.arange(n_messages, dtype=np.float64) * rate_s
+    total = None
+    for plan in plans:
+        s = _slot(plan.tree)
+        t = delivery_times(plan, bank.fwd_plane(s, n_messages),
+                           bank.link_plane(s, n_messages),
+                           t0=t0, backend=backend)
+        total = t if total is None else np.fmin(total, t)
+    return total
+
+
+# ------------------------------------------------------------------ #
+# Metrics over arrays                                                 #
+# ------------------------------------------------------------------ #
+class ArrayMetrics(Metrics):
+    """:class:`Metrics` backed by per-message delivery-time arrays.
+
+    ``per_message`` (and therefore the inherited ``summary``) produces
+    rows identical to the event engine's — same keys, same float
+    arithmetic (elementwise ``t - t0`` then max) — without ever building
+    per-node dicts, so an n = 10⁶ run stays array-shaped end to end.
+    """
+
+    def __init__(self, members: np.ndarray):
+        super().__init__()
+        self.members = np.ascontiguousarray(members)
+        self.times: Dict[int, np.ndarray] = {}      # (n,) absolute; NaN=miss
+        self.src_index: Dict[int, int] = {}
+
+    def record_message(self, mid: int, t0: float, src_index: int,
+                       times: np.ndarray, nbytes: int) -> None:
+        self.start[mid] = t0
+        self.src_index[mid] = src_index
+        self.times[mid] = times
+        self.data_bytes[mid] = nbytes
+
+    def times_for(self, mid: int) -> np.ndarray:
+        return self.times[mid]
+
+    def per_message(self, subset: Optional[Set[NodeId]] = None) -> List[dict]:
+        sel = None
+        if subset is not None:
+            sub = np.fromiter(subset, dtype=self.members.dtype,
+                              count=len(subset))
+            sel = np.isin(self.members, sub)
+        rows = []
+        n = int(self.members.shape[0])
+        for mid, t0 in sorted(self.start.items()):
+            mask = np.ones(n, dtype=bool)
+            mask[self.src_index[mid]] = False        # intended excludes src
+            if sel is not None:
+                mask &= sel
+            n_int = int(mask.sum())
+            if n_int == 0:
+                continue
+            tt = self.times[mid][mask]
+            vals = tt[~np.isnan(tt)] - t0
+            rows.append({
+                "mid": mid,
+                "ldt": float(vals.max()) if vals.size else float("nan"),
+                "reliability": vals.size / n_int,
+                "rmr": self.data_bytes.get(mid, 0) / max(1, n_int),
+            })
+        return rows
+
+
+@dataclass
+class VectorCluster:
+    """Duck-typed stand-in for :class:`repro.core.scenarios.Cluster` on
+    the closed-form path — carries the array metrics and the plan set
+    instead of node objects."""
+
+    sim: Sim
+    net: None
+    metrics: ArrayMetrics
+    nodes: Dict
+    fixed: Sequence[int]
+    protocol: str
+    k: int
+    plans: Tuple[TreePlan, ...] = ()
+    bank: Optional[DelayBank] = None
+
+
+def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
+                          n_messages: int = 100, rate_s: float = 1.0,
+                          seed: int = 0, payload: int = 64,
+                          backend: str = "numpy",
+                          bank: Optional[DelayBank] = None,
+                          plans: Optional[Tuple[TreePlan, ...]] = None,
+                          ) -> VectorCluster:
+    """The stable scenario (§5.3) in closed form: no nodes, no events —
+    plan once, sample the bank, one level-synchronous sweep for all
+    messages.  Metrics rows are bit-exact against
+    ``run_stable(..., engine="events")`` on the shared bank."""
+    assert protocol in ("snow", "coloring"), \
+        f"closed-form engine models snow/coloring, not {protocol!r}"
+    from .messages import fresh_mid
+
+    members = np.arange(n)
+    if bank is None:
+        bank = bank_for_stable(seed, n, protocol, n_messages)
+    if plans is None:
+        plans = stable_plans(protocol, members, 0, k)
+    times = broadcast_times(plans, bank, n_messages, rate_s, backend)
+    nbytes = plan_bytes(plans, payload)
+    metrics = ArrayMetrics(members)
+    for i in range(n_messages):
+        metrics.record_message(fresh_mid(), i * rate_s, 0, times[i], nbytes)
+    return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
+                         nodes={}, fixed=list(range(n)), protocol=protocol,
+                         k=k, plans=plans, bank=bank)
+
+
+def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
+                 n_messages: int = 2, rate_s: float = 1.0,
+                 backend: str = "numpy",
+                 plans: Optional[Tuple[TreePlan, ...]] = None) -> List[dict]:
+    """Multi-seed stable-scenario sweep for the scale benchmarks.
+
+    The plan set depends only on ``(members, root, k)`` and is reused
+    across seeds (pass ``plans`` to reuse one built elsewhere); each seed
+    re-samples its bank and re-runs the sweep.  Summary reduction happens
+    on the arrays (no subset filtering — the stable scenario's fixed set
+    is the whole cluster).
+    """
+    import time
+
+    plan_s = 0.0
+    if plans is None:
+        tp = time.time()
+        plans = stable_plans(protocol, np.arange(n), 0, k)
+        plan_s = time.time() - tp
+    nbytes = plan_bytes(plans, 64)
+    t0 = np.arange(n_messages, dtype=np.float64) * rate_s
+    rows = []
+    for seed in seeds:
+        tw = time.time()
+        bank = bank_for_stable(seed, n, protocol, n_messages)
+        times = broadcast_times(plans, bank, n_messages, rate_s, backend)
+        rel = times[:, 1:]          # root (index 0) originates, never receives
+        ldt = np.nanmax(rel - t0[:, None], axis=1)
+        delivered = np.count_nonzero(~np.isnan(rel), axis=1)
+        rows.append({
+            "seed": int(seed), "n": n, "k": k,
+            "ldt": float(ldt.mean()),
+            "rmr": nbytes / (n - 1),
+            "reliability": float(delivered.mean()) / (n - 1),
+            "n_messages": n_messages,
+            "wall_s": time.time() - tw,
+            "plan_s": plan_s,
+        })
+    return rows

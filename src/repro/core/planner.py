@@ -374,6 +374,8 @@ def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId
              ) -> Tuple[np.ndarray, int]:
     if isinstance(view, MembershipView):
         members = view.members_array()
+    elif isinstance(view, np.ndarray):
+        members = view          # trusted sorted & duplicate-free
     else:
         members = np.asarray(sorted(set(view)))
     i = int(np.searchsorted(members, root))

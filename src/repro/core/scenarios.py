@@ -71,17 +71,23 @@ def build_cluster(
     enable_anti_entropy: bool = False,
     payload: int = 64,
     share_view: bool = False,
+    delay_bank=None,
 ) -> Cluster:
     """``share_view=True`` hands every node the *same* MembershipView
     instance — valid only for membership-static (stable) runs, where it
     cuts cluster construction from O(n²) list copies to O(n); required to
-    instantiate n ≥ 50k clusters in bounded memory."""
+    instantiate n ≥ 50k clusters in bounded memory.
+
+    ``delay_bank`` (a :class:`repro.core.engine.DelayBank`) replaces live
+    RNG draws for forwarding delays and broadcast link latencies with
+    pre-sampled per-(node, message, tree) arrays — the same arrays the
+    closed-form engine reduces, so the two engines agree bit-for-bit."""
     assert protocol in PROTOCOLS, protocol
     assert not (share_view and (enable_swim or enable_anti_entropy)), \
         "share_view is only sound when no one mutates membership"
     sim = Sim(seed=seed)
     metrics = Metrics()
-    net = Network(sim, metrics, LatencyModel())
+    net = Network(sim, metrics, LatencyModel(), delay_bank=delay_bank)
     rng = random.Random(seed ^ 0x5EED)
     ids = list(range(n))
     shared = MembershipView.from_sorted(ids) if share_view else None
@@ -114,8 +120,33 @@ def _drain(cluster: Cluster, extra: float = 12.0) -> None:
 def run_stable(protocol: str, n: int = 500, k: int = 4,
                n_messages: int = 100, rate_s: float = 1.0,
                seed: int = 0, payload: int = 64,
-               share_view: bool = False) -> Cluster:
-    c = build_cluster(protocol, n, k, seed, share_view=share_view)
+               share_view: bool = False, engine: str = "auto",
+               backend: str = "numpy") -> Cluster:
+    """§5.3 stable scenario.
+
+    ``engine``: ``"vectorized"`` evaluates delivery times in closed form
+    (snow/coloring only — the stable path is a pure function of the plan
+    plus sampled delays); ``"events"`` runs the discrete-event loop;
+    ``"auto"`` (default) picks vectorized where it is sound.  Both
+    engines consume one shared :class:`~repro.core.engine.DelayBank`, so
+    for a given ``(protocol, n, k, n_messages, seed)`` they produce
+    identical metrics — exactly, not statistically.
+    """
+    closed_form = protocol in ("snow", "coloring")
+    if engine == "auto":
+        engine = "vectorized" if closed_form else "events"
+    if engine == "vectorized":
+        from .engine import run_stable_vectorized
+
+        return run_stable_vectorized(protocol, n, k, n_messages, rate_s,
+                                     seed, payload, backend=backend)
+    bank = None
+    if closed_form:
+        from .engine import bank_for_stable
+
+        bank = bank_for_stable(seed, n, protocol, n_messages)
+    c = build_cluster(protocol, n, k, seed, share_view=share_view,
+                      delay_bank=bank)
     src = 0
     for i in range(n_messages):
         c.sim.at(i * rate_s, lambda: c.broadcast_from(src, payload))

@@ -55,13 +55,36 @@ class Sim:
 
 @dataclass
 class LatencyModel:
-    """Intra-datacenter one-way latency: lognormal, sub-millisecond."""
+    """Intra-datacenter one-way latency: lognormal, sub-millisecond.
+
+    Samples are drawn in blocks of ``block`` via one vectorized NumPy
+    lognormal per refill (each block seeded from the caller's ``rng``, so
+    runs stay exactly reproducible) instead of a per-send ``math.exp`` —
+    ``Network.send`` sits on the event-loop hot path.
+    """
 
     median_s: float = 0.0004
     sigma: float = 0.35
+    block: int = 4096
+    _buf: Optional[List[float]] = field(default=None, repr=False, compare=False)
+    _pos: int = field(default=0, repr=False, compare=False)
 
     def sample(self, rng: random.Random) -> float:
-        return self.median_s * math.exp(rng.gauss(0.0, self.sigma))
+        buf = self._buf
+        if buf is None or self._pos >= len(buf):
+            buf = self._refill(rng)
+        v = buf[self._pos]
+        self._pos += 1
+        return v
+
+    def _refill(self, rng: random.Random) -> List[float]:
+        import numpy as np
+
+        g = np.random.default_rng(rng.getrandbits(64))
+        self._buf = (self.median_s
+                     * np.exp(g.normal(0.0, self.sigma, self.block))).tolist()
+        self._pos = 0
+        return self._buf
 
 
 class Metrics:
@@ -95,11 +118,13 @@ class Metrics:
         fixed group of nodes — the paper's "metrics exclusively from the
         fixed 500 nodes" methodology (§5.4).
         """
+        if subset is not None and not isinstance(subset, frozenset):
+            subset = frozenset(subset)    # hoisted: one conversion, not O(M)
         rows = []
         for mid, t0 in sorted(self.start.items()):
             intended = self.intended[mid]
             if subset is not None:
-                intended = intended & frozenset(subset)
+                intended = intended & subset
             if not intended:
                 continue
             fd = self.first_delivery.get(mid, {})
@@ -135,10 +160,16 @@ class Network:
     """
 
     def __init__(self, sim: Sim, metrics: Metrics,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 delay_bank=None):
         self.sim = sim
         self.metrics = metrics
         self.latency = latency or LatencyModel()
+        #: optional :class:`repro.core.engine.DelayBank` — when set, link
+        #: latencies for covered broadcast frames come from the pre-sampled
+        #: per-(dst, message, tree) arrays instead of the live RNG, making
+        #: the event loop bit-exact against the closed-form engine.
+        self.delay_bank = delay_bank
         self.nodes: Dict[NodeId, "NodeBase"] = {}
         self.crashed: Set[NodeId] = set()
         self.departed: Set[NodeId] = set()
@@ -174,7 +205,11 @@ class Network:
             return
         self.sends += 1
         self.bytes_total += msg.size
-        delay = self.latency.sample(self.sim.rng)
+        delay = None
+        if self.delay_bank is not None:
+            delay = self.delay_bank.link_for(dst, msg)
+        if delay is None:
+            delay = self.latency.sample(self.sim.rng)
         self.sim.after(delay, lambda: self._deliver(src, dst, msg))
 
     def _deliver(self, src: NodeId, dst: NodeId, msg) -> None:
@@ -207,7 +242,22 @@ class NodeBase:
         self.rng = random.Random((node_id * 2654435761) & 0xFFFFFFFF)
         net.register(self)
 
-    def forward_delay(self) -> float:
+    def forward_delay(self, mid: Optional[int] = None,
+                      tree: Optional[int] = None, epoch: int = 0) -> float:
+        """Processing delay before this node forwards message ``mid``.
+
+        When the network carries a pre-sampled
+        :class:`repro.core.engine.DelayBank`, the delay is a *view* into
+        its per-(node, message, tree) array — the same numbers the
+        closed-form engine consumes — so both engines agree bit-for-bit.
+        Outside bank coverage (churn, SWIM, baselines without a bank) it
+        falls back to the node-local RNG draw.
+        """
+        bank = self.net.delay_bank
+        if bank is not None and mid is not None:
+            d = bank.fwd_for(self.id, mid, tree, epoch)
+            if d is not None:
+                return d
         p = self.profile
         if p.straggler:
             return p.straggler_delay
@@ -221,6 +271,17 @@ class NodeBase:
         self.net.send(self.id, dst, msg)
 
 
+def straggler_sample(rng: random.Random, node_ids: Sequence[NodeId],
+                     straggler_frac: float = 0.05) -> Set[NodeId]:
+    """The §5.2 straggler draw, shared by :func:`assign_profiles` and the
+    closed-form engine (which skips per-node ``NodeProfile`` objects but
+    must pick the *same* stragglers).  ``random.sample`` selects by index,
+    so any sequence of the same length yields the same members — callers
+    may pass a ``range`` to avoid materializing ids."""
+    n_strag = int(round(straggler_frac * len(node_ids)))
+    return set(rng.sample(node_ids, n_strag))
+
+
 def assign_profiles(
     rng: random.Random,
     node_ids: Sequence[NodeId],
@@ -230,8 +291,7 @@ def assign_profiles(
     straggler_delay: float = 1.0,
 ) -> Dict[NodeId, NodeProfile]:
     """§5.2: uniform 10–200 ms processing delay; 5 % stragglers at 1 s."""
-    n_strag = int(round(straggler_frac * len(node_ids)))
-    stragglers = set(rng.sample(list(node_ids), n_strag))
+    stragglers = straggler_sample(rng, list(node_ids), straggler_frac)
     return {
         n: NodeProfile(straggler=(n in stragglers), lo=lo, hi=hi,
                        straggler_delay=straggler_delay)

@@ -73,6 +73,10 @@ class SnowNode(NodeBase):
         self.delivered: Set[int] = set()
         self.forwarded: Set[Tuple[int, Optional[int]]] = set()
         self.reliable: Dict[Tuple[int, Optional[int]], ReliableState] = {}
+        # (mid, epoch) -> reliable-state keys: ACKs carry no tree id, so
+        # _on_ack must touch every state of that (mid, epoch); the index
+        # makes that O(trees) instead of a scan over all live states
+        self._reliable_index: Dict[Tuple[int, int], List[Tuple]] = {}
         self.converged: Dict[int, float] = {}     # root-side: mid -> time all acks arrived
         self._root_pending: Dict[Tuple[int, int], Set[Tuple[NodeId, Optional[int]]]] = {}
         self._probe_waiting: Dict[NodeId, float] = {}
@@ -187,6 +191,8 @@ class SnowNode(NodeBase):
                     if st is None:
                         st = ReliableState(parent=parent)
                         self.reliable[rkey] = st
+                        self._reliable_index.setdefault(
+                            (msg.mid, msg.epoch), []).append(rkey)
                     st.pending |= {ch.node for ch in children
                                    if ch.node not in st.acked}
                     if not st.pending:
@@ -198,7 +204,8 @@ class SnowNode(NodeBase):
         if immediate:
             do_send()
         else:
-            self.sim.after(self.forward_delay(), do_send)
+            self.sim.after(self.forward_delay(msg.mid, msg.tree, msg.epoch),
+                           do_send)
 
     def _children_for(self, msg: Data):
         if msg.tree is None:
@@ -217,9 +224,12 @@ class SnowNode(NodeBase):
                 pend.discard(entry)
             if not pend:
                 self.converged.setdefault(ack.mid, self.sim.now)
-        # internal-node bookkeeping (any tree, same epoch only)
-        for key, st in list(self.reliable.items()):
-            if key[0] != ack.mid or key[2] != ack.epoch or st.acked_parent:
+        # internal-node bookkeeping (any tree, same epoch only) — the
+        # (mid, epoch) index holds at most one key per tree, so this is
+        # O(1) instead of a scan over every live reliable state
+        for key in self._reliable_index.get((ack.mid, ack.epoch), ()):
+            st = self.reliable[key]
+            if st.acked_parent:
                 continue
             st.acked.add(src)
             st.pending.discard(src)

@@ -10,13 +10,14 @@ from repro.collectives.tree_collectives import (snow_allreduce,
                                                 snow_broadcast,
                                                 snow_reduce,
                                                 two_tree_broadcast)
+from repro.compat import shard_map
 
 mesh = jax.make_mesh((8,), ("x",))
 x = jnp.arange(8 * 6, dtype=jnp.float32).reshape(8, 6)
 
 
 def run(fn):
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("x"),
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("x"),
                        out_specs=P("x"), check_vma=False)
     def body(xx):
         return fn(xx[0])[None]

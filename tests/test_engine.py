@@ -1,0 +1,164 @@
+"""Closed-form vectorized engine vs the event-driven simulator.
+
+The differential contract: on a shared :class:`DelayBank`, the engines
+must agree on every first-delivery time **exactly** (bitwise float
+equality, not statistics) — the closed-form sweep reproduces the event
+loop's schedule arithmetic ``(t[parent] + fwd[parent]) + link[v]``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (ArrayMetrics, DelayBank, bank_for_stable,
+                               broadcast_times, delivery_times,
+                               run_stable_vectorized, stable_plans,
+                               stable_sweep)
+from repro.core.scenarios import run_stable, summarize
+
+
+def _paired_mids(ev, vec):
+    """Engines allocate different global mids; pair them in broadcast
+    order (both sides assign columns/rows in origination order)."""
+    return list(zip(sorted(ev.metrics.start), sorted(vec.metrics.start)))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_engines_bit_exact(protocol, n):
+    seeds = (0, 7) if n < 5000 else (3,)
+    n_messages = 3
+    for seed in seeds:
+        ev = run_stable(protocol, n=n, k=4, n_messages=n_messages,
+                        seed=seed, share_view=True, engine="events")
+        vec = run_stable(protocol, n=n, k=4, n_messages=n_messages,
+                         seed=seed, engine="vectorized")
+        # per-node first-delivery times: exact equality, same delivered set
+        for mid_e, mid_v in _paired_mids(ev, vec):
+            fd = ev.metrics.first_delivery[mid_e]
+            tv = vec.metrics.times_for(mid_v)
+            assert len(fd) == n - 1, "stable run must deliver everywhere"
+            for node, t in fd.items():
+                assert t == tv[node], (protocol, n, seed, node)
+        # metric rows: identical values
+        for a, b in zip(ev.metrics.per_message(), vec.metrics.per_message()):
+            assert a["ldt"] == b["ldt"]
+            assert a["reliability"] == b["reliability"] == 1.0
+            assert a["rmr"] == b["rmr"]
+
+
+def test_engines_agree_under_subset():
+    """ArrayMetrics.per_message(subset) must match the event engine's
+    dict-based filtering, including the intended-set intersection."""
+    n, subset = 300, set(range(0, 300, 3))
+    for protocol in ("snow", "coloring"):
+        ev = run_stable(protocol, n=n, k=4, n_messages=4, seed=11,
+                        share_view=True, engine="events")
+        vec = run_stable(protocol, n=n, k=4, n_messages=4, seed=11,
+                         engine="vectorized")
+        for a, b in zip(ev.metrics.per_message(subset),
+                        vec.metrics.per_message(subset)):
+            assert a["ldt"] == b["ldt"]
+            assert a["reliability"] == b["reliability"]
+            assert a["rmr"] == b["rmr"]
+        assert (ev.metrics.summary(subset) == vec.metrics.summary(subset))
+
+
+def test_vectorized_summary_values():
+    c = run_stable("snow", n=120, k=4, n_messages=10, seed=3)  # engine=auto
+    s = summarize(c)
+    assert s["reliability"] == 1.0
+    assert abs(s["rmr"] - 122.0) < 1e-6
+    assert s["ldt"] < 3.0
+
+
+def test_delivery_times_closed_form_matches_manual_sum():
+    """t[v] must equal the ancestor sum along the plan's parent chain."""
+    n, k = 64, 4
+    plans = stable_plans("snow", np.arange(n), 0, k)
+    plan = plans[0]
+    rng = np.random.default_rng(5)
+    fwd = rng.uniform(0.01, 0.2, n)
+    link = rng.uniform(1e-4, 1e-3, n)
+    t = delivery_times(plan, fwd, link)
+    parent = np.asarray(plan.parent)
+    for v in range(1, n):
+        u, acc = v, 0.0
+        while u != plan.root:
+            p = int(parent[u])
+            acc += link[u] + (fwd[p] if p != plan.root else 0.0)
+            u = p
+        assert math.isclose(t[v], acc, rel_tol=1e-12)
+
+
+def test_jax_backend_matches_numpy():
+    jax = pytest.importorskip("jax")
+    n = 1000
+    plans = stable_plans("coloring", np.arange(n), 0, 4)
+    bank = bank_for_stable(3, n, "coloring", 3)
+    t_np = broadcast_times(plans, bank, 3, backend="numpy")
+    t_jx = broadcast_times(plans, bank, 3, backend="jax")
+    assert (np.isnan(t_np) == np.isnan(t_jx)).all()
+    # f32 device default: agreement to single precision
+    np.testing.assert_allclose(t_np, t_jx, rtol=2e-5, atol=2e-5)
+
+
+def test_stable_sweep_rows():
+    rows = stable_sweep("snow", n=2000, k=4, seeds=range(3), n_messages=2)
+    assert len(rows) == 3
+    for r in rows:
+        assert r["reliability"] == 1.0
+        assert abs(r["rmr"] - 122.0) < 1e-6
+        assert 0.0 < r["ldt"] < 5.0
+    # sweep summary must agree with the full vectorized scenario runner
+    c = run_stable_vectorized("snow", n=2000, k=4, n_messages=2, seed=0)
+    s = c.metrics.summary(None)
+    assert s["ldt"] == rows[0]["ldt"]
+
+
+def test_bank_scalar_views_match_planes():
+    """The event engine's scalar reads and the closed-form plane reads
+    must be views over the same numbers."""
+    bank = bank_for_stable(9, 40, "coloring", 2)
+    mids = [1001, 2002]        # arbitrary ids; columns assigned in order
+    for col, mid in enumerate(mids):
+        assert bank.column(mid) == col
+    for slot, tree in ((0, None), (0, 0), (1, 1)):
+        fwd_plane = bank.fwd_plane(slot)
+        for node in (0, 17, 39):
+            for col, mid in enumerate(mids):
+                assert bank.fwd_for(node, mid, tree) == fwd_plane[col, node]
+
+
+def test_degenerate_coloring_matches_events():
+    """n <= 2: the event engine never hands off a secondary root, so the
+    closed-form plan set must be primary-only."""
+    for n in (2, 3):
+        ev = run_stable("coloring", n=n, k=2, n_messages=2, seed=1,
+                        engine="events")
+        vec = run_stable("coloring", n=n, k=2, n_messages=2, seed=1,
+                         engine="vectorized")
+        for a, b in zip(ev.metrics.per_message(), vec.metrics.per_message()):
+            assert a["ldt"] == b["ldt"], n
+            assert a["rmr"] == b["rmr"], n
+
+
+def test_out_of_coverage_query_burns_no_column():
+    bank = bank_for_stable(9, 40, "snow", 2)
+    assert bank.fwd_for(3, 111, tree=1) is None    # invalid slot ...
+    assert bank.fwd_for(999, 111) is None          # ... or unknown node
+    assert bank.column(7) == 0                     # columns still intact
+    assert bank.column(8) == 1
+
+
+def test_bank_fallback_outside_coverage():
+    bank = bank_for_stable(9, 40, "snow", 1)
+
+    class _Fake:
+        mid = 0
+        tree = None
+        epoch = 1
+    assert bank.link_for(3, _Fake()) is None       # retries not covered
+    assert bank.fwd_for(3, 0, epoch=1) is None     # ... on either view
+    assert bank.fwd_for(999, 0) is None            # unknown node
+    assert bank.fwd_for(3, 0, tree=1) is None      # no secondary slot

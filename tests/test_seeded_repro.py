@@ -1,0 +1,64 @@
+"""Seeded reproducibility: identical (seed, scenario) runs must produce
+identical Metrics rows for every protocol.
+
+Pins the pre-sampled-delay refactor (DelayBank, block-sampled link
+latencies) against accidental RNG-order drift: any change that makes a
+draw depend on event interleaving or wall-clock state breaks these.
+Message ids come from a process-global counter, so rows are compared
+with mids normalized to broadcast order.
+"""
+import math
+
+import pytest
+
+from repro.core.scenarios import (PROTOCOLS, run_breakdown, run_churn,
+                                  run_stable)
+
+
+def _rows(cluster):
+    out = []
+    for i, row in enumerate(cluster.metrics.per_message()):
+        r = dict(row)
+        r["mid"] = i
+        out.append(r)
+    return out
+
+
+def _assert_same(rows_a, rows_b, ctx):
+    assert len(rows_a) == len(rows_b), ctx
+    for a, b in zip(rows_a, rows_b):
+        for key in ("mid", "ldt", "reliability", "rmr"):
+            va, vb = a[key], b[key]
+            if isinstance(va, float) and math.isnan(va):
+                assert math.isnan(vb), (ctx, key)
+            else:
+                assert va == vb, (ctx, key, va, vb)
+
+
+@pytest.mark.parametrize("protocol", PROTOCOLS)
+def test_stable_rows_reproducible(protocol):
+    kw = dict(n=80, k=4, n_messages=6, seed=13)
+    _assert_same(_rows(run_stable(protocol, **kw)),
+                 _rows(run_stable(protocol, **kw)), ("stable", protocol))
+
+
+@pytest.mark.parametrize("engine", ["events", "vectorized"])
+def test_stable_engines_reproducible(engine):
+    """Both engine paths individually, not just the auto route."""
+    kw = dict(n=80, k=4, n_messages=6, seed=13, engine=engine)
+    _assert_same(_rows(run_stable("coloring", **kw)),
+                 _rows(run_stable("coloring", **kw)), ("stable", engine))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring", "gossip", "plumtree"])
+def test_churn_rows_reproducible(protocol):
+    kw = dict(n=60, k=4, n_messages=15, seed=21, churn_every=5)
+    _assert_same(_rows(run_churn(protocol, **kw)),
+                 _rows(run_churn(protocol, **kw)), ("churn", protocol))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+def test_breakdown_rows_reproducible(protocol):
+    kw = dict(n=60, k=4, n_messages=15, seed=8, crash_every=5)
+    _assert_same(_rows(run_breakdown(protocol, **kw)),
+                 _rows(run_breakdown(protocol, **kw)), ("breakdown", protocol))

@@ -44,6 +44,37 @@ def test_crashed_destination_still_counts():
     assert b.got == []                    # ... but is never delivered
 
 
+def test_per_message_subset_summary():
+    """Regression for the hoisted frozenset(subset) conversion: subset
+    filtering must behave identically for any iterable subset type, and
+    the summary math over the restricted intended sets must be exact."""
+    m = Metrics()
+    m.begin(0, 0.0, [1, 2, 3, 4])
+    for node, t in ((1, 0.5), (2, 1.5), (3, 2.5)):   # 4 never delivers
+        m.delivered(0, node, t)
+    m.add_bytes(0, 100)
+    m.begin(1, 10.0, [1, 2])
+    m.delivered(1, 1, 10.25)
+    m.add_bytes(1, 60)
+
+    for subset in ({1, 2, 4}, frozenset({1, 2, 4}), [1, 2, 4]):
+        rows = m.per_message(subset)
+        assert [r["mid"] for r in rows] == [0, 1]
+        assert rows[0]["ldt"] == 1.5                  # max over {1, 2}
+        assert rows[0]["reliability"] == 2 / 3        # 4 intended, missed
+        assert rows[0]["rmr"] == 100 / 3
+        assert rows[1]["ldt"] == 0.25
+        assert rows[1]["reliability"] == 0.5
+        s = m.summary(subset)
+        assert s["n_messages"] == 2
+        assert s["ldt"] == (1.5 + 0.25) / 2
+        assert s["reliability"] == (2 / 3 + 0.5) / 2
+
+    # a subset disjoint from every intended set yields no rows
+    assert m.per_message({99}) == []
+    assert m.summary({99})["n_messages"] == 0
+
+
 def test_crashed_source_sends_nothing():
     sim, net = _mk()
     a, b = _Sink(1, sim, net), _Sink(2, sim, net)
