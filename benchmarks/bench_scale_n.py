@@ -1,7 +1,7 @@
 """Paper Figure 6A + cloud-scale extension: fixed k=4, n from 100 up to
 1,000,000 — LDT grows only with tree height (stepwise), RMR flat.
 
-Three sections:
+Five sections:
 
 * the paper's figure range (event-driven simulation, per-node views),
 * a large-scale section (n = 5k / 10k / 50k) running the stable scenario
@@ -9,8 +9,16 @@ Three sections:
   the closed-form vectorized engine — on one shared DelayBank, so the
   events-vs-vectorized column is an apples-to-apples wall-clock ratio on
   identical metrics,
+* a **churn** large-scale section (n = 5k / 50k): a boundary-aligned
+  §5.4 trace through the oracle-membership event loop and the
+  epoch-segmented closed-form engine — bit-exact metrics, wall ratio is
+  the churn-engine speedup (the acceptance floor is ≥ 20× at n = 50k),
 * a huge-scale section (n = 100k / 500k / 1M, ≥20 seeds each) that only
-  the closed-form engine can reach, with a ``jax.jit`` backend timing.
+  the closed-form engine can reach, with a ``jax.jit`` backend timing,
+* a **churn/breakdown huge-scale** section (n = 50k / 500k / 1M,
+  multi-seed): paper-cadence dynamic-membership sweeps through the
+  epoch-segmented engine — territory the event loop cannot enter at all
+  (per-node views alone are O(n²) memory at 50k+).
 
 The perf trajectory is tracked in ``benchmarks/results/scale_n.json``.
 """
@@ -22,10 +30,14 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.engine import broadcast_times, bank_for_stable, stable_plans, stable_sweep
+from repro.core.churn import (aligned_churn_trace, paper_breakdown_trace,
+                              paper_churn_trace)
+from repro.core.engine import (bank_for_stable, broadcast_times,
+                               compile_trace, run_trace_vectorized,
+                               stable_plans, stable_sweep, trace_sweep)
 from repro.core.membership import MembershipView
 from repro.core.planner import plan_broadcast
-from repro.core.scenarios import run_stable, summarize
+from repro.core.scenarios import run_stable, run_trace_aligned, summarize
 from repro.core.tree import expected_height, trace_broadcast
 
 RESULTS = Path(__file__).parent / "results" / "scale_n.json"
@@ -64,7 +76,10 @@ def run_large(ns=(5000, 10_000, 50_000), k: int = 4, seed: int = 3):
                                   **kw))
         wall_events = time.time() - t0
         t0 = time.time()
-        sv = summarize(run_stable("snow", engine="vectorized", **kw))
+        # numpy pinned: the equality below is the float64 contract, and
+        # must hold no matter what REPRO_ENGINE_BACKEND is set to
+        sv = summarize(run_stable("snow", engine="vectorized",
+                                  backend="numpy", **kw))
         wall_vec = time.time() - t0
         assert sv["ldt"] == se["ldt"], "engines must agree bit-exactly"
         view = MembershipView.from_sorted(range(n))
@@ -78,6 +93,70 @@ def run_large(ns=(5000, 10_000, 50_000), k: int = 4, seed: int = 3):
                      "wall_events_s": wall_events, "wall_vec_s": wall_vec,
                      "speedup": wall_events / max(wall_vec, 1e-9),
                      "plan_ms": plan_ms})
+    return rows
+
+
+def run_churn_large(ns=(5000, 50_000), k: int = 4, seed: int = 3,
+                    n_messages: int = 3):
+    """Dynamic membership, both engines, one boundary-aligned §5.4 trace
+    and one shared DelayBank: the epoch-segmented closed form must
+    reproduce the oracle event loop's metrics exactly while being orders
+    of magnitude faster."""
+    rows = []
+    for n in ns:
+        trace = aligned_churn_trace(n, n_messages=n_messages)
+        t0 = time.time()
+        se = summarize(run_trace_aligned("snow", trace, k, seed))
+        wall_events = time.time() - t0
+        t0 = time.time()
+        cv = run_trace_vectorized("snow", trace, k, seed, backend="numpy")
+        sv = summarize(cv)
+        wall_vec = time.time() - t0
+        assert sv["ldt"] == se["ldt"] \
+            and sv["reliability"] == se["reliability"] \
+            and sv["rmr"] == se["rmr"], "churn engines must agree bit-exactly"
+        n_epochs = len(cv.trace.epochs())
+        rows.append({"n": n, "ldt_ms": sv["ldt"] * 1000, "rmr_B": sv["rmr"],
+                     "reliability": sv["reliability"],
+                     "n_messages": n_messages, "n_epochs": n_epochs,
+                     "wall_events_s": wall_events, "wall_vec_s": wall_vec,
+                     "speedup": wall_events / max(wall_vec, 1e-9)})
+    return rows
+
+
+def run_churn_huge(ns=(50_000, 500_000, 1_000_000), k: int = 4,
+                   n_seeds: int = 5, n_messages: int = 10):
+    """Paper-cadence churn AND breakdown beyond the event horizon: the
+    epoch plans are compiled once per trace and shared across seeds;
+    each seed re-samples its bank and re-sweeps."""
+    rows = []
+    for n in ns:
+        for scene, trace in (
+            ("churn", paper_churn_trace(n, n_messages, churn_every=5,
+                                        join_at=1, leave_at=3)),
+            ("breakdown", paper_breakdown_trace(n, n_messages, seed=0,
+                                                crash_every=3)),
+        ):
+            tp = time.time()
+            epochs = compile_trace("snow", trace, k, trace.all_ids())
+            plan_s = time.time() - tp
+            t0 = time.time()
+            seed_rows = trace_sweep("snow", trace, k, seeds=range(n_seeds),
+                                    backend="numpy", epochs=epochs)
+            wall = time.time() - t0
+            ldts = np.array([r["ldt"] for r in seed_rows])
+            rows.append({
+                "n": n, "k": k, "scene": scene, "seeds": n_seeds,
+                "n_messages": n_messages, "n_epochs": len(epochs),
+                "ldt_ms_mean": float(ldts.mean() * 1000),
+                "ldt_ms_ci95": float(1.96 * ldts.std(ddof=1) * 1000
+                                     / np.sqrt(len(ldts))),
+                "rmr_B": float(np.mean([r["rmr"] for r in seed_rows])),
+                "reliability": min(r["reliability"] for r in seed_rows),
+                "wall_s": wall, "per_seed_s": wall / n_seeds,
+                "plan_s": plan_s,
+                "per_seed": seed_rows,
+            })
     return rows
 
 
@@ -152,32 +231,74 @@ def _fmt_huge(rows):
     return out
 
 
+def _fmt_churn_large(rows):
+    out = [(f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
+            f"{'epochs':>6s} {'events_s':>8s} {'vec_s':>7s} {'speedup':>7s}")]
+    for r in rows:
+        out.append(f"{r['n']:6d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
+                   f"{r['reliability']:5.3f} {r['n_epochs']:6d} "
+                   f"{r['wall_events_s']:8.2f} {r['wall_vec_s']:7.3f} "
+                   f"{r['speedup']:6.0f}x")
+    return out
+
+
+def _fmt_churn_huge(rows):
+    out = [(f"{'n':>8s} {'scene':>10s} {'seeds':>5s} {'ldt_ms':>7s} "
+            f"{'±ci95':>6s} {'rmr_B':>6s} {'rel':>5s} {'epochs':>6s} "
+            f"{'wall_s':>7s} {'s/seed':>7s} {'plan_s':>7s}")]
+    for r in rows:
+        out.append(f"{r['n']:8d} {r['scene']:>10s} {r['seeds']:5d} "
+                   f"{r['ldt_ms_mean']:7.0f} {r['ldt_ms_ci95']:6.1f} "
+                   f"{r['rmr_B']:6.1f} {r['reliability']:5.3f} "
+                   f"{r['n_epochs']:6d} {r['wall_s']:7.2f} "
+                   f"{r['per_seed_s']:7.3f} {r['plan_s']:7.2f}")
+    return out
+
+
 def main(smoke: bool = False):
     global LAST_SMOKE
     if smoke:
         fig = run(ns=(100, 300), n_messages=3)
         large = run_large(ns=(2000,))
+        churn_large = run_churn_large(ns=(2000,))
         huge = run_huge(ns=(20_000,), n_seeds=3)
+        churn_huge = run_churn_huge(ns=(20_000,), n_seeds=2)
         LAST_SMOKE = {
             "ldt_ms": fig[0]["ldt_ms"],
             "reliability": min(r["reliability"] for r in fig + large + huge),
             "vec_speedup": large[0]["speedup"],
+            "churn_ldt_ms": churn_large[0]["ldt_ms"],
+            "churn_reliability": min(
+                [r["reliability"] for r in churn_large]
+                + [r["reliability"] for r in churn_huge
+                   if r["scene"] == "churn"]),
+            "churn_vec_speedup": churn_large[0]["speedup"],
         }
     else:
         fig = run()
         large = run_large()
+        churn_large = run_churn_large()
         huge = run_huge()
+        churn_huge = run_churn_huge()
     out = _fmt(fig)
     out.append("")
     out.append("-- large-scale: events vs closed-form engine (shared bank) --")
     out += _fmt_large(large)
     out.append("")
+    out.append("-- churn large-scale: aligned trace, events vs epoch engine --")
+    out += _fmt_churn_large(churn_large)
+    out.append("")
     out.append("-- huge-scale: closed-form engine only, multi-seed --")
     out += _fmt_huge(huge)
+    out.append("")
+    out.append("-- churn/breakdown huge-scale: epoch engine only, multi-seed --")
+    out += _fmt_churn_huge(churn_huge)
     if not smoke:  # smoke runs must not clobber the tracked trajectory
         RESULTS.parent.mkdir(parents=True, exist_ok=True)
         RESULTS.write_text(json.dumps(
-            {"figure_6a": fig, "large_scale": large, "huge_scale": huge},
+            {"figure_6a": fig, "large_scale": large,
+             "churn_large_scale": churn_large, "huge_scale": huge,
+             "churn_huge_scale": churn_huge},
             indent=2) + "\n")
         out.append(f"(json: {RESULTS})")
     return out

@@ -42,6 +42,8 @@ WALL_RATIO = 2.0          # fail a section on > 2× wall-time regression
 WALL_HEADROOM_S = 1.0     # ... with absolute headroom for tiny sections
 LDT_REL_TOL = 0.35        # seeded smoke LDT may drift only this much
 MIN_VEC_SPEEDUP = 5.0     # closed-form engine must stay clearly ahead
+MIN_CHURN_VEC_SPEEDUP = 3.0   # epoch-segmented churn engine floor (the
+                              # smoke n is small; full bench shows 20x+)
 
 
 def _calibrate() -> float:
@@ -99,17 +101,32 @@ def _check(sections, metrics) -> list:
                 f"{b['wall_s']:.2f}s x machine factor {factor:.2f}, "
                 f"band {WALL_RATIO}x)")
         m, bm = metrics.get(name, {}), b.get("metrics", {})
-        if "ldt_ms" in m and "ldt_ms" in bm and bm["ldt_ms"]:
-            rel = abs(m["ldt_ms"] - bm["ldt_ms"]) / bm["ldt_ms"]
-            if rel > LDT_REL_TOL:
-                problems.append(f"{name}: ldt_ms {m['ldt_ms']:.0f} vs "
-                                f"baseline {bm['ldt_ms']:.0f} ({rel:.0%})")
-        if m.get("reliability", 1.0) < bm.get("reliability", 0.0) - 1e-9:
-            problems.append(f"{name}: reliability dropped to "
-                            f"{m['reliability']}")
-        if "vec_speedup" in m and m["vec_speedup"] < MIN_VEC_SPEEDUP:
-            problems.append(f"{name}: closed-form speedup "
-                            f"{m['vec_speedup']:.1f}x < {MIN_VEC_SPEEDUP}x")
+        # banded metric families, matched by key suffix so the stable
+        # and churn variants (ldt_ms / churn_ldt_ms, ...) share rules:
+        # *ldt_ms   — seeded drift band vs the committed baseline
+        # *reliability — may never drop below the baseline
+        # *speedup  — closed-form engines must stay clearly ahead
+        for key in sorted(set(m) | set(bm)):
+            mval, bval = m.get(key), bm.get(key)
+            if mval is None:
+                continue
+            if key.endswith("ldt_ms") and bval:
+                rel = abs(mval - bval) / bval
+                if rel > LDT_REL_TOL:
+                    problems.append(f"{name}: {key} {mval:.0f} vs "
+                                    f"baseline {bval:.0f} ({rel:.0%})")
+            elif key.endswith("reliability"):
+                if mval < (bval or 0.0) - 1e-9:
+                    problems.append(f"{name}: {key} dropped to {mval}")
+            elif key.endswith("speedup"):
+                # absolute floor — fires even when the baseline predates
+                # the metric, so a collapsed engine can't hide behind a
+                # stale smoke_baseline.json
+                floor = (MIN_CHURN_VEC_SPEEDUP if "churn" in key
+                         else MIN_VEC_SPEEDUP)
+                if mval < floor:
+                    problems.append(f"{name}: {key} "
+                                    f"{mval:.1f}x < {floor}x")
     return problems
 
 

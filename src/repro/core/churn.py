@@ -1,0 +1,404 @@
+"""Explicit, seedable membership-event schedules (ChurnTrace).
+
+The paper's dynamic scenarios (§5.4 churn, §5.5 breakdown) were driven
+by closures buried inside the scenario runners, which tied the event
+schedule to the event-driven simulator.  A :class:`ChurnTrace` lifts the
+schedule out: an ordered list of timestamped membership events
+(join / graceful leave / silent crash / eviction) plus the broadcast
+origination times, consumed by BOTH engines —
+
+* the event loop replays the trace through protocol-level closures
+  (``repro.core.scenarios``), keeping full Snow semantics (reliable
+  member-update broadcasts, SWIM, anti-entropy) or, in *oracle* mode,
+  applying events synchronously to one shared view;
+* the closed-form engine (``repro.core.engine.run_trace_vectorized``)
+  segments simulated time into **epochs** at the trace's events: within
+  an epoch the view is frozen, so every broadcast originating in the
+  epoch reduces through one level-synchronous sweep over that epoch's
+  ``TreePlan``.
+
+Epoch semantics: an event takes effect for every message originating at
+``t >= event.t``.  A trace is **boundary-aligned** when no broadcast is
+still disseminating at any event time (each event falls in a quiescent
+gap); on aligned traces the two engines agree bit-for-bit (see
+``tests/test_churn_engine.py``), otherwise they are statistically
+pinned.  The paper cadences (events 110–130 ms into the message second)
+are deliberately *not* aligned — they exercise mid-flight membership
+change — while the ``aligned_*`` generators space messages and events so
+the closed form is exact.
+
+Conventions shared by every generator here: fixed members are ids
+``0..n-1``, transient (joining) ids are allocated from ``n`` upward and
+never reused, and the broadcast source never leaves or crashes.
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .ids import NodeId
+
+#: event kinds, in the order membership state is affected:
+#: ``join`` adds a member; ``leave`` removes it (graceful — announced in
+#: the event engine); ``crash`` blackholes a member that STAYS in every
+#: view (§5.5 silent failure); ``evict`` removes a crashed member from
+#: the views (the trace-level surrogate for SWIM detection, or an
+#: explicit oracle removal).
+KINDS = ("join", "leave", "crash", "evict")
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    t: float
+    kind: str
+    node: NodeId
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+
+@dataclass(frozen=True)
+class Epoch:
+    """A maximal run of broadcasts sharing one frozen membership state."""
+
+    members: np.ndarray          #: (n_e,) sorted member ids of the epoch
+    crashed: np.ndarray          #: sorted crashed-but-not-evicted member ids
+    first: int                   #: index of the epoch's first message
+    times: np.ndarray            #: (m_e,) absolute origination times
+
+    @property
+    def count(self) -> int:
+        return int(self.times.shape[0])
+
+
+@dataclass(frozen=True)
+class ChurnTrace:
+    """A deterministic membership schedule both engines consume."""
+
+    n: int                                #: fixed members are ids 0..n-1
+    events: Tuple[ChurnEvent, ...]        #: time-sorted membership events
+    msg_times: Tuple[float, ...]          #: ascending origination times
+    src: NodeId = 0                       #: broadcast initiator
+
+    def __post_init__(self):
+        ts = [e.t for e in self.events]
+        assert ts == sorted(ts), "events must be time-sorted"
+        mt = list(self.msg_times)
+        assert mt == sorted(mt), "msg_times must be ascending"
+
+    @property
+    def n_messages(self) -> int:
+        return len(self.msg_times)
+
+    def join_ids(self) -> Tuple[NodeId, ...]:
+        return tuple(e.node for e in self.events if e.kind == "join")
+
+    def all_ids(self) -> np.ndarray:
+        """Every id that is ever a member: fixed ∪ joins, sorted.  The
+        :class:`~repro.core.engine.DelayBank` is sampled over this set so
+        transient nodes draw from the same pre-sampled planes."""
+        ids = set(range(self.n)) | set(self.join_ids())
+        return np.asarray(sorted(ids))
+
+    def horizon(self) -> float:
+        last = self.msg_times[-1] if self.msg_times else 0.0
+        if self.events:
+            last = max(last, self.events[-1].t)
+        return last
+
+    # ------------------------------------------------------------------ #
+    # Epoch segmentation                                                  #
+    # ------------------------------------------------------------------ #
+    def epochs(self) -> List[Epoch]:
+        """Partition the broadcasts into frozen-view epochs.
+
+        Events apply to every message with origination time ``>= t``
+        (ties break event-first, matching the scenario schedules where
+        events always carry sub-second offsets before the next message).
+        Events that do not change state — an evict of an already-left
+        node, a crash of a non-member — do not split an epoch.
+        """
+        members: Set[NodeId] = set(range(self.n))
+        crashed: Set[NodeId] = set()
+        out: List[Epoch] = []
+        cur_first: Optional[int] = None
+        cur_times: List[float] = []
+        ei = 0
+
+        def close():
+            if cur_first is not None:
+                out.append(Epoch(
+                    members=np.asarray(sorted(members_at_open)),
+                    crashed=np.asarray(sorted(crashed_at_open)),
+                    first=cur_first,
+                    times=np.asarray(cur_times, dtype=np.float64)))
+
+        members_at_open: Set[NodeId] = set(members)
+        crashed_at_open: Set[NodeId] = set()
+        for j, tm in enumerate(self.msg_times):
+            changed = False
+            while ei < len(self.events) and self.events[ei].t <= tm:
+                changed |= _apply(self.events[ei], members, crashed)
+                ei += 1
+            if cur_first is None or changed:
+                close()
+                cur_first, cur_times = j, []
+                members_at_open = set(members)
+                crashed_at_open = set(crashed)
+            cur_times.append(tm)
+        close()
+        return out
+
+    def is_boundary_aligned(self, quiescence_s: float) -> bool:
+        """True when every event falls at least ``quiescence_s`` after
+        the closest preceding broadcast — i.e. assuming every broadcast
+        fully disseminates within ``quiescence_s``, no event lands
+        mid-flight and the closed form is exact."""
+        times = np.asarray(self.msg_times)
+        for e in self.events:
+            before = times[times < e.t]
+            if before.size and e.t - before[-1] < quiescence_s:
+                return False
+        return True
+
+
+def _apply(ev: ChurnEvent, members: Set[NodeId], crashed: Set[NodeId]) -> bool:
+    if ev.kind == "join":
+        if ev.node in members:
+            return False
+        members.add(ev.node)
+        return True
+    if ev.kind == "crash":
+        if ev.node not in members or ev.node in crashed:
+            return False
+        crashed.add(ev.node)
+        return True
+    # leave / evict both remove from membership; a leave of a crashed
+    # node also clears its crash mark (it is gone either way)
+    if ev.node not in members:
+        return False
+    members.discard(ev.node)
+    crashed.discard(ev.node)
+    return True
+
+
+# ------------------------------------------------------------------ #
+# Paper cadences (§5.4 / §5.5)                                        #
+# ------------------------------------------------------------------ #
+def paper_churn_trace(n: int, n_messages: int = 100, rate_s: float = 1.0,
+                      churn_every: int = 10, join_at: int = 3,
+                      leave_at: int = 8) -> ChurnTrace:
+    """§5.4: one fresh node joins every ``churn_every`` messages (110 ms
+    into message ``join_at`` of the cycle) and the oldest live transient
+    gracefully leaves at message ``leave_at`` (130 ms in).  Join ids are
+    allocated ``n, n+1, ...``; leaves pop joins FIFO, exactly like the
+    original closure-based scheduler."""
+    events: List[ChurnEvent] = []
+    q: deque = deque()
+    next_id = n
+    for i in range(n_messages):
+        t = i * rate_s
+        if i % churn_every == join_at:
+            events.append(ChurnEvent(t + 0.11, "join", next_id))
+            q.append(next_id)
+            next_id += 1
+        if i % churn_every == leave_at and q:
+            events.append(ChurnEvent(t + 0.13, "leave", q.popleft()))
+    return ChurnTrace(n=n, events=tuple(events),
+                      msg_times=tuple(i * rate_s for i in range(n_messages)))
+
+
+def paper_breakdown_trace(n: int, n_messages: int = 100, rate_s: float = 1.0,
+                          seed: int = 0, crash_every: int = 10,
+                          src: NodeId = 0,
+                          detect_after: Optional[float] = 2.5) -> ChurnTrace:
+    """§5.5: every ``crash_every`` messages a random fixed node silently
+    crashes (10 ms into the message second; the broadcast follows at
+    20 ms).  Victims are drawn upfront with the same RNG stream and the
+    same alive-candidate ordering the closure-based scheduler used, so
+    the event engine replays identical crashes.
+
+    ``detect_after`` adds an ``evict`` event that many seconds after each
+    crash — the trace-level surrogate for SWIM detection + EVICT
+    broadcast (probe interval 1 s, timeout 0.5 s, indirect round, then
+    the eviction propagates: ≈2.5 s end to end).  The event engine
+    ignores evict events when SWIM is live; the closed-form engine
+    consumes them so crashed members stop depressing Reliability once
+    "detected", exactly the paper's Table 2 shape."""
+    rng = random.Random(seed ^ 0xDEAD)
+    crashed: Set[NodeId] = set()
+    events: List[ChurnEvent] = []
+    for i in range(n_messages):
+        t = i * rate_s
+        if i > 0 and i % crash_every == 0:
+            cands = [x for x in range(n) if x != src and x not in crashed]
+            if cands:
+                victim = rng.choice(cands)
+                crashed.add(victim)
+                events.append(ChurnEvent(t + 0.01, "crash", victim))
+                if detect_after is not None:
+                    events.append(
+                        ChurnEvent(t + 0.01 + detect_after, "evict", victim))
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(
+        n=n, events=tuple(events), src=src,
+        msg_times=tuple(i * rate_s + 0.02 for i in range(n_messages)))
+
+
+# ------------------------------------------------------------------ #
+# Boundary-aligned variants (bit-exact differential testing)          #
+# ------------------------------------------------------------------ #
+def aligned_churn_trace(n: int, n_messages: int = 4, gap_s: float = 30.0,
+                        churn_every: int = 2) -> ChurnTrace:
+    """Paper-§5.4-shaped churn, stretched so every event falls in the
+    quiescent middle of a ``gap_s`` inter-message gap: a transient joins
+    after message ``i`` whenever ``i % churn_every == 0`` and the oldest
+    one leaves after the next message.  Bit-exact across engines."""
+    events: List[ChurnEvent] = []
+    q: deque = deque()
+    next_id = n
+    for i in range(n_messages):
+        t = (i + 0.5) * gap_s
+        if i % churn_every == 0:
+            events.append(ChurnEvent(t, "join", next_id))
+            q.append(next_id)
+            next_id += 1
+        elif q:
+            events.append(ChurnEvent(t, "leave", q.popleft()))
+    return ChurnTrace(n=n, events=tuple(events),
+                      msg_times=tuple(i * gap_s for i in range(n_messages)))
+
+
+def aligned_breakdown_trace(n: int, n_messages: int = 4, gap_s: float = 30.0,
+                            seed: int = 0, crash_every: int = 2,
+                            detect_msgs: int = 1,
+                            src: NodeId = 0) -> ChurnTrace:
+    """§5.5 stretched onto quiescent boundaries: a random fixed node
+    crashes mid-gap after message ``i`` for ``i % crash_every == 0`` and
+    is evicted ``detect_msgs`` messages later — so the messages in
+    between see the crashed member blackholed-but-intended (the
+    Reliability dip), and the engines stay bit-exact."""
+    rng = random.Random(seed ^ 0xDEAD)
+    crashed: Set[NodeId] = set()
+    events: List[ChurnEvent] = []
+    for i in range(n_messages):
+        if i % crash_every == 0:
+            cands = [x for x in range(n) if x != src and x not in crashed]
+            if not cands:
+                continue
+            victim = rng.choice(cands)
+            crashed.add(victim)
+            events.append(ChurnEvent((i + 0.5) * gap_s, "crash", victim))
+            events.append(
+                ChurnEvent((i + detect_msgs + 0.5) * gap_s, "evict", victim))
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(n=n, events=tuple(events), src=src,
+                      msg_times=tuple(i * gap_s for i in range(n_messages)))
+
+
+# ------------------------------------------------------------------ #
+# New scenario families                                               #
+# ------------------------------------------------------------------ #
+def burst_churn_trace(n: int, n_messages: int = 40, rate_s: float = 1.0,
+                      burst: int = 20, every: int = 20,
+                      dwell: int = 10) -> ChurnTrace:
+    """Burst churn: every ``every`` messages a whole batch of ``burst``
+    nodes joins at once (an autoscaler scale-up), then leaves together
+    ``dwell`` messages later (scale-down).  All batch events share one
+    timestamp, so a burst costs a single epoch boundary."""
+    events: List[ChurnEvent] = []
+    next_id = n
+    for i in range(n_messages):
+        t = i * rate_s
+        if i % every == every // 2:
+            batch = list(range(next_id, next_id + burst))
+            next_id += burst
+            events.extend(ChurnEvent(t + 0.11, "join", b) for b in batch)
+            tl = (i + dwell) * rate_s + 0.13
+            if i + dwell < n_messages:
+                events.extend(ChurnEvent(tl, "leave", b) for b in batch)
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(n=n, events=tuple(events),
+                      msg_times=tuple(i * rate_s for i in range(n_messages)))
+
+
+def correlated_failure_trace(n: int, n_messages: int = 30,
+                             rate_s: float = 1.0, group: int = 8,
+                             at_message: int = 10, seed: int = 0,
+                             detect_after: float = 2.5,
+                             src: NodeId = 0) -> ChurnTrace:
+    """Correlated failures: a contiguous run of ``group`` ring-adjacent
+    ids (one rack / one host) crashes at the same instant and is evicted
+    together ``detect_after`` seconds later.  Contiguity is the worst
+    case for a ring-structured tree — whole sibling regions vanish."""
+    rng = random.Random(seed ^ 0xFA11)
+    start = rng.randrange(1, max(2, n - group))  # never the source (id 0…)
+    victims = [v for v in range(start, min(start + group, n)) if v != src]
+    t = at_message * rate_s + 0.01
+    events = [ChurnEvent(t, "crash", v) for v in victims]
+    events += [ChurnEvent(t + detect_after, "evict", v) for v in victims]
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(n=n, events=tuple(events), src=src,
+                      msg_times=tuple(i * rate_s for i in range(n_messages)))
+
+
+def flash_crowd_trace(n: int, n_messages: int = 30, rate_s: float = 1.0,
+                      crowd: Optional[int] = None, arrive_over: int = 5,
+                      stay: int = 15) -> ChurnTrace:
+    """Flash crowd: ``crowd`` transients (default n/2) arrive in waves
+    over ``arrive_over`` messages — the cluster grows by half — stay for
+    ``stay`` messages, then drain away in the same wave pattern."""
+    crowd = (n // 2) if crowd is None else crowd
+    per_wave = max(1, crowd // max(1, arrive_over))
+    events: List[ChurnEvent] = []
+    next_id = n
+    waves: List[List[int]] = []
+    made = 0
+    for w in range(arrive_over):
+        size = min(per_wave, crowd - made) if w < arrive_over - 1 \
+            else crowd - made
+        if size <= 0:
+            break
+        batch = list(range(next_id, next_id + size))
+        next_id += size
+        made += size
+        waves.append(batch)
+        t = (1 + w) * rate_s + 0.11
+        events.extend(ChurnEvent(t, "join", b) for b in batch)
+    for w, batch in enumerate(waves):
+        t = (1 + w + arrive_over + stay) * rate_s + 0.13
+        events.extend(ChurnEvent(t, "leave", b) for b in batch)
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(n=n, events=tuple(events),
+                      msg_times=tuple(i * rate_s for i in range(n_messages)))
+
+
+def rolling_restart_trace(n: int, n_messages: int = 30, rate_s: float = 1.0,
+                          batch: int = 1, downtime_s: float = 2.0,
+                          src: NodeId = 0) -> ChurnTrace:
+    """Rolling restart: fixed nodes leave in ring order, ``batch`` at a
+    time, and their replacements (fresh ids — a restarted cloud instance
+    comes back with a new identity) join ``downtime_s`` later.  The
+    source is skipped.  Restarts proceed one batch per message until the
+    fleet has turned over or messages run out."""
+    events: List[ChurnEvent] = []
+    next_id = n
+    victims = [v for v in range(n) if v != src]
+    b = 0
+    for i in range(1, n_messages):
+        group = victims[b:b + batch]
+        if not group:
+            break
+        b += batch
+        t = i * rate_s + 0.11
+        for v in group:
+            events.append(ChurnEvent(t, "leave", v))
+            events.append(ChurnEvent(t + downtime_s, "join", next_id))
+            next_id += 1
+    events.sort(key=lambda e: e.t)
+    return ChurnTrace(n=n, events=tuple(events), src=src,
+                      msg_times=tuple(i * rate_s for i in range(n_messages)))

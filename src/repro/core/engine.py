@@ -24,22 +24,51 @@ the sweep computes ``(t[parent] + fwd[parent]) + link[v]`` as two
 separate adds in that order.  ``tests/test_engine.py`` asserts exact
 (not statistical) equality of every first-delivery time.
 
-The engine is sound only where its premises hold — frozen uniform view,
-no reliable retries; churn / breakdown / SWIM paths keep the event loop.
+Epoch segmentation (churn / breakdown)
+--------------------------------------
+The closed form needs a frozen view, not a *permanently* frozen one.  A
+:class:`~repro.core.churn.ChurnTrace` partitions simulated time into
+epochs at its membership events; within an epoch the view is constant,
+so :func:`run_trace_vectorized` re-plans per epoch and reduces every
+broadcast of the epoch in one batched sweep.  Crashed-but-not-yet-
+evicted members stay in the membership (and the intended sets) but are
+blackholed: :func:`reach_mask` kills them and their whole subtrees, so
+Reliability dips exactly as in the paper's §5.5 — until the trace's
+``evict`` event re-plans them away.  See DESIGN.md §6.
+
+The remaining event-loop-only territory: reliable-message retries
+(epoch > 0 rebroadcasts), live SWIM/anti-entropy protocol traffic, and
+non-Snow baselines.
+
+``REPRO_ENGINE_BACKEND`` (``numpy`` | ``jax``) selects the default array
+backend wherever a caller does not pass one — the CI matrix runs the
+suite under both.
 """
 from __future__ import annotations
 
+import os
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
+from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .ids import NodeId
 from .messages import Data
 from .planner import (PRIMARY, SECONDARY, TreePlan, plan_broadcast,
                       plan_colored)
 from .sim import LatencyModel, Metrics, Sim, straggler_sample
+
+
+def default_backend() -> str:
+    """Array backend used when a caller passes ``backend=None`` —
+    ``$REPRO_ENGINE_BACKEND`` (the CI matrix axis) or ``"numpy"``."""
+    return os.environ.get("REPRO_ENGINE_BACKEND", "numpy")
+
+
+def _resolve_backend(backend: Optional[str]) -> str:
+    return default_backend() if backend is None else backend
 
 
 def _slot(tree: Optional[int]) -> int:
@@ -174,6 +203,24 @@ def bank_for_stable(seed: int, n: int, protocol: str, n_messages: int,
                             straggler_delay=straggler_delay)
 
 
+def bank_for_trace(seed: int, trace: ChurnTrace, protocol: str,
+                   *, straggler_frac: float = 0.05,
+                   straggler_delay: float = 1.0) -> DelayBank:
+    """One bank covering a whole :class:`ChurnTrace`: every id that is
+    ever a member (fixed ∪ joins) gets a delay row, every broadcast a
+    column.  The straggler draw replicates ``build_cluster`` /
+    ``assign_profiles`` over the *fixed* ids (first use of the profile
+    RNG), so the event engine on the same trace picks the same
+    stragglers; transients are never stragglers (they get fresh default
+    profiles in the scenarios, same as here)."""
+    rng = random.Random(seed ^ 0x5EED)
+    stragglers = straggler_sample(rng, range(trace.n), straggler_frac)
+    return DelayBank.sample(seed, trace.all_ids(), stragglers,
+                            len(trace.msg_times),
+                            n_slots=2 if protocol == "coloring" else 1,
+                            straggler_delay=straggler_delay)
+
+
 # ------------------------------------------------------------------ #
 # Level-synchronous closed-form sweep                                 #
 # ------------------------------------------------------------------ #
@@ -187,7 +234,7 @@ def _levels(depth: np.ndarray) -> List[np.ndarray]:
 
 
 def delivery_times(plan: TreePlan, fwd, link, t0=0.0,
-                   backend: str = "numpy"):
+                   backend: Optional[str] = None):
     """First-delivery time of every node of ``plan``, closed form.
 
     ``fwd``/``link`` are ``(..., n)`` arrays (leading batch dims are
@@ -197,6 +244,7 @@ def delivery_times(plan: TreePlan, fwd, link, t0=0.0,
     grouping ``(t[parent] + fwd[parent]) + link[v]`` matches the event
     loop exactly (see module docstring).
     """
+    backend = _resolve_backend(backend)
     parent = np.asarray(plan.parent)
     depth = np.asarray(plan.depth)
     fwd = np.asarray(fwd, dtype=np.float64)
@@ -279,9 +327,24 @@ def plan_bytes(plans: Sequence[TreePlan], payload: int) -> int:
     return size * sum(int((np.asarray(p.depth) >= 1).sum()) for p in plans)
 
 
+def reach_mask(plan: TreePlan, crashed: np.ndarray) -> np.ndarray:
+    """(n,) bool — which nodes a broadcast over ``plan`` actually reaches
+    when the ``crashed`` (bool mask over ring indices) members are
+    silently blackholed (§5.5): a crashed node's inbound traffic is
+    dropped, it never forwards, so its entire subtree goes dark.  One
+    level-synchronous AND-sweep down the plan."""
+    depth = np.asarray(plan.depth)
+    parent = np.asarray(plan.parent)
+    ok = ~np.asarray(crashed, dtype=bool)
+    ok &= depth >= 0
+    for idx in _levels(depth):
+        ok[idx] &= ok[parent[idx]]
+    return ok
+
+
 def broadcast_times(plans: Sequence[TreePlan], bank: DelayBank,
                     n_messages: int, rate_s: float = 1.0,
-                    backend: str = "numpy") -> np.ndarray:
+                    backend: Optional[str] = None) -> np.ndarray:
     """(M, n) absolute first-delivery times for M broadcasts originating
     at ``i * rate_s`` — the elementwise min over the plan set."""
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
@@ -312,30 +375,45 @@ class ArrayMetrics(Metrics):
         self.members = np.ascontiguousarray(members)
         self.times: Dict[int, np.ndarray] = {}      # (n,) absolute; NaN=miss
         self.src_index: Dict[int, int] = {}
+        #: per-message member arrays for epoch runs, where membership
+        #: changes between broadcasts; absent ⇒ ``self.members``
+        self.msg_members: Dict[int, np.ndarray] = {}
 
     def record_message(self, mid: int, t0: float, src_index: int,
-                       times: np.ndarray, nbytes: int) -> None:
+                       times: np.ndarray, nbytes: int,
+                       members: Optional[np.ndarray] = None) -> None:
         self.start[mid] = t0
         self.src_index[mid] = src_index
         self.times[mid] = times
         self.data_bytes[mid] = nbytes
+        if members is not None:
+            self.msg_members[mid] = members
 
     def times_for(self, mid: int) -> np.ndarray:
         return self.times[mid]
 
+    def members_for(self, mid: int) -> np.ndarray:
+        """The membership (= ``times_for`` indexing) of one broadcast."""
+        return self.msg_members.get(mid, self.members)
+
     def per_message(self, subset: Optional[Set[NodeId]] = None) -> List[dict]:
-        sel = None
+        sub = None
         if subset is not None:
             sub = np.fromiter(subset, dtype=self.members.dtype,
                               count=len(subset))
-            sel = np.isin(self.members, sub)
+        sel_cache: Dict[int, np.ndarray] = {}   # one isin per member array
         rows = []
-        n = int(self.members.shape[0])
         for mid, t0 in sorted(self.start.items()):
-            mask = np.ones(n, dtype=bool)
+            mem = self.msg_members.get(mid, self.members)
+            if sub is None:
+                mask = np.ones(mem.shape[0], dtype=bool)
+            else:
+                sel = sel_cache.get(id(mem))
+                if sel is None:
+                    sel = np.isin(mem, sub)
+                    sel_cache[id(mem)] = sel
+                mask = sel.copy()
             mask[self.src_index[mid]] = False        # intended excludes src
-            if sel is not None:
-                mask &= sel
             n_int = int(mask.sum())
             if n_int == 0:
                 continue
@@ -365,12 +443,13 @@ class VectorCluster:
     k: int
     plans: Tuple[TreePlan, ...] = ()
     bank: Optional[DelayBank] = None
+    trace: Optional[ChurnTrace] = None
 
 
 def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
                           n_messages: int = 100, rate_s: float = 1.0,
                           seed: int = 0, payload: int = 64,
-                          backend: str = "numpy",
+                          backend: Optional[str] = None,
                           bank: Optional[DelayBank] = None,
                           plans: Optional[Tuple[TreePlan, ...]] = None,
                           ) -> VectorCluster:
@@ -399,7 +478,7 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
 
 def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
                  n_messages: int = 2, rate_s: float = 1.0,
-                 backend: str = "numpy",
+                 backend: Optional[str] = None,
                  plans: Optional[Tuple[TreePlan, ...]] = None) -> List[dict]:
     """Multi-seed stable-scenario sweep for the scale benchmarks.
 
@@ -432,6 +511,206 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
             "rmr": nbytes / (n - 1),
             "reliability": float(delivered.mean()) / (n - 1),
             "n_messages": n_messages,
+            "wall_s": time.time() - tw,
+            "plan_s": plan_s,
+        })
+    return rows
+
+
+# ------------------------------------------------------------------ #
+# Epoch-segmented engine: churn & breakdown in closed form            #
+# ------------------------------------------------------------------ #
+@dataclass
+class _EpochPlan:
+    """One epoch's precompiled state: plans, bank rows, blackholing."""
+
+    members: np.ndarray
+    rows: np.ndarray                 #: bank row index of every member
+    first: int                       #: first message column of the epoch
+    times: np.ndarray                #: (m_e,) origination times
+    plans: Tuple[TreePlan, ...]
+    reach: Tuple[Optional[np.ndarray], ...]   #: per-plan mask; None=all
+    nbytes: int                      #: DATA bytes one broadcast moves
+    src_index: int
+
+    @property
+    def count(self) -> int:
+        return int(self.times.shape[0])
+
+
+def compile_trace(protocol: str, trace: ChurnTrace, k: int,
+                  bank_members: np.ndarray,
+                  payload: int = 64) -> List[_EpochPlan]:
+    """Segment ``trace`` into epochs and plan each one — everything that
+    depends on the trace but NOT on the delay seed, so multi-seed sweeps
+    (``trace_sweep``) pay for planning once."""
+    size = Data(0, 0, None, None, payload).size
+    out: List[_EpochPlan] = []
+    for ep in trace.epochs():
+        members = ep.members
+        assert int(np.searchsorted(members, trace.src)) < members.shape[0] \
+            and members[np.searchsorted(members, trace.src)] == trace.src, \
+            "the broadcast source left or was evicted mid-trace"
+        plans = stable_plans(protocol, members, trace.src, k)
+        cmask = np.isin(members, ep.crashed) if ep.crashed.size else None
+        reach: List[Optional[np.ndarray]] = []
+        receipts = 0
+        for plan in plans:
+            if cmask is None:
+                reach.append(None)
+                receipts += int((np.asarray(plan.depth) >= 1).sum())
+            else:
+                ok = reach_mask(plan, cmask)
+                reach.append(ok)
+                receipts += int((ok & (np.asarray(plan.depth) >= 1)).sum())
+        out.append(_EpochPlan(
+            members=members,
+            rows=np.searchsorted(bank_members, members),
+            first=ep.first, times=ep.times, plans=plans,
+            reach=tuple(reach), nbytes=size * receipts,
+            src_index=int(np.searchsorted(members, trace.src))))
+    return out
+
+
+def _epoch_times(ep: _EpochPlan, bank: DelayBank,
+                 backend: Optional[str]) -> np.ndarray:
+    """(m_e, n_e) first-delivery times of one epoch's broadcasts: the
+    stable closed form over the epoch's plan set, restricted to the
+    epoch's bank rows and message columns, with crashed subtrees NaN'd
+    out per tree *before* the coloring min (a node unreachable on one
+    tree may still be delivered by the other)."""
+    # one-shot gather of exactly the (rows × columns) block needed —
+    # row-indexing first would copy the full message axis per epoch
+    rows = ep.rows[:, None]
+    cols = np.arange(ep.first, ep.first + ep.count)[None, :]
+    total = None
+    for plan, ok in zip(ep.plans, ep.reach):
+        s = _slot(plan.tree)
+        fwd = np.ascontiguousarray(bank.fwd[rows, cols, s].T)
+        link = np.ascontiguousarray(bank.link[rows, cols, s].T)
+        t = delivery_times(plan, fwd, link, t0=ep.times, backend=backend)
+        if ok is not None:
+            t = np.where(ok, t, np.nan)
+        total = t if total is None else np.fmin(total, t)
+    return total
+
+
+def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
+                         seed: int = 0, payload: int = 64,
+                         backend: Optional[str] = None,
+                         bank: Optional[DelayBank] = None) -> VectorCluster:
+    """Replay a :class:`ChurnTrace` in closed form: one re-plan and one
+    level-synchronous sweep per epoch, all of an epoch's broadcasts
+    batched.  Intended sets follow the paper's methodology — the view at
+    send time, crashed-but-not-evicted members included — so Reliability
+    dips through crash windows and recovers at eviction.
+
+    On boundary-aligned traces this is bit-exact against
+    ``scenarios.run_trace_aligned`` (the oracle-membership event loop)
+    on the shared :func:`bank_for_trace`; on mid-flight traces (the
+    paper cadences) it is the frozen-view-at-origination model the
+    differential tests pin statistically."""
+    from .messages import fresh_mid
+
+    assert protocol in ("snow", "coloring"), \
+        f"closed-form engine models snow/coloring, not {protocol!r}"
+    backend = _resolve_backend(backend)
+    if bank is None:
+        bank = bank_for_trace(seed, trace, protocol)
+    epochs = compile_trace(protocol, trace, k, bank.members, payload)
+    metrics = ArrayMetrics(bank.members)
+    all_plans: List[TreePlan] = []
+    for ep in epochs:
+        total = _epoch_times(ep, bank, backend)
+        for j in range(ep.count):
+            metrics.record_message(fresh_mid(), float(ep.times[j]),
+                                   ep.src_index, total[j], ep.nbytes,
+                                   members=ep.members)
+        all_plans.extend(ep.plans)
+    return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
+                         nodes={}, fixed=list(range(trace.n)),
+                         protocol=protocol, k=k, plans=tuple(all_plans),
+                         bank=bank, trace=trace)
+
+
+def run_churn_vectorized(protocol: str, n: int = 500, k: int = 4,
+                         n_messages: int = 100, rate_s: float = 1.0,
+                         seed: int = 0, payload: int = 64,
+                         churn_every: int = 10,
+                         backend: Optional[str] = None,
+                         trace: Optional[ChurnTrace] = None) -> VectorCluster:
+    """§5.4 churn in closed form (paper cadence unless ``trace`` given)."""
+    if trace is None:
+        trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
+    return run_trace_vectorized(protocol, trace, k, seed, payload, backend)
+
+
+def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
+                             n_messages: int = 100, rate_s: float = 1.0,
+                             seed: int = 0, payload: int = 64,
+                             crash_every: int = 10,
+                             detect_after: Optional[float] = 2.5,
+                             backend: Optional[str] = None,
+                             trace: Optional[ChurnTrace] = None
+                             ) -> VectorCluster:
+    """§5.5 breakdown in closed form: silent crashes blackhole subtrees
+    until the ``detect_after`` eviction surrogate re-plans them away."""
+    if trace is None:
+        trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
+                                      crash_every, detect_after=detect_after)
+    return run_trace_vectorized(protocol, trace, k, seed, payload, backend)
+
+
+def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
+                seeds: Sequence[int], backend: Optional[str] = None,
+                payload: int = 64,
+                epochs: Optional[List[_EpochPlan]] = None) -> List[dict]:
+    """Multi-seed churn/breakdown sweep for the scale benchmarks.
+
+    Epoch plans depend only on the trace and are compiled once; each
+    seed re-samples its bank and re-sweeps.  Metrics reduce over the
+    paper's fixed subset directly on the arrays, using the generator
+    invariant that fixed ids are ``< trace.n`` and transients are not.
+    """
+    import time
+
+    backend = _resolve_backend(backend)
+    bank_members = trace.all_ids()
+    plan_s = 0.0
+    if epochs is None:
+        tp = time.time()
+        epochs = compile_trace(protocol, trace, k, bank_members, payload)
+        plan_s = time.time() - tp
+    fixed_sel = [(ep.members < trace.n) & (ep.members != trace.src)
+                 for ep in epochs]
+    rows = []
+    for seed in seeds:
+        tw = time.time()
+        bank = bank_for_trace(seed, trace, protocol)
+        ldts: List[np.ndarray] = []
+        rels: List[np.ndarray] = []
+        rmrs: List[float] = []
+        for ep, sel in zip(epochs, fixed_sel):
+            total = _epoch_times(ep, bank, backend)
+            sub = total[:, sel] - ep.times[:, None]
+            cnt = (~np.isnan(sub)).sum(axis=1)
+            ldt = np.full(ep.count, np.nan)
+            got = cnt > 0
+            if got.any():
+                ldt[got] = np.nanmax(sub[got], axis=1)
+            n_int = int(sel.sum())
+            ldts.append(ldt)
+            rels.append(cnt / max(1, n_int))
+            rmrs.extend([ep.nbytes / max(1, n_int)] * ep.count)
+        ldt_all = np.concatenate(ldts)
+        rel_all = np.concatenate(rels)
+        rows.append({
+            "seed": int(seed), "n": trace.n, "k": k,
+            "ldt": float(np.nanmean(ldt_all)),
+            "rmr": float(np.mean(rmrs)),
+            "reliability": float(rel_all.mean()),
+            "n_messages": len(trace.msg_times),
+            "n_epochs": len(epochs),
             "wall_s": time.time() - tw,
             "plan_s": plan_s,
         })

@@ -14,14 +14,26 @@ Scenarios:
                       gracefully leaves, repeatedly.
 * ``run_breakdown`` — §5.5: every 10 messages one random fixed node
                       silently crashes (traffic blackholed).
+
+Since PR 3 the dynamic scenarios are driven by an explicit
+:class:`~repro.core.churn.ChurnTrace` — the same seedable event schedule
+the epoch-segmented closed-form engine replays — and route snow/coloring
+through ``engine="auto"`` → vectorized, keeping the event loop for the
+gossip/plumtree/flooding baselines, for reliable-message runs, and for
+full protocol fidelity on demand (``engine="events"``).
+``run_trace_aligned`` is the oracle-membership event loop used by the
+differential tests: on boundary-aligned traces it matches the
+vectorized engine bit for bit.
 """
 from __future__ import annotations
 
+import functools
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from .baselines import FloodingNode, GossipNode, PlumtreeNode
+from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .membership import MembershipView
 from .sim import (LatencyModel, Metrics, Network, NodeProfile, Sim,
                   assign_profiles)
@@ -113,15 +125,31 @@ def build_cluster(
     return Cluster(sim, net, metrics, nodes, list(ids), protocol, k)
 
 
-def _drain(cluster: Cluster, extra: float = 12.0) -> None:
-    cluster.sim.run(until=cluster.sim.now + extra)
+def _schedule_trace(cluster: Cluster, trace: ChurnTrace, handlers) -> None:
+    """Schedule every trace event whose kind has a handler — the named
+    closures that replaced the per-iteration scheduling lambdas.  Kinds
+    without a handler are skipped (the events engine ignores ``evict``
+    when live SWIM does the detecting)."""
+    for ev in trace.events:
+        fn = handlers.get(ev.kind)
+        if fn is not None:
+            cluster.sim.at(ev.t, functools.partial(fn, ev.node))
+
+
+def _schedule_broadcasts(cluster: Cluster, trace: ChurnTrace,
+                         payload: int, reliable: bool = False) -> None:
+    def originate() -> None:
+        cluster.broadcast_from(trace.src, payload, reliable=reliable)
+
+    for tm in trace.msg_times:
+        cluster.sim.at(tm, originate)
 
 
 def run_stable(protocol: str, n: int = 500, k: int = 4,
                n_messages: int = 100, rate_s: float = 1.0,
                seed: int = 0, payload: int = 64,
                share_view: bool = False, engine: str = "auto",
-               backend: str = "numpy") -> Cluster:
+               backend: Optional[str] = None) -> Cluster:
     """§5.3 stable scenario.
 
     ``engine``: ``"vectorized"`` evaluates delivery times in closed form
@@ -157,19 +185,34 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
 def run_churn(protocol: str, n: int = 500, k: int = 4,
               n_messages: int = 100, rate_s: float = 1.0,
               seed: int = 0, payload: int = 64,
-              churn_every: int = 10) -> Cluster:
+              churn_every: int = 10, engine: str = "auto",
+              backend: Optional[str] = None,
+              trace: Optional[ChurnTrace] = None) -> Cluster:
     """§5.4: while messages flow, one fresh node joins every
     ``churn_every`` messages and gracefully leaves ``churn_every``
-    messages later.  Metrics are evaluated over the fixed n nodes only."""
-    c = build_cluster(protocol, n, k, seed, enable_anti_entropy=(protocol in ("snow", "coloring")))
-    src = 0
-    rng = random.Random(seed ^ 0xC0FFEE)
-    next_id = [n]
-    live_transients: List[int] = []
+    messages later.  Metrics are evaluated over the fixed n nodes only.
 
-    def do_join() -> None:
-        nid = next_id[0]
-        next_id[0] += 1
+    The schedule comes from a :class:`ChurnTrace` (paper cadence unless
+    ``trace`` is given).  ``engine="auto"`` replays it through the
+    epoch-segmented closed-form engine for snow/coloring and through the
+    event loop — full protocol semantics: joins sync-then-announce,
+    leaves linger, anti-entropy runs — for the baselines (or on
+    request, ``engine="events"``)."""
+    if trace is None:
+        trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
+    if engine == "auto":
+        engine = "vectorized" if protocol in ("snow", "coloring") \
+            else "events"
+    if engine == "vectorized":
+        from .engine import run_trace_vectorized
+
+        return run_trace_vectorized(protocol, trace, k, seed, payload,
+                                    backend)
+    c = build_cluster(protocol, n, k, seed,
+                      enable_anti_entropy=(protocol in ("snow", "coloring")))
+    rng = random.Random(seed ^ 0xC0FFEE)
+
+    def protocol_join(nid: int) -> None:
         prof = NodeProfile()
         if c.protocol in ("snow", "coloring"):
             node = SnowNode(nid, c.sim, c.net, c.metrics,
@@ -188,12 +231,8 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
             for p in peers:
                 c.nodes[p].add_peer(nid, eager=True)
         c.nodes[nid] = node
-        live_transients.append(nid)
 
-    def do_leave() -> None:
-        if not live_transients:
-            return
-        nid = live_transients.pop(0)
+    def protocol_leave(nid: int) -> None:
         node = c.nodes[nid]
         if isinstance(node, SnowNode):
             node.leave(linger=5.0)
@@ -208,41 +247,95 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
                     if isinstance(other, PlumtreeNode):
                         other.drop_peer(nid)
 
-    for i in range(n_messages):
-        t = i * rate_s
-        if i % churn_every == 3:
-            c.sim.at(t + 0.11, do_join)
-        if i % churn_every == 8:
-            c.sim.at(t + 0.13, do_leave)
-        c.sim.at(t, lambda: c.broadcast_from(src, payload))
-    c.sim.run(until=n_messages * rate_s + 15.0)
+    _schedule_trace(c, trace, {"join": protocol_join,
+                               "leave": protocol_leave})
+    _schedule_broadcasts(c, trace, payload)
+    c.sim.run(until=trace.msg_times[-1] + rate_s + 15.0)
     return c
 
 
 def run_breakdown(protocol: str, n: int = 500, k: int = 4,
                   n_messages: int = 100, rate_s: float = 1.0,
                   seed: int = 0, payload: int = 64,
-                  crash_every: int = 10, reliable: bool = False) -> Cluster:
+                  crash_every: int = 10, reliable: bool = False,
+                  engine: str = "auto", backend: Optional[str] = None,
+                  trace: Optional[ChurnTrace] = None) -> Cluster:
     """§5.5: every ``crash_every`` messages a random fixed node silently
     crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
     evicted within seconds; other nodes' views keep the dead node, which
-    depresses Reliability exactly as in the paper's Table 2."""
+    depresses Reliability exactly as in the paper's Table 2.
+
+    Crash victims come from a :class:`ChurnTrace` (same RNG stream as
+    the pre-trace closures, so the event path replays identical
+    crashes).  ``engine="auto"`` → vectorized for snow/coloring, where
+    the trace's ``evict`` events stand in for SWIM detection; reliable
+    runs and baselines keep the event loop, which ignores the trace
+    evicts and lets live SWIM do the detecting."""
+    if trace is None:
+        trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
+                                      crash_every)
+    if engine == "auto":
+        engine = "vectorized" if (protocol in ("snow", "coloring")
+                                  and not reliable) else "events"
+    if engine == "vectorized":
+        from .engine import run_trace_vectorized
+
+        return run_trace_vectorized(protocol, trace, k, seed, payload,
+                                    backend)
     c = build_cluster(protocol, n, k, seed,
                       enable_swim=(protocol in ("snow", "coloring")))
-    src = 0
-    rng = random.Random(seed ^ 0xDEAD)
 
-    def do_crash() -> None:
-        cands = [i for i in c.fixed if i != src and c.net.alive(i)]
-        if cands:
-            c.net.crash(rng.choice(cands))
+    def silent_crash(nid: int) -> None:
+        c.net.crash(nid)
 
-    for i in range(n_messages):
-        t = i * rate_s
-        if i > 0 and i % crash_every == 0:
-            c.sim.at(t + 0.01, do_crash)
-        c.sim.at(t + 0.02, lambda: c.broadcast_from(src, payload, reliable=reliable))
-    c.sim.run(until=n_messages * rate_s + 15.0)
+    _schedule_trace(c, trace, {"crash": silent_crash})
+    _schedule_broadcasts(c, trace, payload, reliable=reliable)
+    c.sim.run(until=trace.msg_times[-1] + rate_s - 0.02 + 15.0)
+    return c
+
+
+def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
+                      seed: int = 0, payload: int = 64,
+                      drain_s: float = 20.0) -> Cluster:
+    """Oracle-membership event loop over a :class:`ChurnTrace`: every
+    event is applied synchronously to ONE shared view (join inserts,
+    leave/evict remove, crash blackholes via the network), so all nodes
+    hold identical views at all times — the event-driven ground truth
+    the epoch-segmented engine must reproduce.  Both engines read the
+    same :func:`~repro.core.engine.bank_for_trace`; on boundary-aligned
+    traces (no broadcast in flight at any event time) every
+    first-delivery time matches ``run_trace_vectorized`` bit for bit
+    (``tests/test_churn_engine.py``)."""
+    assert protocol in ("snow", "coloring"), \
+        "the oracle trace loop models snow/coloring"
+    from .engine import bank_for_trace
+
+    bank = bank_for_trace(seed, trace, protocol)
+    c = build_cluster(protocol, trace.n, k, seed, share_view=True,
+                      delay_bank=bank)
+    view = c.nodes[trace.src].view      # THE shared view instance
+
+    def oracle_join(nid: int) -> None:
+        node = SnowNode(nid, c.sim, c.net, c.metrics, view, k,
+                        NodeProfile())
+        c.nodes[nid] = node
+        view.add(nid)
+
+    def oracle_leave(nid: int) -> None:
+        view.remove(nid)
+        c.net.depart(nid)
+
+    def oracle_crash(nid: int) -> None:
+        c.net.crash(nid)                # silent: stays in every view
+
+    def oracle_evict(nid: int) -> None:
+        view.remove(nid)
+
+    _schedule_trace(c, trace, {"join": oracle_join, "leave": oracle_leave,
+                               "crash": oracle_crash,
+                               "evict": oracle_evict})
+    _schedule_broadcasts(c, trace, payload)
+    c.sim.run(until=trace.horizon() + drain_s)
     return c
 
 

@@ -1,0 +1,226 @@
+"""Epoch-segmented vectorized engine vs the event loop under churn.
+
+Differential contract (mirrors ``test_engine.py`` for the stable case):
+
+* on **boundary-aligned** traces — no broadcast in flight at any
+  membership event — the oracle-membership event loop
+  (``run_trace_aligned``) and the closed-form replay
+  (``run_trace_vectorized``) agree on every first-delivery time
+  exactly, per node, including which nodes a crash blackholes;
+* on the **paper cadences** (§5.4/§5.5, events mid-flight) the engines
+  are statistically pinned: reliabilities agree to a band, seeded LDT
+  and RMR drift stays small.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.churn import (ChurnEvent, ChurnTrace, aligned_breakdown_trace,
+                              aligned_churn_trace, burst_churn_trace,
+                              correlated_failure_trace, flash_crowd_trace,
+                              paper_breakdown_trace, paper_churn_trace,
+                              rolling_restart_trace)
+from repro.core.engine import (run_breakdown_vectorized, run_churn_vectorized,
+                               run_trace_vectorized, trace_sweep)
+from repro.core.scenarios import (run_breakdown, run_churn,
+                                  run_trace_aligned, summarize)
+
+
+def _paired_mids(ev, vec):
+    return list(zip(sorted(ev.metrics.start), sorted(vec.metrics.start)))
+
+
+def _assert_bit_exact(ev, vec, ctx):
+    """Every event-loop first delivery equals the sweep's time exactly,
+    and the sweep delivers nowhere the event loop did not."""
+    for mid_e, mid_v in _paired_mids(ev, vec):
+        fd = ev.metrics.first_delivery[mid_e]
+        tv = vec.metrics.times_for(mid_v)
+        mem = vec.metrics.members_for(mid_v)
+        idx = {int(m): i for i, m in enumerate(mem)}
+        for node, t in fd.items():
+            assert t == tv[idx[node]], (*ctx, mid_e, node)
+        src = int(mem[vec.metrics.src_index[mid_v]])
+        delivered_vec = {int(mem[i]) for i in np.nonzero(~np.isnan(tv))[0]
+                         if int(mem[i]) != src}
+        assert delivered_vec == set(fd), (*ctx, mid_e)
+    fixed = set(vec.fixed)
+    for a, b in zip(ev.metrics.per_message(fixed),
+                    vec.metrics.per_message(fixed)):
+        for key in ("ldt", "reliability", "rmr"):
+            va, vb = a[key], b[key]
+            if isinstance(va, float) and math.isnan(va):
+                assert math.isnan(vb), (*ctx, key)
+            else:
+                assert va == vb, (*ctx, key, va, vb)
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_churn_engines_bit_exact(protocol, n):
+    seed = 3 if n == 5000 else 7
+    trace = aligned_churn_trace(n, n_messages=4)
+    assert trace.is_boundary_aligned(14.0)
+    ev = run_trace_aligned(protocol, trace, k=4, seed=seed)
+    vec = run_trace_vectorized(protocol, trace, k=4, seed=seed,
+                               backend="numpy")
+    _assert_bit_exact(ev, vec, ("churn", protocol, n))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_breakdown_engines_bit_exact(protocol, n):
+    seed = 2 if n == 5000 else 9
+    trace = aligned_breakdown_trace(n, n_messages=4, seed=seed)
+    assert trace.is_boundary_aligned(14.0)
+    ev = run_trace_aligned(protocol, trace, k=4, seed=seed)
+    vec = run_trace_vectorized(protocol, trace, k=4, seed=seed,
+                               backend="numpy")
+    _assert_bit_exact(ev, vec, ("breakdown", protocol, n))
+    # a crash window must actually depress Reliability below 1
+    rel = [r["reliability"] for r in vec.metrics.per_message(set(vec.fixed))]
+    assert min(rel) < 1.0, "aligned breakdown trace never blackholed anyone"
+
+
+def test_crash_blackholes_whole_subtree():
+    """A crashed internal node must take its entire region down, not
+    just itself — per tree, before the coloring min."""
+    from repro.core.engine import stable_plans
+
+    n = 256
+    plan = stable_plans("snow", np.arange(n), 0, 4)[0]
+    depth, rlen = np.asarray(plan.depth), np.asarray(plan.region_len)
+    victim = int(np.argmax(np.where(depth == 1, rlen, 0)))  # fattest subtree
+    trace = ChurnTrace(
+        n=n, events=(ChurnEvent(5.0, "crash", victim),),
+        msg_times=(0.0, 20.0))
+    vec = run_trace_vectorized("snow", trace, k=4, seed=0, backend="numpy")
+    mids = sorted(vec.metrics.start)
+    before = vec.metrics.times_for(mids[0])
+    after = vec.metrics.times_for(mids[1])
+    assert not np.isnan(before).any()
+    lost = int(np.isnan(after).sum())
+    assert lost > 1, "internal-node crash must dark a whole subtree"
+    rows = vec.metrics.per_message(set(range(n)))
+    assert rows[0]["reliability"] == 1.0
+    assert rows[1]["reliability"] == (n - 1 - lost) / (n - 1)
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+def test_paper_churn_statistically_pinned(protocol):
+    kw = dict(n=200, k=4, n_messages=30, seed=7)
+    ev = summarize(run_churn(protocol, engine="events", **kw))
+    vc = summarize(run_churn(protocol, engine="vectorized",
+                             backend="numpy", **kw))
+    assert ev["reliability"] == vc["reliability"] == 1.0
+    assert abs(ev["ldt"] - vc["ldt"]) / ev["ldt"] < 0.35
+    assert abs(ev["rmr"] - vc["rmr"]) / ev["rmr"] < 0.05
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+def test_paper_breakdown_statistically_pinned(protocol):
+    kw = dict(n=200, k=4, n_messages=40, seed=11)
+    ev = summarize(run_breakdown(protocol, engine="events", **kw))
+    vc = summarize(run_breakdown(protocol, engine="vectorized",
+                                 backend="numpy", **kw))
+    # crashes must dent Reliability in both engines, by a similar amount
+    assert 0.93 < ev["reliability"] < 1.0
+    assert 0.93 < vc["reliability"] < 1.0
+    assert abs(ev["reliability"] - vc["reliability"]) < 0.02
+    assert abs(ev["ldt"] - vc["ldt"]) / ev["ldt"] < 0.35
+    assert abs(ev["rmr"] - vc["rmr"]) / ev["rmr"] < 0.05
+
+
+def test_epoch_segmentation():
+    n = 20
+    trace = ChurnTrace(
+        n=n,
+        events=(ChurnEvent(0.5, "join", 20), ChurnEvent(1.5, "crash", 3),
+                ChurnEvent(2.5, "evict", 3), ChurnEvent(2.5, "leave", 20),
+                ChurnEvent(3.5, "evict", 3)),      # no-op: already evicted
+        msg_times=(0.0, 1.0, 2.0, 3.0, 4.0))
+    eps = trace.epochs()
+    assert [ep.first for ep in eps] == [0, 1, 2, 3]
+    assert [ep.count for ep in eps] == [1, 1, 1, 2]   # no-op evict: no split
+    assert list(eps[0].members) == list(range(20))
+    assert list(eps[1].members) == list(range(20)) + [20]
+    assert list(eps[2].crashed) == [3]
+    assert list(eps[3].members) == [i for i in range(20) if i != 3]
+    assert eps[3].crashed.size == 0
+
+
+def test_trace_generators_well_formed():
+    for trace in (
+        paper_churn_trace(50, n_messages=40),
+        paper_breakdown_trace(50, n_messages=40, seed=1),
+        burst_churn_trace(50, n_messages=40),
+        correlated_failure_trace(50, n_messages=30, seed=2),
+        flash_crowd_trace(50, n_messages=30),
+        rolling_restart_trace(50, n_messages=30, batch=2),
+    ):
+        ts = [e.t for e in trace.events]
+        assert ts == sorted(ts)
+        assert all(e.kind in ("join", "leave", "crash", "evict")
+                   for e in trace.events)
+        # transient ids never collide with the fixed range, never reused
+        joins = trace.join_ids()
+        assert len(set(joins)) == len(joins)
+        assert all(j >= trace.n for j in joins)
+        assert trace.epochs(), "every trace must yield at least one epoch"
+
+
+@pytest.mark.parametrize("mk", [burst_churn_trace, flash_crowd_trace,
+                                rolling_restart_trace])
+def test_new_families_keep_fixed_nodes_atomic(mk):
+    """Join/leave-only churn — however violent — must not cost the fixed
+    cohort a single delivery (the paper's §5.4 claim, generalized)."""
+    trace = mk(300, n_messages=30)
+    c = run_trace_vectorized("snow", trace, k=4, seed=3, backend="numpy")
+    assert summarize(c)["reliability"] == 1.0
+
+
+def test_correlated_failure_dips_then_recovers():
+    trace = correlated_failure_trace(300, n_messages=30, group=8,
+                                     at_message=10, seed=0)
+    c = run_trace_vectorized("snow", trace, k=4, seed=3, backend="numpy")
+    rel = [r["reliability"] for r in c.metrics.per_message(set(range(300)))]
+    assert min(rel[10:14]) < 1.0, "rack crash must dent the window"
+    assert rel[-1] == 1.0, "post-eviction epochs must fully recover"
+    assert all(r == 1.0 for r in rel[:10]), "pre-crash epochs unaffected"
+
+
+def test_wrapper_entry_points_match_scenarios_route():
+    """engine.run_churn_vectorized / run_breakdown_vectorized are the
+    same computation scenarios.run_churn/run_breakdown dispatch to."""
+    kw = dict(n=120, k=4, n_messages=20, seed=5)
+    a = summarize(run_churn("snow", engine="vectorized",
+                            backend="numpy", **kw))
+    b = summarize(run_churn_vectorized("snow", backend="numpy", **kw))
+    assert a == b
+    a = summarize(run_breakdown("coloring", engine="vectorized",
+                                backend="numpy", **kw))
+    b = summarize(run_breakdown_vectorized("coloring", backend="numpy", **kw))
+    assert a == b
+
+
+def test_trace_sweep_matches_full_run():
+    trace = paper_breakdown_trace(400, n_messages=20, seed=6)
+    c = run_trace_vectorized("snow", trace, k=4, seed=6, backend="numpy")
+    rows = trace_sweep("snow", trace, 4, seeds=[6], backend="numpy")
+    s = c.metrics.summary(set(range(400)))
+    assert rows[0]["reliability"] == pytest.approx(s["reliability"], abs=1e-12)
+    assert rows[0]["ldt"] == pytest.approx(s["ldt"], rel=1e-12)
+    assert rows[0]["rmr"] == pytest.approx(s["rmr"], rel=1e-12)
+
+
+def test_jax_backend_matches_numpy_under_churn():
+    pytest.importorskip("jax")
+    trace = paper_churn_trace(400, n_messages=6)
+    a = run_trace_vectorized("coloring", trace, k=4, seed=4,
+                             backend="numpy")
+    b = run_trace_vectorized("coloring", trace, k=4, seed=4, backend="jax")
+    for ma, mb in _paired_mids(a, b):
+        ta, tb = a.metrics.times_for(ma), b.metrics.times_for(mb)
+        assert (np.isnan(ta) == np.isnan(tb)).all()
+        np.testing.assert_allclose(ta, tb, rtol=2e-5, atol=2e-5)

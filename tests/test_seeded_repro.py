@@ -53,12 +53,32 @@ def test_stable_engines_reproducible(engine):
 @pytest.mark.parametrize("protocol", ["snow", "coloring", "gossip", "plumtree"])
 def test_churn_rows_reproducible(protocol):
     kw = dict(n=60, k=4, n_messages=15, seed=21, churn_every=5)
+    if protocol in ("snow", "coloring"):
+        kw["engine"] = "events"     # pin the full-protocol path explicitly
     _assert_same(_rows(run_churn(protocol, **kw)),
                  _rows(run_churn(protocol, **kw)), ("churn", protocol))
 
 
 @pytest.mark.parametrize("protocol", ["snow", "coloring"])
 def test_breakdown_rows_reproducible(protocol):
-    kw = dict(n=60, k=4, n_messages=15, seed=8, crash_every=5)
+    kw = dict(n=60, k=4, n_messages=15, seed=8, crash_every=5,
+              engine="events")
     _assert_same(_rows(run_breakdown(protocol, **kw)),
                  _rows(run_breakdown(protocol, **kw)), ("breakdown", protocol))
+
+
+@pytest.mark.parametrize("engine", ["events", "vectorized"])
+def test_churn_engines_reproducible(engine):
+    """Both churn engine paths individually, not just the auto route."""
+    kw = dict(n=60, k=4, n_messages=15, seed=21, churn_every=5,
+              engine=engine)
+    _assert_same(_rows(run_churn("coloring", **kw)),
+                 _rows(run_churn("coloring", **kw)), ("churn", engine))
+
+
+@pytest.mark.parametrize("engine", ["events", "vectorized"])
+def test_breakdown_engines_reproducible(engine):
+    kw = dict(n=60, k=4, n_messages=15, seed=8, crash_every=5,
+              engine=engine)
+    _assert_same(_rows(run_breakdown("snow", **kw)),
+                 _rows(run_breakdown("snow", **kw)), ("breakdown", engine))
