@@ -1,7 +1,7 @@
 """Paper Figure 6A + cloud-scale extension: fixed k=4, n from 100 up to
 1,000,000 — LDT grows only with tree height (stepwise), RMR flat.
 
-Five sections:
+Seven sections:
 
 * the paper's figure range (event-driven simulation, per-node views),
 * a large-scale section (n = 5k / 10k / 50k) running the stable scenario
@@ -18,7 +18,17 @@ Five sections:
 * a **churn/breakdown huge-scale** section (n = 50k / 500k / 1M,
   multi-seed): paper-cadence dynamic-membership sweeps through the
   epoch-segmented engine — territory the event loop cannot enter at all
-  (per-node views alone are O(n²) memory at 50k+).
+  (per-node views alone are O(n²) memory at 50k+),
+* a **redundancy** section (n = 50k / 500k / 1M): the §5.4 gossip-vs-
+  snow redundant-byte comparison — snow's stable redundant bytes are
+  structurally 0, coloring pays exactly its second tree, gossip burns a
+  ~3× payload floor on duplicate deliveries (closed-form gossip,
+  ``repro.core.baselines.gossip_sweep``),
+* a **stale-view churn** section (n = 50k / 500k / 1M): paper-cadence
+  churn through the divergent-view engine (`view_model="stale"`) —
+  MemberUpdate adoption sweeps plus mixed old/new-plan sweeps, so the
+  churn rows carry real duplicate/redundant-byte numbers instead of the
+  oracle model's structural zero.
 
 The perf trajectory is tracked in ``benchmarks/results/scale_n.json``.
 """
@@ -30,11 +40,14 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core.baselines import gossip_sweep
 from repro.core.churn import (aligned_churn_trace, paper_breakdown_trace,
                               paper_churn_trace)
 from repro.core.engine import (bank_for_stable, broadcast_times,
-                               compile_trace, run_trace_vectorized,
-                               stable_plans, stable_sweep, trace_sweep)
+                               compile_trace, run_stable_vectorized,
+                               run_trace_stale_vectorized,
+                               run_trace_vectorized, stable_plans,
+                               stable_sweep, trace_sweep)
 from repro.core.membership import MembershipView
 from repro.core.planner import plan_broadcast
 from repro.core.scenarios import run_stable, run_trace_aligned, summarize
@@ -198,6 +211,73 @@ def run_huge(ns=(100_000, 500_000, 1_000_000), k: int = 4, n_seeds: int = 20,
     return rows
 
 
+def run_redundancy(ns=(50_000, 500_000, 1_000_000), k: int = 4,
+                   n_messages: int = 2, seed: int = 3):
+    """§5.4 redundancy comparison: payload vs redundant bytes per node,
+    stable scenario, closed form for all three protocols.  Snow must
+    report exactly 0 redundant bytes (structural region disjointness);
+    coloring exactly one extra frame per node (its second tree); gossip
+    a ~3× payload floor (k - 1 of every k forwards land on a node that
+    already delivered)."""
+    rows = []
+    for n in ns:
+        for proto in ("snow", "coloring"):
+            t0 = time.time()
+            c = run_stable_vectorized(proto, n=n, k=k,
+                                      n_messages=n_messages, seed=seed)
+            s = c.metrics.summary(None)
+            rows.append({
+                "n": n, "protocol": proto, "ldt_ms": s["ldt"] * 1000,
+                "rmr_B": s["rmr"],
+                "payload_B": s["rmr"] - s["rmr_redundant"],
+                "redundant_B": s["rmr_redundant"],
+                "reliability": s["reliability"],
+                "wall_s": time.time() - t0})
+        t0 = time.time()
+        g = gossip_sweep(n, k, seeds=[seed], n_messages=n_messages)[0]
+        rows.append({
+            "n": n, "protocol": "gossip", "ldt_ms": g["ldt"] * 1000,
+            "rmr_B": g["rmr"], "payload_B": g["rmr"] - g["rmr_redundant"],
+            "redundant_B": g["rmr_redundant"],
+            "reliability": g["reliability"], "wall_s": time.time() - t0})
+    return rows
+
+
+def run_stale_huge(ns=(50_000, 500_000, 1_000_000), k: int = 4,
+                   n_seeds: int = 2, n_messages: int = 10):
+    """Paper-cadence churn through the stale-view engine: adoption
+    sweeps + mixed-plan windows at scales where every view is lagged.
+    The acceptance bar is a 1M sweep under 30 s wall."""
+    rows = []
+    for n in ns:
+        trace = paper_churn_trace(n, n_messages, churn_every=5,
+                                  join_at=1, leave_at=3)
+        # epoch plans are seed-independent: compile once, sweep per seed
+        epochs = compile_trace("snow", trace, k, trace.all_ids())
+        seed_rows = []
+        for seed in range(n_seeds):
+            t0 = time.time()
+            c = run_trace_stale_vectorized("snow", trace, k, seed,
+                                           epochs=epochs)
+            s = c.metrics.summary(set(range(n)))
+            s["wall_s"] = time.time() - t0
+            seed_rows.append(s)
+        ldts = np.array([r["ldt"] for r in seed_rows])
+        rows.append({
+            "n": n, "k": k, "seeds": n_seeds, "n_messages": n_messages,
+            "ldt_ms_mean": float(ldts.mean() * 1000),
+            "rmr_B": float(np.mean([r["rmr"] for r in seed_rows])),
+            "redundant_B": float(np.mean([r["rmr_redundant"]
+                                          for r in seed_rows])),
+            "duplicates": float(np.mean([r["duplicates"]
+                                         for r in seed_rows])),
+            "reliability": min(r["reliability"] for r in seed_rows),
+            "wall_s": float(sum(r["wall_s"] for r in seed_rows)),
+            "per_seed_s": float(np.mean([r["wall_s"] for r in seed_rows])),
+        })
+    return rows
+
+
 def _fmt(rows):
     out = [(f"{'n':>6s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} "
             f"{'height':>6s} {'eq8':>4s} {'wall_s':>7s}")]
@@ -255,6 +335,29 @@ def _fmt_churn_huge(rows):
     return out
 
 
+def _fmt_redundancy(rows):
+    out = [(f"{'n':>8s} {'proto':>9s} {'ldt_ms':>7s} {'rmr_B':>6s} "
+            f"{'payld_B':>7s} {'redun_B':>7s} {'rel':>5s} {'wall_s':>7s}")]
+    for r in rows:
+        out.append(f"{r['n']:8d} {r['protocol']:>9s} {r['ldt_ms']:7.0f} "
+                   f"{r['rmr_B']:6.1f} {r['payload_B']:7.1f} "
+                   f"{r['redundant_B']:7.1f} {r['reliability']:5.3f} "
+                   f"{r['wall_s']:7.2f}")
+    return out
+
+
+def _fmt_stale(rows):
+    out = [(f"{'n':>8s} {'seeds':>5s} {'ldt_ms':>7s} {'rmr_B':>6s} "
+            f"{'redun_B':>7s} {'dups':>8s} {'rel':>5s} {'wall_s':>7s} "
+            f"{'s/seed':>7s}")]
+    for r in rows:
+        out.append(f"{r['n']:8d} {r['seeds']:5d} {r['ldt_ms_mean']:7.0f} "
+                   f"{r['rmr_B']:6.1f} {r['redundant_B']:7.2f} "
+                   f"{r['duplicates']:8.1f} {r['reliability']:5.3f} "
+                   f"{r['wall_s']:7.2f} {r['per_seed_s']:7.2f}")
+    return out
+
+
 def main(smoke: bool = False):
     global LAST_SMOKE
     if smoke:
@@ -263,6 +366,8 @@ def main(smoke: bool = False):
         churn_large = run_churn_large(ns=(2000,))
         huge = run_huge(ns=(20_000,), n_seeds=3)
         churn_huge = run_churn_huge(ns=(20_000,), n_seeds=2)
+        redundancy = run_redundancy(ns=(2000,))
+        stale = run_stale_huge(ns=(2000,), n_seeds=2, n_messages=15)
         LAST_SMOKE = {
             "ldt_ms": fig[0]["ldt_ms"],
             "reliability": min(r["reliability"] for r in fig + large + huge),
@@ -273,6 +378,17 @@ def main(smoke: bool = False):
                 + [r["reliability"] for r in churn_huge
                    if r["scene"] == "churn"]),
             "churn_vec_speedup": churn_large[0]["speedup"],
+            # §5.4 redundancy gate: snow stays at exactly zero redundant
+            # bytes, gossip keeps its duplicate floor — and the stale-
+            # view churn row rides the generic ldt/reliability bands
+            "snow_redundant_B": max(
+                r["redundant_B"] for r in redundancy
+                if r["protocol"] == "snow"),
+            "gossip_redundant_B": min(
+                r["redundant_B"] for r in redundancy
+                if r["protocol"] == "gossip"),
+            "stale_ldt_ms": stale[0]["ldt_ms_mean"],
+            "stale_reliability": min(r["reliability"] for r in stale),
         }
     else:
         fig = run()
@@ -280,6 +396,8 @@ def main(smoke: bool = False):
         churn_large = run_churn_large()
         huge = run_huge()
         churn_huge = run_churn_huge()
+        redundancy = run_redundancy()
+        stale = run_stale_huge()
     out = _fmt(fig)
     out.append("")
     out.append("-- large-scale: events vs closed-form engine (shared bank) --")
@@ -293,12 +411,20 @@ def main(smoke: bool = False):
     out.append("")
     out.append("-- churn/breakdown huge-scale: epoch engine only, multi-seed --")
     out += _fmt_churn_huge(churn_huge)
+    out.append("")
+    out.append("-- redundancy (§5.4): payload vs redundant bytes per node --")
+    out += _fmt_redundancy(redundancy)
+    out.append("")
+    out.append("-- stale-view churn: divergent views, adoption + mixed plans --")
+    out += _fmt_stale(stale)
     if not smoke:  # smoke runs must not clobber the tracked trajectory
         RESULTS.parent.mkdir(parents=True, exist_ok=True)
         RESULTS.write_text(json.dumps(
             {"figure_6a": fig, "large_scale": large,
              "churn_large_scale": churn_large, "huge_scale": huge,
-             "churn_huge_scale": churn_huge},
+             "churn_huge_scale": churn_huge,
+             "redundancy_scale": redundancy,
+             "stale_churn_scale": stale},
             indent=2) + "\n")
         out.append(f"(json: {RESULTS})")
     return out

@@ -44,6 +44,11 @@ LDT_REL_TOL = 0.35        # seeded smoke LDT may drift only this much
 MIN_VEC_SPEEDUP = 5.0     # closed-form engine must stay clearly ahead
 MIN_CHURN_VEC_SPEEDUP = 3.0   # epoch-segmented churn engine floor (the
                               # smoke n is small; full bench shows 20x+)
+# §5.4 redundancy bands: snow must never send a redundant byte in the
+# stable scenario (structural disjointness), gossip must keep its
+# duplicate floor (k-1 of every k forwards are redundant: ~3 x 108 B)
+MAX_SNOW_REDUNDANT_B = 1e-9
+MIN_GOSSIP_REDUNDANT_B = 50.0
 
 
 def _calibrate() -> float:
@@ -127,6 +132,18 @@ def _check(sections, metrics) -> list:
                 if mval < floor:
                     problems.append(f"{name}: {key} "
                                     f"{mval:.1f}x < {floor}x")
+            elif key.endswith("redundant_B"):
+                # absolute redundancy bands (baseline-independent):
+                # snow's stable redundant bytes are structurally zero,
+                # gossip's duplicate floor must not collapse
+                if "snow" in key and mval > MAX_SNOW_REDUNDANT_B:
+                    problems.append(
+                        f"{name}: {key} {mval!r} — snow sent redundant "
+                        f"bytes in the stable scenario")
+                elif "gossip" in key and mval < MIN_GOSSIP_REDUNDANT_B:
+                    problems.append(
+                        f"{name}: {key} {mval:.1f} B < "
+                        f"{MIN_GOSSIP_REDUNDANT_B} B gossip floor")
     return problems
 
 

@@ -9,15 +9,23 @@
   expiry.  Initialized from random eager sets, so the first broadcasts
   oscillate until the spanning tree stabilizes — the paper's "warming-up
   phase".
+
+:func:`gossip_sweep` is the closed-form counterpart of ``GossipNode``
+for the §5.4 redundancy benchmarks: at n = 500k+ the event loop cannot
+run gossip at all, but its delivery times satisfy a shortest-path
+relaxation over the random fan-out graph that a few scatter-min passes
+solve exactly.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
 
 from .ids import NodeId
 from .membership import MembershipView
 from .messages import Graft, GossipData, IHave, Prune, fresh_mid
-from .sim import Metrics, Network, NodeBase, Sim
+from .sim import LatencyModel, Metrics, Network, NodeBase, Sim
 
 
 class GossipNode(NodeBase):
@@ -39,7 +47,8 @@ class GossipNode(NodeBase):
     def on_message(self, src: NodeId, msg) -> None:
         if not isinstance(msg, GossipData):
             return
-        self.metrics.add_bytes(msg.mid, msg.size)
+        self.metrics.add_bytes(msg.mid, msg.size, node=self.id,
+                               duplicate=msg.mid in self.delivered)
         if msg.mid in self.delivered:
             return
         self.delivered.add(msg.mid)
@@ -114,7 +123,8 @@ class PlumtreeNode(NodeBase):
 
     def on_message(self, src: NodeId, msg) -> None:
         if isinstance(msg, GossipData):
-            self.metrics.add_bytes(msg.mid, msg.size)
+            self.metrics.add_bytes(msg.mid, msg.size, node=self.id,
+                                   duplicate=msg.mid in self.delivered)
             if msg.mid in self.delivered:
                 # duplicate: prune the redundant eager link
                 self.send(src, Prune())
@@ -173,3 +183,111 @@ class PlumtreeNode(NodeBase):
             self._timers.add(mid)
             self.holders[mid] = holders[1:]
             self.sim.after(self.graft_timeout, lambda: self._maybe_graft(mid))
+
+
+# ------------------------------------------------------------------ #
+# Closed-form gossip: the §5.4 redundancy baseline at cloud scale      #
+# ------------------------------------------------------------------ #
+def gossip_message_vectorized(n: int, k: int, g: np.random.Generator,
+                              *, src: NodeId = 0, lo: float = 0.010,
+                              hi: float = 0.200,
+                              straggler_frac: float = 0.05,
+                              straggler_delay: float = 1.0,
+                              latency: Optional[LatencyModel] = None,
+                              max_rounds: int = 128):
+    """One push-gossip broadcast in closed form.
+
+    Every node, on first receipt, forwards to ``k`` random targets after
+    its §5.2 forwarding delay — so first-delivery times satisfy the
+    shortest-path relaxation ``t[c] = min over edges (v→c) of
+    (t[v] + fwd[v] + link(v→c))`` over the random fan-out graph, which a
+    few segment-min passes solve exactly (senders that are never reached
+    contribute NaN arrivals that ``fmin`` ignores).  Targets are drawn
+    as ``(self + U{1, n-1}) % n`` — never self, duplicate targets within
+    a row vanish at the benchmark sizes (P ≈ k²/n).
+
+    Returns ``(t, receipts)``: absolute first-delivery times (NaN where
+    the graph never reaches a node — push gossip is not atomic) and the
+    DATA-frame receipt count per node (every frame a *delivered* sender
+    emits lands on some inbox; ``receipts - delivered`` is the paper's
+    redundant-message count).
+    """
+    latency = latency or LatencyModel()
+    fwd = g.uniform(lo, hi, n)
+    n_strag = int(round(straggler_frac * n))
+    if n_strag:
+        fwd[g.choice(n, size=n_strag, replace=False)] = straggler_delay
+    fwd[src] = 0.0                     # the initiator fans out immediately
+    dst = ((np.arange(n)[:, None] + g.integers(1, n, size=(n, k))) % n)
+    link = latency.median_s * np.exp(g.normal(0.0, latency.sigma, (n, k)))
+    srcs = np.repeat(np.arange(n), k)
+    flat_dst = dst.ravel()
+    flat_link = link.ravel()
+    order = np.argsort(flat_dst, kind="stable")
+    d_sorted = flat_dst[order]
+    src_sorted = srcs[order]
+    link_sorted = flat_link[order]
+    starts = np.searchsorted(d_sorted, np.arange(n + 1))
+    nonempty = starts[1:] > starts[:-1]
+    # reduceat rejects a segment start == len(arrivals), which happens
+    # whenever the highest-id nodes are never targeted (P ≈ e^-k per
+    # message).  A NaN sentinel appended to the arrival array makes
+    # those starts valid and fmin-neutral; the nonempty mask voids the
+    # resulting garbage segments.
+    src_ext = np.append(src_sorted, 0)
+    link_ext = np.append(link_sorted, np.nan)
+
+    t = np.full(n, np.nan)
+    t[src] = 0.0
+    for _ in range(max_rounds):
+        arrivals = (t + fwd)[src_ext] + link_ext
+        seg = np.fmin.reduceat(arrivals, starts[:-1]) if d_sorted.size \
+            else np.full(n, np.nan)
+        seg = np.where(nonempty, seg, np.nan)
+        t_new = np.fmin(t, seg)
+        t_new[src] = 0.0
+        if np.array_equal(t_new, t, equal_nan=True):
+            break
+        t = t_new
+    delivered = ~np.isnan(t)
+    receipts = np.bincount(d_sorted[delivered[src_sorted]], minlength=n)
+    return t, receipts
+
+
+def gossip_sweep(n: int, k: int, seeds: Sequence[int], n_messages: int = 2,
+                 payload: int = 64, src: NodeId = 0) -> List[dict]:
+    """Multi-seed closed-form gossip sweep for the redundancy benchmarks
+    — metric rows shaped like :func:`repro.core.engine.stable_sweep`'s,
+    plus the payload/redundant byte split (§5.4: gossip's redundant
+    bytes floor is what Snow's tree structure avoids)."""
+    import time
+
+    frame = GossipData(0, src, payload).size
+    rows = []
+    for seed in seeds:
+        g = np.random.default_rng(
+            np.random.SeedSequence([seed & 0xFFFFFFFF, 0x6055]))
+        tw = time.time()
+        ldts, rels, rmrs, reds = [], [], [], []
+        for _ in range(n_messages):
+            t, receipts = gossip_message_vectorized(n, k, g, src=src)
+            mask = np.ones(n, dtype=bool)
+            mask[src] = False
+            n_int = n - 1
+            dcnt = int((~np.isnan(t[mask])).sum())
+            rec = int(receipts[mask].sum())
+            ldts.append(float(np.nanmax(t[mask])))
+            rels.append(dcnt / n_int)
+            rmrs.append(frame * rec / n_int)
+            reds.append(frame * (rec - dcnt) / n_int)
+        rows.append({
+            "seed": int(seed), "n": n, "k": k,
+            "ldt": float(np.mean(ldts)),
+            "rmr": float(np.mean(rmrs)),
+            "rmr_redundant": float(np.mean(reds)),
+            "payload_B": float(np.mean(rmrs)) - float(np.mean(reds)),
+            "reliability": float(np.mean(rels)),
+            "n_messages": n_messages,
+            "wall_s": time.time() - tw,
+        })
+    return rows

@@ -153,6 +153,31 @@ class ChurnTrace:
         close()
         return out
 
+    def transitions(self) -> List[Tuple[int, List[ChurnEvent]]]:
+        """The *effective* events behind every epoch boundary.
+
+        Returns ``(first, events)`` pairs aligned with :meth:`epochs`:
+        ``first`` is the first message index of the epoch the events
+        open (an epoch boundary exists at ``first`` iff some event
+        changed membership state before that message), and ``events``
+        are the state-changing events applied at that boundary, in time
+        order.  Events before message 0 shape the initial epoch and are
+        reported with ``first == 0``.  The stale-view engine uses these
+        to root its MemberUpdate adoption sweeps."""
+        members: Set[NodeId] = set(range(self.n))
+        crashed: Set[NodeId] = set()
+        out: List[Tuple[int, List[ChurnEvent]]] = []
+        ei = 0
+        for j, tm in enumerate(self.msg_times):
+            evs: List[ChurnEvent] = []
+            while ei < len(self.events) and self.events[ei].t <= tm:
+                if _apply(self.events[ei], members, crashed):
+                    evs.append(self.events[ei])
+                ei += 1
+            if evs:
+                out.append((j, evs))
+        return out
+
     def is_boundary_aligned(self, quiescence_s: float) -> bool:
         """True when every event falls at least ``quiescence_s`` after
         the closest preceding broadcast — i.e. assuming every broadcast

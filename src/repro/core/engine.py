@@ -205,18 +205,23 @@ def bank_for_stable(seed: int, n: int, protocol: str, n_messages: int,
 
 def bank_for_trace(seed: int, trace: ChurnTrace, protocol: str,
                    *, straggler_frac: float = 0.05,
-                   straggler_delay: float = 1.0) -> DelayBank:
+                   straggler_delay: float = 1.0,
+                   extra_messages: int = 0) -> DelayBank:
     """One bank covering a whole :class:`ChurnTrace`: every id that is
     ever a member (fixed ∪ joins) gets a delay row, every broadcast a
     column.  The straggler draw replicates ``build_cluster`` /
     ``assign_profiles`` over the *fixed* ids (first use of the profile
     RNG), so the event engine on the same trace picks the same
     stragglers; transients are never stragglers (they get fresh default
-    profiles in the scenarios, same as here)."""
+    profiles in the scenarios, same as here).
+
+    ``extra_messages`` appends columns beyond the trace's broadcasts —
+    the stale-view engine samples one per epoch transition for the
+    MemberUpdate adoption sweep."""
     rng = random.Random(seed ^ 0x5EED)
     stragglers = straggler_sample(rng, range(trace.n), straggler_frac)
     return DelayBank.sample(seed, trace.all_ids(), stragglers,
-                            len(trace.msg_times),
+                            len(trace.msg_times) + extra_messages,
                             n_slots=2 if protocol == "coloring" else 1,
                             straggler_delay=straggler_delay)
 
@@ -378,16 +383,27 @@ class ArrayMetrics(Metrics):
         #: per-message member arrays for epoch runs, where membership
         #: changes between broadcasts; absent ⇒ ``self.members``
         self.msg_members: Dict[int, np.ndarray] = {}
+        #: per-message (n,) DATA-frame receipt counts per member — the
+        #: array analogue of the event engine's per-receipt add_bytes;
+        #: ``receipts - delivered`` is the duplicate count
+        self.receipts: Dict[int, np.ndarray] = {}
+        self.frame_bytes: Dict[int, int] = {}       # wire size of one frame
 
     def record_message(self, mid: int, t0: float, src_index: int,
                        times: np.ndarray, nbytes: int,
-                       members: Optional[np.ndarray] = None) -> None:
+                       members: Optional[np.ndarray] = None,
+                       receipts: Optional[np.ndarray] = None,
+                       frame_bytes: Optional[int] = None) -> None:
         self.start[mid] = t0
         self.src_index[mid] = src_index
         self.times[mid] = times
         self.data_bytes[mid] = nbytes
         if members is not None:
             self.msg_members[mid] = members
+        if receipts is not None:
+            self.receipts[mid] = receipts
+        if frame_bytes is not None:
+            self.frame_bytes[mid] = frame_bytes
 
     def times_for(self, mid: int) -> np.ndarray:
         return self.times[mid]
@@ -419,11 +435,36 @@ class ArrayMetrics(Metrics):
                 continue
             tt = self.times[mid][mask]
             vals = tt[~np.isnan(tt)] - t0
+            rec = self.receipts.get(mid)
+            frame = self.frame_bytes.get(mid, 0)
+            if rec is None:
+                # legacy record: no per-node receipt info — whole-cluster
+                # bytes, no duplicate split
+                total = self.data_bytes.get(mid, 0)
+                red = dups = 0
+            elif sub is None:
+                # whole-cluster accounting matches the event engine's
+                # global totals; nodes delivered without a receipt (the
+                # originator) contribute all their receipts as duplicates
+                total = self.data_bytes.get(mid, 0)
+                by_receipt = (~np.isnan(self.times[mid])) & (rec >= 1)
+                by_receipt[self.src_index[mid]] = False  # src delivered at t0
+                dups = int(rec.sum()) - int(by_receipt.sum())
+                red = frame * dups
+            else:
+                rsub = int(rec[mask].sum())
+                total = frame * rsub
+                dups = rsub - vals.size
+                red = frame * dups
             rows.append({
                 "mid": mid,
                 "ldt": float(vals.max()) if vals.size else float("nan"),
                 "reliability": vals.size / n_int,
-                "rmr": self.data_bytes.get(mid, 0) / max(1, n_int),
+                "rmr": total / max(1, n_int),
+                "rmr_redundant": red / max(1, n_int),
+                "payload_bytes": total - red,
+                "redundant_bytes": red,
+                "duplicates": dups,
             })
         return rows
 
@@ -444,6 +485,9 @@ class VectorCluster:
     plans: Tuple[TreePlan, ...] = ()
     bank: Optional[DelayBank] = None
     trace: Optional[ChurnTrace] = None
+    #: membership model the run used: "oracle" (all views flip at the
+    #: event instant) or "stale" (views adopt via MemberUpdate sweeps)
+    view_model: str = "oracle"
 
 
 def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
@@ -468,9 +512,16 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
         plans = stable_plans(protocol, members, 0, k)
     times = broadcast_times(plans, bank, n_messages, rate_s, backend)
     nbytes = plan_bytes(plans, payload)
+    frame = Data(0, 0, None, None, payload).size
+    # one receipt per node per tree that reaches it (uniform stable view:
+    # every tree reaches every non-root node) — coloring's second frame
+    # is the duplicate the event engine records per receipt
+    receipts = sum(np.asarray((np.asarray(p.depth) >= 1), dtype=np.int64)
+                   for p in plans)
     metrics = ArrayMetrics(members)
     for i in range(n_messages):
-        metrics.record_message(fresh_mid(), i * rate_s, 0, times[i], nbytes)
+        metrics.record_message(fresh_mid(), i * rate_s, 0, times[i], nbytes,
+                               receipts=receipts, frame_bytes=frame)
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(n)), protocol=protocol,
                          k=k, plans=plans, bank=bank)
@@ -532,6 +583,8 @@ class _EpochPlan:
     reach: Tuple[Optional[np.ndarray], ...]   #: per-plan mask; None=all
     nbytes: int                      #: DATA bytes one broadcast moves
     src_index: int
+    receipts: np.ndarray = None      #: (n_e,) frame receipts per member
+    frame: int = 0                   #: wire size of one DATA frame
 
     @property
     def count(self) -> int:
@@ -554,21 +607,23 @@ def compile_trace(protocol: str, trace: ChurnTrace, k: int,
         plans = stable_plans(protocol, members, trace.src, k)
         cmask = np.isin(members, ep.crashed) if ep.crashed.size else None
         reach: List[Optional[np.ndarray]] = []
-        receipts = 0
+        receipts = np.zeros(members.shape[0], dtype=np.int64)
         for plan in plans:
+            covered = np.asarray(plan.depth) >= 1
             if cmask is None:
                 reach.append(None)
-                receipts += int((np.asarray(plan.depth) >= 1).sum())
+                receipts += covered
             else:
                 ok = reach_mask(plan, cmask)
                 reach.append(ok)
-                receipts += int((ok & (np.asarray(plan.depth) >= 1)).sum())
+                receipts += ok & covered
         out.append(_EpochPlan(
             members=members,
             rows=np.searchsorted(bank_members, members),
             first=ep.first, times=ep.times, plans=plans,
-            reach=tuple(reach), nbytes=size * receipts,
-            src_index=int(np.searchsorted(members, trace.src))))
+            reach=tuple(reach), nbytes=size * int(receipts.sum()),
+            src_index=int(np.searchsorted(members, trace.src)),
+            receipts=receipts, frame=size))
     return out
 
 
@@ -625,7 +680,8 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
         for j in range(ep.count):
             metrics.record_message(fresh_mid(), float(ep.times[j]),
                                    ep.src_index, total[j], ep.nbytes,
-                                   members=ep.members)
+                                   members=ep.members, receipts=ep.receipts,
+                                   frame_bytes=ep.frame)
         all_plans.extend(ep.plans)
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(trace.n)),
@@ -661,6 +717,250 @@ def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
     return run_trace_vectorized(protocol, trace, k, seed, payload, backend)
 
 
+# ------------------------------------------------------------------ #
+# Stale-view dissemination: divergent views in closed form            #
+# ------------------------------------------------------------------ #
+def _update_origin(evs):
+    """Root and membership of a boundary's MemberUpdate broadcast, per
+    §4.5: a joiner announces itself over its freshly-synced (new) view;
+    a leaver announces over its current (old) view — it still holds
+    itself; an eviction is announced by the detecting node (surrogate:
+    the broadcast source).  Returns ``(t, kind, subject)`` of the first
+    membership-changing event, or ``None`` for crash-only boundaries
+    (silent crashes change no view — there is nothing to adopt)."""
+    for ev in evs:
+        if ev.kind != "crash":
+            return ev.t, ev.kind, ev.node
+    return None
+
+
+def _parents_in_union(plan: Optional[TreePlan], union: np.ndarray
+                      ) -> np.ndarray:
+    """The plan's parent pointers re-indexed into union-member space;
+    -1 where a union member is outside the plan (or is its root)."""
+    pu = np.full(union.shape[0], -1, dtype=np.int64)
+    if plan is None:
+        return pu
+    pos = np.searchsorted(union, plan.members)     # members ⊆ union
+    par = np.asarray(plan.parent)
+    has = par >= 0
+    pu[pos[has]] = pos[par[has]]
+    return pu
+
+
+def _mixed_times(par_old: np.ndarray, par_new: np.ndarray, fwd: np.ndarray,
+                 link: np.ndarray, adopt: np.ndarray, t0: float, root: int,
+                 recv_ok: np.ndarray, fwd_ok: np.ndarray,
+                 max_iter: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One broadcast under divergent views, closed form.
+
+    Every node forwards once, at ``t[v] + fwd[v]`` (the event loop's
+    ``forwarded`` dedup): if its view has not yet adopted the update
+    (``adopt[v] > forward time``) it emits the OLD epoch's children,
+    otherwise the new epoch's.  A node can therefore be targeted by two
+    distinct forwarders — its old-plan parent (stale) and its new-plan
+    parent (adopted) — which is exactly how divergent views manufacture
+    duplicate deliveries.
+
+    **Orphan rescue.**  In the live protocol every forwarder covers the
+    *region* it received, per its own view — regions nest per hop, so a
+    node whose would-be new-plan parent is stale (or itself unreached)
+    is still covered by whoever owns the enclosing region.  The plan-
+    swap approximation restores that invariant by letting the old-plan
+    edge fire from an *adopted* parent whenever the child's new-plan
+    parent cannot serve it (stale, absent, or unreached); without this,
+    one stale forwarder would artificially darken its entire new-plan
+    subtree.  Genuine transient misses survive where the protocol has
+    them: a joiner whose new-plan parent is still stale has no old-plan
+    edge at all.  Iterated to a fixed point (monotone ``fmin``, so it
+    terminates); returns ``(times, receipts)`` over union-member space.
+    """
+    n = fwd.shape[0]
+    t = np.full(n, np.nan)
+    t[root] = t0
+    fwd_eff = fwd.copy()
+    fwd_eff[root] = 0.0            # the initiator forwards immediately
+    po = np.maximum(par_old, 0)
+    pn = np.maximum(par_new, 0)
+    vo = np.zeros(n, dtype=bool)
+    vn = np.zeros(n, dtype=bool)
+    for _ in range(max_iter):
+        ft = t + fwd_eff
+        with np.errstate(invalid="ignore"):
+            stale = adopt > ft
+        can = fwd_ok & ~np.isnan(t)
+        vn = (par_new >= 0) & can[pn] & ~stale[pn]
+        orphan = (par_new < 0) | stale[pn] | np.isnan(t[pn])
+        vo = (par_old >= 0) & can[po] & (stale[po] | orphan)
+        base = np.where(vo, ft[po], np.inf)
+        base = np.minimum(base, np.where(vn, ft[pn], np.inf))
+        cand = np.where(recv_ok & np.isfinite(base), base + link, np.nan)
+        t_new = np.fmin(t, cand)
+        t_new[root] = t0
+        if np.array_equal(t_new, t, equal_nan=True):
+            break
+        t = t_new
+    receipts = np.where(recv_ok, vo.astype(np.int64) + vn.astype(np.int64), 0)
+    return t, receipts
+
+
+def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
+                               seed: int = 0, payload: int = 64,
+                               backend: Optional[str] = None,
+                               bank: Optional[DelayBank] = None,
+                               epochs: Optional[List[_EpochPlan]] = None
+                               ) -> VectorCluster:
+    """Replay a :class:`ChurnTrace` with **divergent views** in closed
+    form — the model behind the paper's §5.4 redundancy claim.
+
+    Per epoch transition, the MemberUpdate is itself swept through the
+    closed form (over the announcer's view, §4.5) to get per-node
+    **view-adoption times**; broadcasts originating before every node
+    has adopted reduce through a mixed plan (:func:`_mixed_times`) —
+    stale forwarders emit the old epoch's children, adopters the new
+    ones — producing duplicate deliveries, redundant bytes, and
+    transient misses.  Once the update has fully propagated the epoch
+    falls back to the frozen-view batch sweep.  The per-message
+    intended set follows the *initiator's* view: the old members while
+    the initiator is still stale, the new members after it adopts.
+
+    Approximations vs the live event loop (statistically pinned in
+    ``tests/test_stale_view.py``): stale nodes keep their whole-plan
+    children arrays (region boundaries are not re-derived per hop),
+    adoption ignores reliable-message retries, and staleness reaches
+    back one epoch (windows are clipped at the next boundary).
+
+    ``epochs`` accepts precompiled :func:`compile_trace` output — the
+    plans depend only on the trace, so multi-seed sweeps pay for
+    whole-tree planning once (mirrors ``trace_sweep``).
+    """
+    from .messages import fresh_mid
+
+    assert protocol in ("snow", "coloring"), \
+        f"closed-form engine models snow/coloring, not {protocol!r}"
+    backend = _resolve_backend(backend)
+    trans = dict(trace.transitions())
+    if bank is None:
+        bank = bank_for_trace(seed, trace, protocol,
+                              extra_messages=len(trans))
+    eplans = epochs if epochs is not None else \
+        compile_trace(protocol, trace, k, bank.members, payload)
+    raw = trace.epochs()
+    metrics = ArrayMetrics(bank.members)
+    src_row = int(np.searchsorted(bank.members, trace.src))
+    n_bank = int(bank.members.shape[0])
+    update_col = len(trace.msg_times)     # extra bank columns, in order
+
+    def record_pure(ep: _EpochPlan, first_j: int) -> None:
+        """Frozen-view batch sweep over the epoch's messages ≥ first_j."""
+        if first_j >= ep.count:
+            return
+        sub = _EpochPlan(members=ep.members, rows=ep.rows,
+                         first=ep.first + first_j,
+                         times=ep.times[first_j:], plans=ep.plans,
+                         reach=ep.reach, nbytes=ep.nbytes,
+                         src_index=ep.src_index, receipts=ep.receipts,
+                         frame=ep.frame)
+        total = _epoch_times(sub, bank, backend)
+        for j in range(sub.count):
+            metrics.record_message(fresh_mid(), float(sub.times[j]),
+                                   sub.src_index, total[j], sub.nbytes,
+                                   members=sub.members,
+                                   receipts=sub.receipts,
+                                   frame_bytes=sub.frame)
+
+    all_plans: List[TreePlan] = []
+    for i, ep in enumerate(eplans):
+        all_plans.extend(ep.plans)
+        origin = _update_origin(trans.get(ep.first, ())) if i > 0 else None
+        if origin is None:
+            record_pure(ep, 0)
+            continue
+        t_e, kind, subject = origin
+        prev = eplans[i - 1]
+        if kind == "join":
+            aroot, amembers = subject, ep.members
+        elif kind == "leave":
+            aroot, amembers = subject, prev.members
+        else:                                   # evict: detector surrogate
+            aroot, amembers = trace.src, ep.members
+        # -- adoption sweep: the MemberUpdate broadcast itself ----------
+        aplan = plan_broadcast(amembers, aroot, k)
+        arows = np.searchsorted(bank.members, amembers)
+        a_t = delivery_times(
+            aplan, bank.fwd[arows, update_col, 0],
+            bank.link[arows, update_col, 0], t0=t_e, backend=backend)
+        adopt_rows = np.full(n_bank, t_e)
+        adopt_rows[arows] = a_t
+        for ev in trans[ep.first]:
+            if ev.kind == "leave":
+                # a leaver never adopts its own removal: it lingers,
+                # forwarding over its old view (§4.5.2)
+                adopt_rows[np.searchsorted(bank.members, ev.node)] = np.inf
+        settle = float(np.nanmax(a_t))
+        # -- mixed sweeps for messages inside the staleness window ------
+        union = np.union1d(prev.members, ep.members)
+        u_rows = np.searchsorted(bank.members, union)
+        adopt_u = adopt_rows[u_rows]
+        crashed_u = np.isin(union, raw[i].crashed) \
+            if raw[i].crashed.size else np.zeros(union.shape[0], dtype=bool)
+        recv_ok = ~crashed_u
+        old_by_slot = {_slot(p.tree): p for p in prev.plans}
+        new_by_slot = {_slot(p.tree): p for p in ep.plans}
+        pars = {s: (_parents_in_union(old_by_slot.get(s), union),
+                    _parents_in_union(new_by_slot.get(s), union))
+                for s in sorted(set(old_by_slot) | set(new_by_slot))}
+        max_h = max(p.height for p in prev.plans + ep.plans)
+        root_u = int(np.searchsorted(union, trace.src))
+        j = 0
+        while j < ep.count and float(ep.times[j]) < settle:
+            t0 = float(ep.times[j])
+            col = ep.first + j
+            total = None
+            receipts = np.zeros(union.shape[0], dtype=np.int64)
+            for s, (par_old, par_new) in pars.items():
+                if s >= bank.n_slots:
+                    continue
+                t_s, r_s = _mixed_times(
+                    par_old, par_new, bank.fwd[u_rows, col, s],
+                    bank.link[u_rows, col, s], adopt_u, t0, root_u,
+                    recv_ok, recv_ok, max_iter=2 * max_h + 8)
+                total = t_s if total is None else np.fmin(total, t_s)
+                receipts += r_s
+            # the intended set is the INITIATOR's view at send time
+            msg_members = prev.members if adopt_rows[src_row] > t0 \
+                else ep.members
+            pos = np.searchsorted(union, msg_members)
+            metrics.record_message(
+                fresh_mid(), t0,
+                int(np.searchsorted(msg_members, trace.src)),
+                total[pos], ep.frame * int(receipts.sum()),
+                members=msg_members, receipts=receipts[pos],
+                frame_bytes=ep.frame)
+            j += 1
+        record_pure(ep, j)
+        update_col += 1
+    return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
+                         nodes={}, fixed=list(range(trace.n)),
+                         protocol=protocol, k=k, plans=tuple(all_plans),
+                         bank=bank, trace=trace, view_model="stale")
+
+
+def run_churn_stale_vectorized(protocol: str, n: int = 500, k: int = 4,
+                               n_messages: int = 100, rate_s: float = 1.0,
+                               seed: int = 0, payload: int = 64,
+                               churn_every: int = 10,
+                               backend: Optional[str] = None,
+                               trace: Optional[ChurnTrace] = None
+                               ) -> VectorCluster:
+    """§5.4 churn under the stale-view model (paper cadence unless
+    ``trace`` is given)."""
+    if trace is None:
+        trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
+    return run_trace_stale_vectorized(protocol, trace, k, seed, payload,
+                                      backend)
+
+
 def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 seeds: Sequence[int], backend: Optional[str] = None,
                 payload: int = 64,
@@ -690,6 +990,7 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         ldts: List[np.ndarray] = []
         rels: List[np.ndarray] = []
         rmrs: List[float] = []
+        reds: List[np.ndarray] = []
         for ep, sel in zip(epochs, fixed_sel):
             total = _epoch_times(ep, bank, backend)
             sub = total[:, sel] - ep.times[:, None]
@@ -699,15 +1000,22 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
             if got.any():
                 ldt[got] = np.nanmax(sub[got], axis=1)
             n_int = int(sel.sum())
+            # §5.4 subset semantics: bytes attributed to the metered
+            # population only — frames received BY subset members — not
+            # whole-cluster bytes over the subset denominator
+            rec_sub = int(ep.receipts[sel].sum())
             ldts.append(ldt)
             rels.append(cnt / max(1, n_int))
-            rmrs.extend([ep.nbytes / max(1, n_int)] * ep.count)
+            rmrs.extend([ep.frame * rec_sub / max(1, n_int)] * ep.count)
+            reds.append(ep.frame * (rec_sub - cnt) / max(1, n_int))
         ldt_all = np.concatenate(ldts)
         rel_all = np.concatenate(rels)
+        red_all = np.concatenate(reds)
         rows.append({
             "seed": int(seed), "n": trace.n, "k": k,
             "ldt": float(np.nanmean(ldt_all)),
             "rmr": float(np.mean(rmrs)),
+            "rmr_redundant": float(red_all.mean()),
             "reliability": float(rel_all.mean()),
             "n_messages": len(trace.msg_times),
             "n_epochs": len(epochs),

@@ -187,7 +187,8 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
               seed: int = 0, payload: int = 64,
               churn_every: int = 10, engine: str = "auto",
               backend: Optional[str] = None,
-              trace: Optional[ChurnTrace] = None) -> Cluster:
+              trace: Optional[ChurnTrace] = None,
+              view_model: str = "oracle") -> Cluster:
     """§5.4: while messages flow, one fresh node joins every
     ``churn_every`` messages and gracefully leaves ``churn_every``
     messages later.  Metrics are evaluated over the fixed n nodes only.
@@ -197,15 +198,29 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
     epoch-segmented closed-form engine for snow/coloring and through the
     event loop — full protocol semantics: joins sync-then-announce,
     leaves linger, anti-entropy runs — for the baselines (or on
-    request, ``engine="events"``)."""
+    request, ``engine="events"``).
+
+    ``view_model`` selects the membership model of the vectorized
+    route: ``"oracle"`` freezes every view at the event instant (the
+    PR-3 epoch engine — duplicates structurally impossible), while
+    ``"stale"`` propagates each membership change as a MemberUpdate
+    adoption sweep and runs mixed old/new-plan sweeps through the
+    staleness window, producing the duplicate deliveries and redundant
+    bytes the paper's §5.4 comparison is about.  The event loop is
+    inherently stale (live MemberUpdate broadcasts, per-node lagged
+    views), so ``view_model`` does not change ``engine="events"``."""
+    assert view_model in ("oracle", "stale"), view_model
     if trace is None:
         trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
     if engine == "auto":
         engine = "vectorized" if protocol in ("snow", "coloring") \
             else "events"
     if engine == "vectorized":
-        from .engine import run_trace_vectorized
+        from .engine import run_trace_stale_vectorized, run_trace_vectorized
 
+        if view_model == "stale":
+            return run_trace_stale_vectorized(protocol, trace, k, seed,
+                                              payload, backend)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
                                     backend)
     c = build_cluster(protocol, n, k, seed,
@@ -259,7 +274,8 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
                   seed: int = 0, payload: int = 64,
                   crash_every: int = 10, reliable: bool = False,
                   engine: str = "auto", backend: Optional[str] = None,
-                  trace: Optional[ChurnTrace] = None) -> Cluster:
+                  trace: Optional[ChurnTrace] = None,
+                  view_model: str = "oracle") -> Cluster:
     """§5.5: every ``crash_every`` messages a random fixed node silently
     crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
     evicted within seconds; other nodes' views keep the dead node, which
@@ -270,7 +286,10 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
     crashes).  ``engine="auto"`` → vectorized for snow/coloring, where
     the trace's ``evict`` events stand in for SWIM detection; reliable
     runs and baselines keep the event loop, which ignores the trace
-    evicts and lets live SWIM do the detecting."""
+    evicts and lets live SWIM do the detecting.  ``view_model="stale"``
+    additionally models EVICT propagation lag on the vectorized route
+    (see :func:`run_churn`)."""
+    assert view_model in ("oracle", "stale"), view_model
     if trace is None:
         trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
                                       crash_every)
@@ -278,8 +297,11 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
         engine = "vectorized" if (protocol in ("snow", "coloring")
                                   and not reliable) else "events"
     if engine == "vectorized":
-        from .engine import run_trace_vectorized
+        from .engine import run_trace_stale_vectorized, run_trace_vectorized
 
+        if view_model == "stale":
+            return run_trace_stale_vectorized(protocol, trace, k, seed,
+                                              payload, backend)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
                                     backend)
     c = build_cluster(protocol, n, k, seed,

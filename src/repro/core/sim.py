@@ -88,13 +88,41 @@ class LatencyModel:
 
 
 class Metrics:
-    """Per-broadcast delivery/byte records → LDT / RMR / Reliability."""
+    """Per-broadcast delivery/byte records → LDT / RMR / Reliability.
+
+    Metric definitions (DESIGN.md §8):
+
+    * **LDT** — last delivery time: max over the intended set of
+      ``first_delivery - t0``.
+    * **RMR** — received-message rate in bytes/node: DATA bytes received
+      by the metered population divided by its size.  Split into
+      ``payload_bytes`` (first-receipt frames — the unavoidable cost of
+      delivering once everywhere) and ``redundant_bytes`` (every frame a
+      node receives *after* it already delivered the message: gossip
+      duplicates, Coloring's second tree, stale-view overlaps).
+    * **Reliability** — delivered fraction of the intended set (the
+      initiator's view at send time, crashed-but-not-evicted included).
+
+    Subset semantics (§5.4): ``subset`` restricts the metered population
+    to ``intended ∩ subset`` — reliability counts only those nodes and
+    **byte attribution is restricted to frames received by those
+    nodes** (the RMR denominator and numerator cover the same
+    population; dividing whole-cluster bytes by the subset size would
+    inflate RMR by ``n / |subset|``).  ``subset=None`` meters the whole
+    cluster: bytes are the global per-message totals.
+    """
 
     def __init__(self) -> None:
         self.start: Dict[int, float] = {}
         self.intended: Dict[int, frozenset] = {}
         self.first_delivery: Dict[int, Dict[NodeId, float]] = {}
         self.data_bytes: Dict[int, int] = {}
+        #: per-node receipt accounting: mid -> {node: bytes received}
+        self.node_bytes: Dict[int, Dict[NodeId, int]] = {}
+        #: mid -> {node: bytes of duplicate (post-delivery) receipts}
+        self.node_red_bytes: Dict[int, Dict[NodeId, int]] = {}
+        #: mid -> {node: duplicate receipt count}
+        self.node_dups: Dict[int, Dict[NodeId, int]] = {}
 
     def begin(self, mid: int, t0: float, intended: Sequence[NodeId]) -> None:
         self.start[mid] = t0
@@ -107,16 +135,35 @@ class Metrics:
         if node not in fd:
             fd[node] = t
 
-    def add_bytes(self, mid: int, nbytes: int) -> None:
+    def add_bytes(self, mid: int, nbytes: int, node: Optional[NodeId] = None,
+                  duplicate: bool = False) -> None:
+        """Record ``nbytes`` of DATA received by ``node`` for ``mid``.
+
+        ``duplicate=True`` marks a receipt by a node that had already
+        delivered the message — the §5.4 "unnecessary redundant
+        messages".  ``node=None`` (legacy callers) still feeds the
+        global total but cannot participate in subset attribution."""
         self.data_bytes[mid] = self.data_bytes.get(mid, 0) + nbytes
+        if node is None:
+            return
+        nb = self.node_bytes.setdefault(mid, {})
+        nb[node] = nb.get(node, 0) + nbytes
+        if duplicate:
+            rb = self.node_red_bytes.setdefault(mid, {})
+            rb[node] = rb.get(node, 0) + nbytes
+            nd = self.node_dups.setdefault(mid, {})
+            nd[node] = nd.get(node, 0) + 1
 
     # -- aggregation ---------------------------------------------------------
     def per_message(self, subset: Optional[Set[NodeId]] = None) -> List[dict]:
-        """One row per broadcast: ldt (s), rmr (bytes/node), reliability.
+        """One row per broadcast: ldt (s), rmr (bytes/node), reliability,
+        plus the duplicate split (payload_bytes / redundant_bytes /
+        duplicates).
 
-        ``subset`` restricts both the intended set and deliveries to a
-        fixed group of nodes — the paper's "metrics exclusively from the
-        fixed 500 nodes" methodology (§5.4).
+        ``subset`` restricts the metered population to ``intended ∩
+        subset`` — the paper's "metrics exclusively from the fixed 500
+        nodes" methodology (§5.4).  Byte attribution follows the same
+        population (see class docstring).
         """
         if subset is not None and not isinstance(subset, frozenset):
             subset = frozenset(subset)    # hoisted: one conversion, not O(M)
@@ -130,22 +177,40 @@ class Metrics:
             fd = self.first_delivery.get(mid, {})
             times = [fd[n] - t0 for n in intended if n in fd]
             n_int = len(intended)
+            if subset is None:
+                total = self.data_bytes.get(mid, 0)
+                red = sum(self.node_red_bytes.get(mid, {}).values())
+                dups = sum(self.node_dups.get(mid, {}).values())
+            else:
+                nb = self.node_bytes.get(mid, {})
+                rb = self.node_red_bytes.get(mid, {})
+                nd = self.node_dups.get(mid, {})
+                total = sum(nb[n] for n in intended if n in nb)
+                red = sum(rb[n] for n in intended if n in rb)
+                dups = sum(nd[n] for n in intended if n in nd)
             rows.append({
                 "mid": mid,
                 "ldt": max(times) if times else float("nan"),
                 "reliability": len(times) / n_int,
-                "rmr": self.data_bytes.get(mid, 0) / max(1, n_int),
+                "rmr": total / max(1, n_int),
+                "rmr_redundant": red / max(1, n_int),
+                "payload_bytes": total - red,
+                "redundant_bytes": red,
+                "duplicates": dups,
             })
         return rows
 
     def summary(self, subset: Optional[Set[NodeId]] = None) -> dict:
         rows = self.per_message(subset)
         if not rows:
-            return {"ldt": float("nan"), "rmr": 0.0, "reliability": 0.0, "n_messages": 0}
+            return {"ldt": float("nan"), "rmr": 0.0, "reliability": 0.0,
+                    "rmr_redundant": 0.0, "duplicates": 0.0, "n_messages": 0}
         ldts = [r["ldt"] for r in rows if not math.isnan(r["ldt"])]
         return {
             "ldt": sum(ldts) / len(ldts) if ldts else float("nan"),
             "rmr": sum(r["rmr"] for r in rows) / len(rows),
+            "rmr_redundant": sum(r["rmr_redundant"] for r in rows) / len(rows),
+            "duplicates": sum(r["duplicates"] for r in rows) / len(rows),
             "reliability": sum(r["reliability"] for r in rows) / len(rows),
             "n_messages": len(rows),
         }

@@ -79,6 +79,10 @@ class SnowNode(NodeBase):
         self._reliable_index: Dict[Tuple[int, int], List[Tuple]] = {}
         self.converged: Dict[int, float] = {}     # root-side: mid -> time all acks arrived
         self._root_pending: Dict[Tuple[int, int], Set[Tuple[NodeId, Optional[int]]]] = {}
+        # mid -> newest retry epoch the root has broadcast; only THAT
+        # epoch may declare convergence — a late ACK draining a
+        # superseded epoch's pending set says nothing about the retry
+        self._root_latest_epoch: Dict[int, int] = {}
         self._probe_waiting: Dict[NodeId, float] = {}
         self._suspected: Set[NodeId] = set()
 
@@ -109,6 +113,7 @@ class SnowNode(NodeBase):
                 if reliable:
                     self._root_pending.setdefault((mid, 0), set()).add(
                         (sroot, SECONDARY))
+                    self._root_latest_epoch.setdefault(mid, 0)
                 self.send(sroot, msg)
         else:
             self._forward(Data(mid, self.id, None, None, payload, reliable,
@@ -148,7 +153,11 @@ class SnowNode(NodeBase):
             pass  # anti-entropy handled via _anti_entropy_tick state pulls
 
     def _on_data(self, src: NodeId, msg: Data) -> None:
-        self.metrics.add_bytes(msg.mid, msg.size)
+        # a receipt by a node that already delivered mid is redundant —
+        # gossip-style duplicates, Coloring's second tree, or divergent
+        # views routing overlapping subtrees (§5.4 RMR accounting)
+        self.metrics.add_bytes(msg.mid, msg.size, node=self.id,
+                               duplicate=msg.mid in self.delivered)
         if msg.mid not in self.delivered:
             self.delivered.add(msg.mid)
             self.metrics.delivered(msg.mid, self.id, self.sim.now)
@@ -175,6 +184,8 @@ class SnowNode(NodeBase):
             if msg.reliable:
                 if parent is None:
                     # root: each epoch keeps its own expected-ack set
+                    if msg.epoch > self._root_latest_epoch.get(msg.mid, -1):
+                        self._root_latest_epoch[msg.mid] = msg.epoch
                     pend = self._root_pending.setdefault(
                         (msg.mid, msg.epoch), set())
                     for ch in children:
@@ -217,12 +228,16 @@ class SnowNode(NodeBase):
     # Reliable Messages (§4.4)                                            #
     # ------------------------------------------------------------------ #
     def _on_ack(self, src: NodeId, ack: Ack) -> None:
-        # root bookkeeping (per epoch)
+        # root bookkeeping (per epoch).  Convergence is declared only by
+        # the LATEST retry epoch: a late ACK may drain a superseded
+        # epoch's pending set while the rebroadcast is still collecting
+        # — that must not mark the message converged.
         pend = self._root_pending.get((ack.mid, ack.epoch))
         if pend is not None:
             for entry in [e for e in pend if e[0] == src]:
                 pend.discard(entry)
-            if not pend:
+            if not pend and ack.epoch >= self._root_latest_epoch.get(
+                    ack.mid, ack.epoch):
                 self.converged.setdefault(ack.mid, self.sim.now)
         # internal-node bookkeeping (any tree, same epoch only) — the
         # (mid, epoch) index holds at most one key per tree, so this is
@@ -248,7 +263,8 @@ class SnowNode(NodeBase):
         pend = {e for e in pend if e[0] in self.view}
         self._root_pending[(msg.mid, epoch)] = pend
         if not pend:
-            self.converged.setdefault(msg.mid, self.sim.now)
+            if epoch >= self._root_latest_epoch.get(msg.mid, epoch):
+                self.converged.setdefault(msg.mid, self.sim.now)
             return
         if epoch < self.max_retries:
             # full rebroadcast, next epoch, over the updated view — this

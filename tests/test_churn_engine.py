@@ -48,7 +48,8 @@ def _assert_bit_exact(ev, vec, ctx):
     fixed = set(vec.fixed)
     for a, b in zip(ev.metrics.per_message(fixed),
                     vec.metrics.per_message(fixed)):
-        for key in ("ldt", "reliability", "rmr"):
+        for key in ("ldt", "reliability", "rmr", "rmr_redundant",
+                    "payload_bytes", "redundant_bytes", "duplicates"):
             va, vb = a[key], b[key]
             if isinstance(va, float) and math.isnan(va):
                 assert math.isnan(vb), (*ctx, key)

@@ -1,0 +1,73 @@
+"""Reliable-Message retry epochs: convergence bookkeeping at the root.
+
+Regression for the stale-epoch convergence bug: a late ACK that empties
+a *superseded* epoch's ``_root_pending`` set must NOT declare the
+message converged while the retry epoch (the root-driven rebroadcast
+over the updated view, §4.4) is still collecting ACKs.
+"""
+from repro.core.membership import MembershipView
+from repro.core.sim import LatencyModel, Metrics, Network, NodeProfile, Sim
+from repro.core.snow_node import SnowNode
+
+
+def _mini_cluster(straggler: int, n: int = 7, k: int = 2,
+                  ack_timeout: float = 0.5):
+    """n=7, k=2 from root 0 plans 0 → {2, 5}, 2 → {1, 3}, 5 → {4, 6}
+    (verified against the planner).  ``straggler`` forwards after 1 s,
+    everyone else after a deterministic 100 ms."""
+    sim = Sim(seed=0)
+    metrics = Metrics()
+    net = Network(sim, metrics, LatencyModel())
+    nodes = {}
+    for i in range(n):
+        prof = NodeProfile(straggler=(i == straggler), lo=0.1, hi=0.1,
+                           straggler_delay=1.0)
+        nodes[i] = SnowNode(i, sim, net, metrics,
+                            MembershipView.from_sorted(range(n)), k, prof,
+                            ack_timeout=ack_timeout, max_retries=2)
+    return sim, net, nodes
+
+
+def test_superseded_epoch_ack_does_not_converge():
+    """Timeline: node 2 (straggler) delays its subtree's epoch-0 ACKs to
+    ~1.0 s; the 0.5 s ack timeout fires first, so the root rebroadcasts
+    (epoch 1).  Leaf 3 crashes at 1.2 s — after ACKing epoch 0, before
+    epoch 1 reaches it — so every retry epoch stays pending forever.
+    The late epoch-0 ACK at ~1.0 s empties the superseded epoch's set;
+    the buggy root declared convergence right there."""
+    sim, net, nodes = _mini_cluster(straggler=2)
+    mid = nodes[0].broadcast(reliable=True)
+    sim.at(1.2, lambda: net.crash(3))
+    sim.run(until=60.0)
+    root = nodes[0]
+    assert not root._root_pending[(mid, 0)], \
+        "epoch 0 must fully ACK (the crash lands after the epoch-0 ACK)"
+    assert root._root_latest_epoch[mid] > 0, \
+        "the timeout must have forced a root rebroadcast"
+    assert mid not in root.converged, \
+        "a superseded epoch's late ACK declared convergence (§4.4 bug)"
+
+
+def test_retry_epoch_still_converges_without_crash():
+    """Same timeline minus the crash: the retry epoch completes and
+    convergence is declared — by the latest epoch, not the first."""
+    sim, net, nodes = _mini_cluster(straggler=2)
+    mid = nodes[0].broadcast(reliable=True)
+    sim.run(until=60.0)
+    root = nodes[0]
+    assert root._root_latest_epoch[mid] > 0
+    assert mid in root.converged
+    # convergence strictly after the superseded epoch-0 ACKs (~1.0 s)
+    assert root.converged[mid] > 1.0
+
+
+def test_no_retry_fast_path_unaffected():
+    """No straggler: epoch 0 ACKs inside the timeout and convergence is
+    declared by epoch 0 itself."""
+    sim, net, nodes = _mini_cluster(straggler=-1)
+    mid = nodes[0].broadcast(reliable=True)
+    sim.run(until=60.0)
+    root = nodes[0]
+    assert root._root_latest_epoch[mid] == 0
+    assert mid in root.converged
+    assert root.converged[mid] < 0.5

@@ -45,30 +45,45 @@ def test_crashed_destination_still_counts():
 
 
 def test_per_message_subset_summary():
-    """Regression for the hoisted frozenset(subset) conversion: subset
-    filtering must behave identically for any iterable subset type, and
-    the summary math over the restricted intended sets must be exact."""
+    """Subset filtering must behave identically for any iterable subset
+    type, and byte attribution must follow the metered population: RMR
+    over a subset counts only frames received BY subset members (the
+    §5.4 fix — whole-cluster bytes over a subset denominator inflated
+    RMR by n/|subset|)."""
     m = Metrics()
     m.begin(0, 0.0, [1, 2, 3, 4])
     for node, t in ((1, 0.5), (2, 1.5), (3, 2.5)):   # 4 never delivers
         m.delivered(0, node, t)
-    m.add_bytes(0, 100)
+        m.add_bytes(0, 30, node=node)
+    m.add_bytes(0, 10, node=3, duplicate=True)       # 3 hears it twice
     m.begin(1, 10.0, [1, 2])
     m.delivered(1, 1, 10.25)
-    m.add_bytes(1, 60)
+    m.add_bytes(1, 60, node=1)
 
     for subset in ({1, 2, 4}, frozenset({1, 2, 4}), [1, 2, 4]):
         rows = m.per_message(subset)
         assert [r["mid"] for r in rows] == [0, 1]
         assert rows[0]["ldt"] == 1.5                  # max over {1, 2}
         assert rows[0]["reliability"] == 2 / 3        # 4 intended, missed
-        assert rows[0]["rmr"] == 100 / 3
+        assert rows[0]["rmr"] == 60 / 3               # bytes of {1, 2} only
+        assert rows[0]["redundant_bytes"] == 0        # 3's dup is outside
         assert rows[1]["ldt"] == 0.25
         assert rows[1]["reliability"] == 0.5
+        assert rows[1]["rmr"] == 60 / 2
         s = m.summary(subset)
         assert s["n_messages"] == 2
         assert s["ldt"] == (1.5 + 0.25) / 2
         assert s["reliability"] == (2 / 3 + 0.5) / 2
+
+    # the whole-cluster view keeps global totals and the duplicate split
+    rows = m.per_message()
+    assert rows[0]["rmr"] == 100 / 4
+    assert rows[0]["redundant_bytes"] == 10
+    assert rows[0]["payload_bytes"] == 90
+    assert rows[0]["duplicates"] == 1
+    full = m.per_message({1, 2, 3, 4})
+    assert full[0]["rmr"] == 100 / 4
+    assert full[0]["redundant_bytes"] == 10
 
     # a subset disjoint from every intended set yields no rows
     assert m.per_message({99}) == []
