@@ -1,0 +1,15 @@
+"""Path bootstrap shared by every benchmark entry point.
+
+Importing this module puts the repo root (for ``benchmarks.*``) and
+``src`` (for ``repro.*``) on ``sys.path``, so each file stays runnable
+both directly (``python benchmarks/<file>.py`` from anywhere — the
+script dir is on the path, so ``import _bootstrap`` resolves) and as a
+package module (``from benchmarks import _bootstrap``).
+"""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

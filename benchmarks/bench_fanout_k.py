@@ -1,26 +1,43 @@
 """Paper Figure 6B: fixed n=600, k from 2 to 8 — LDT improves with k but
-saturates; RMR stays flat (leaf share grows with k)."""
+saturates; RMR stays flat (leaf share grows with k).
+
+Since PR 5 a thin view over the declarative experiment subsystem: the
+fanout loop is the ``fanout_k_*`` spec of ``benchmarks/paper_repro.py``
+(results committed under ``benchmarks/results/paper/``); this entry
+point materializes it and adds the planner's tree height per k.
+"""
 from __future__ import annotations
 
-from repro.core.scenarios import run_stable, summarize
-from repro.core.membership import MembershipView
-from repro.core.tree import trace_broadcast
+from typing import Dict, List
+
+try:
+    import _bootstrap  # noqa: F401  (direct execution)
+except ImportError:
+    from benchmarks import _bootstrap  # noqa: F401  (package import)
+
+from benchmarks.paper_repro import RESULTS_DIR, specs  # noqa: E402
+from repro.core.experiments import ExperimentRunner  # noqa: E402
+from repro.core.membership import MembershipView  # noqa: E402
+from repro.core.tree import trace_broadcast  # noqa: E402
 
 
-def run(n: int = 600, ks=(2, 4, 6, 8), n_messages: int = 20, seed: int = 5):
+def run(scale: str = "paper") -> List[Dict]:
+    spec = next(s for s in specs(scale) if s.name.startswith("fanout_k"))
+    doc = ExperimentRunner(RESULTS_DIR).run(spec)
     rows = []
-    for k in ks:
-        s = summarize(run_stable("snow", n=n, k=k, n_messages=n_messages,
-                                 seed=seed))
-        t = trace_broadcast(0, MembershipView(range(n)), k)
-        rows.append({"k": k, "ldt_ms": s["ldt"] * 1000, "rmr_B": s["rmr"],
-                     "reliability": s["reliability"], "height": t.height})
+    for cell in spec.cells():
+        r = doc["rows"][cell.key()]
+        t = trace_broadcast(0, MembershipView(range(cell.n)), cell.k)
+        rows.append({"k": cell.k, "ldt_ms": r["ldt_ms"],
+                     "rmr_B": r["rmr_B"],
+                     "reliability": r["reliability"],
+                     "height": t.height})
     return rows
 
 
-def main():
+def main(smoke: bool = False) -> List[str]:
     out = [f"{'k':>3s} {'ldt_ms':>7s} {'rmr_B':>6s} {'rel':>5s} {'height':>6s}"]
-    for r in run():
+    for r in run("smoke" if smoke else "paper"):
         out.append(f"{r['k']:3d} {r['ldt_ms']:7.0f} {r['rmr_B']:6.1f} "
                    f"{r['reliability']:5.3f} {r['height']:6d}")
     return out

@@ -9,16 +9,13 @@ from __future__ import annotations
 
 import argparse
 import inspect
-import sys
 import time
 from pathlib import Path
 
-# runnable as `python benchmarks/run.py` from anywhere: repo root (for
-# the benchmarks package) and src (for repro) on the path
-_ROOT = Path(__file__).resolve().parents[1]
-for p in (str(_ROOT), str(_ROOT / "src")):
-    if p not in sys.path:
-        sys.path.insert(0, p)
+try:
+    import _bootstrap  # noqa: F401  (direct execution)
+except ImportError:
+    from benchmarks import _bootstrap  # noqa: F401  (package import)
 
 
 # single source of truth: section name -> benchmark module (imported
@@ -27,6 +24,7 @@ SECTION_MODULES = {
     "protocols_table2": "bench_protocols",
     "scale_n_fig6a": "bench_scale_n",
     "fanout_k_fig6b": "bench_fanout_k",
+    "paper_repro": "paper_repro",
     "children_micro": "bench_children_micro",
     "collectives": "bench_collectives",
     "kernels": "bench_kernels",
@@ -49,6 +47,13 @@ MIN_CHURN_VEC_SPEEDUP = 3.0   # epoch-segmented churn engine floor (the
 # duplicate floor (k-1 of every k forwards are redundant: ~3 x 108 B)
 MAX_SNOW_REDUNDANT_B = 1e-9
 MIN_GOSSIP_REDUNDANT_B = 50.0
+# §5 overhead bands (paper_repro smoke): snow's TOTAL overhead
+# (control + payload + redundant, B per node per second) must stay
+# strictly below the gossip baseline, and its control plane must stay
+# well below gossip's per-round view push (DESIGN.md §9: SWIM probes +
+# delta member-updates + 15 s anti-entropy vs a 1 s full-view round)
+MAX_OVERHEAD_RATIO = 1.0
+MAX_CONTROL_RATIO = 0.5
 
 
 def _calibrate() -> float:
@@ -132,6 +137,18 @@ def _check(sections, metrics) -> list:
                 if mval < floor:
                     problems.append(f"{name}: {key} "
                                     f"{mval:.1f}x < {floor}x")
+            elif key.endswith("overhead_ratio"):
+                # absolute band: snow total overhead strictly below the
+                # gossip baseline (the paper's §5 headline comparison)
+                if mval >= MAX_OVERHEAD_RATIO:
+                    problems.append(
+                        f"{name}: {key} {mval:.3f} — snow total overhead "
+                        f"is not below gossip")
+            elif key.endswith("control_ratio"):
+                if mval >= MAX_CONTROL_RATIO:
+                    problems.append(
+                        f"{name}: {key} {mval:.3f} ≥ {MAX_CONTROL_RATIO} "
+                        f"— snow control plane is not ≪ gossip's")
             elif key.endswith("redundant_B"):
                 # absolute redundancy bands (baseline-independent):
                 # snow's stable redundant bytes are structurally zero,
@@ -176,7 +193,7 @@ def main(argv=None) -> None:
     elif args.smoke:
         # protocol-layer sections only; the jax kernel/roofline benches
         # have their own timings and dominate smoke wall-time
-        names = ["scale_n_fig6a", "children_micro"]
+        names = ["scale_n_fig6a", "paper_repro", "children_micro"]
     else:
         names = list(SECTIONS)
 

@@ -1,3 +1,17 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Snow protocol core: the paper's system, reproduced at cloud scale.
+
+Layer map (details: DESIGN.md; the repo README has the short tour):
+
+* ring/membership math — :mod:`.ids`, :mod:`.membership`,
+  :mod:`.regions`, :mod:`.coloring`, :mod:`.planner` (index-space
+  regions, whole-tree batched planning);
+* live protocol — :mod:`.sim` (event loop, Metrics incl. control-plane
+  classification), :mod:`.messages`, :mod:`.snow_node`,
+  :mod:`.baselines` (gossip/flooding/plumtree + closed-form gossip);
+* closed forms — :mod:`.engine` (stable / epoch-segmented /
+  stale-view delivery sweeps), :mod:`.control` (§9 control-plane byte
+  model), :mod:`.churn` (ChurnTrace schedules both engines consume);
+* experiment layer — :mod:`.scenarios` (paper scenario runners with
+  engine routing), :mod:`.experiments` (declarative resumable grid
+  sweeps; driven by ``benchmarks/paper_repro.py``).
+"""

@@ -255,14 +255,26 @@ def gossip_message_vectorized(n: int, k: int, g: np.random.Generator,
 
 
 def gossip_sweep(n: int, k: int, seeds: Sequence[int], n_messages: int = 2,
-                 payload: int = 64, src: NodeId = 0) -> List[dict]:
+                 payload: int = 64, src: NodeId = 0, rate_s: float = 1.0,
+                 control=None) -> List[dict]:
     """Multi-seed closed-form gossip sweep for the redundancy benchmarks
     — metric rows shaped like :func:`repro.core.engine.stable_sweep`'s,
     plus the payload/redundant byte split (§5.4: gossip's redundant
-    bytes floor is what Snow's tree structure avoids)."""
+    bytes floor is what Snow's tree structure avoids).
+
+    ``control`` (a :class:`~repro.core.control.ControlParams`) attaches
+    the baseline's per-round membership cost: gossip has no failure
+    detector and no delta dissemination, so its deployments push the
+    full view to one random peer every ``gossip_round_s`` (DESIGN.md
+    §9).  Rows gain ``control_B`` (category totals over the
+    ``n_messages * rate_s`` window) and ``duration_s``."""
     import time
 
+    from .control import gossip_control
+
     frame = GossipData(0, src, payload).size
+    duration = n_messages * rate_s
+    ctl = gossip_control(n, duration, control) if control else None
     rows = []
     for seed in seeds:
         g = np.random.default_rng(
@@ -280,7 +292,7 @@ def gossip_sweep(n: int, k: int, seeds: Sequence[int], n_messages: int = 2,
             rels.append(dcnt / n_int)
             rmrs.append(frame * rec / n_int)
             reds.append(frame * (rec - dcnt) / n_int)
-        rows.append({
+        row = {
             "seed": int(seed), "n": n, "k": k,
             "ldt": float(np.mean(ldts)),
             "rmr": float(np.mean(rmrs)),
@@ -289,5 +301,9 @@ def gossip_sweep(n: int, k: int, seeds: Sequence[int], n_messages: int = 2,
             "reliability": float(np.mean(rels)),
             "n_messages": n_messages,
             "wall_s": time.time() - tw,
-        })
+        }
+        if ctl is not None:
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = duration
+        rows.append(row)
     return rows

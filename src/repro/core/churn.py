@@ -178,6 +178,23 @@ class ChurnTrace:
                 out.append((j, evs))
         return out
 
+    def epoch_spans(self, drain_s: float = 0.0) -> List[Tuple[float, float]]:
+        """``(start, end)`` wall-clock span of every epoch, aligned with
+        :meth:`epochs`.
+
+        Epoch ``i`` spans from its first broadcast's origination time to
+        the next epoch's first origination (the last epoch runs to
+        :meth:`horizon` ``+ drain_s``).  The closed-form control model
+        (:mod:`repro.core.control`) integrates the rate-based SWIM /
+        anti-entropy traffic over these spans, so per-epoch membership
+        (``m``) and crashed counts (``c``) stay constant inside each
+        integral — the same frozen-view discretization the delivery
+        engine uses."""
+        eps = self.epochs()
+        starts = [float(ep.times[0]) for ep in eps]
+        ends = starts[1:] + [self.horizon() + drain_s]
+        return list(zip(starts, ends))
+
     def is_boundary_aligned(self, quiescence_s: float) -> bool:
         """True when every event falls at least ``quiescence_s`` after
         the closest preceding broadcast — i.e. assuming every broadcast

@@ -1,0 +1,220 @@
+"""Closed-form control-plane traffic model (DESIGN.md §9).
+
+The delivery engines (``repro.core.engine``) reduce DATA bytes in closed
+form, but until this module the *control* plane — SWIM probing,
+member-update dissemination, anti-entropy view merges, the gossip
+baseline's per-round view exchange — existed only inside the live event
+loop, so the paper's §5 overhead comparison stopped where the event loop
+stops (n ≈ 5k).  This module expresses each category's **expected
+transmitted bytes** as a closed form over the same
+:class:`~repro.core.churn.ChurnTrace` epochs the delivery engine sweeps,
+matched statistically to the live loop (``tests/test_control_plane.py``:
+SWIM within 2 % healthy / 5 % under crashes, member-update within 10 %
+at n = 50 and bounded by the ``1 + max_retries`` rebroadcast ceiling at
+n = 500, anti-entropy within 10 % — the full observed-vs-asserted table
+is in DESIGN.md §9).
+
+Model summary (frame sizes straight from :mod:`repro.core.messages`):
+
+* **SWIM** — every alive node probes one random view member per
+  ``probe_interval_s``.  An alive target costs PING + PROBE-ACK.  A
+  crashed (blackholed) target costs the PING, then ``indirect_probes``
+  PING-REQ frames, then the alive fraction of those proxies relays a
+  PING each (dead proxies swallow their PING-REQ; relayed pings into
+  the dead subject earn no ack).  False suspicion does not occur: link
+  RTT (~1 ms) is far below the probe timeout (500 ms).
+* **Member update** — each effective membership event (join / graceful
+  leave / SWIM evict) is announced once as a Reliable Message over the
+  announcer's view: one 78 B update-carrying DATA frame per reached
+  node plus one 18 B ACK per reached node (leaf→root aggregation sends
+  exactly one ACK upward per non-root participant; retries are rare —
+  ACK aggregation converges well inside the 2.5 s timeout — and land
+  in the pin tolerance).  Silent crashes announce nothing.
+* **Anti-entropy** — every alive node starts one merge per
+  ``anti_entropy_interval_s``; an exchange moves two full-view SyncReq
+  frames (request + response, 18 B per member entry).
+* **View gossip** (baseline-only) — the gossip/flooding baselines have
+  no failure detector and no delta dissemination; their deployments
+  (Dynamo-style) maintain membership by pushing the full view to one
+  random peer every ``gossip_round_s``.  One SyncReq-shaped frame per
+  node per round.  This is a *modeled* cost — the event-loop
+  ``GossipNode`` does not implement it — and is the overhead axis the
+  paper's trade-off triangle needs: gossip pays O(view) bytes per node
+  per round always, Snow pays a constant probe rate plus O(view) only
+  per membership *change* (plus a 15× slower anti-entropy safety net).
+
+Everything returns plain floats (expected values) — deterministic,
+seed-independent, valid at any n.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .churn import ChurnTrace
+from .messages import Ack, Data, MemberUpdate, Probe, SyncReq
+
+#: wire size of one SWIM probe frame (PING == PING-REQ == PROBE-ACK)
+PROBE_B = Probe("ping", 0).size
+#: wire size of one Reliable-Message ACK
+ACK_B = Ack(0).size
+#: wire size of one member-update announcement DATA frame (payload 0)
+UPDATE_FRAME_B = Data(0, 0, None, None, 0, True, None,
+                      MemberUpdate("join", 0)).size
+
+
+def sync_req_bytes(n_entries: int) -> int:
+    """Wire size of one full-view SyncReq frame over ``n_entries``."""
+    return SyncReq(n_entries).size
+
+
+@dataclass(frozen=True)
+class ControlParams:
+    """Knobs of the §9 control model — defaults mirror the live
+    :class:`~repro.core.snow_node.SnowNode` protocol constants."""
+
+    probe_interval_s: float = 1.0
+    indirect_probes: int = 3
+    anti_entropy_interval_s: float = 15.0
+    #: membership-gossip round of the gossip/flooding baselines
+    gossip_round_s: float = 1.0
+    #: include the SWIM probe stream (a deployment always runs it)
+    swim: bool = True
+    #: include the periodic full-view merge safety net
+    anti_entropy: bool = True
+
+
+DEFAULT_PARAMS = ControlParams()
+
+
+# ------------------------------------------------------------------ #
+# Per-category closed forms                                            #
+# ------------------------------------------------------------------ #
+def swim_epoch_bytes(m: int, c: int, duration_s: float,
+                     params: ControlParams = DEFAULT_PARAMS) -> float:
+    """Expected SWIM bytes over one epoch: ``m`` view members of which
+    ``c`` are crashed-but-not-evicted, for ``duration_s`` seconds.
+
+    ``(m - c)`` alive nodes each tick ``duration / probe_interval``
+    times; the target is uniform over the ``m - 1`` view peers, so a
+    crashed target is hit with probability ``c / (m - 1)``."""
+    if m <= 1 or duration_s <= 0 or not params.swim:
+        return 0.0
+    alive = m - c
+    ticks = alive * duration_s / params.probe_interval_s
+    peers = m - 1
+    p_crashed = min(1.0, c / peers)
+    healthy_cost = 2 * PROBE_B                        # ping + probe_ack
+    proxies = min(params.indirect_probes, max(0, m - 2))
+    # proxies are drawn from the view minus {prober, target}; only the
+    # alive ones relay a ping into the (dead) subject
+    alive_frac = (alive - 1) / max(1, m - 2)
+    indirect_cost = PROBE_B * (1 + proxies + proxies * alive_frac)
+    return ticks * ((1 - p_crashed) * healthy_cost
+                    + p_crashed * indirect_cost)
+
+
+def member_update_event_bytes(reach: int) -> float:
+    """Expected bytes of one membership announcement that reaches
+    ``reach`` nodes: an update-carrying DATA frame plus a Reliable-
+    Message ACK per reached node."""
+    return max(0, reach) * (UPDATE_FRAME_B + ACK_B)
+
+
+def anti_entropy_epoch_bytes(m: int, c: int, duration_s: float,
+                             params: ControlParams = DEFAULT_PARAMS
+                             ) -> float:
+    """Expected anti-entropy bytes over one epoch: each alive node
+    initiates one exchange (two full-view SyncReq frames) per
+    ``anti_entropy_interval_s``."""
+    if m <= 1 or duration_s <= 0 or not params.anti_entropy:
+        return 0.0
+    exchanges = (m - c) * duration_s / params.anti_entropy_interval_s
+    return exchanges * 2 * sync_req_bytes(m)
+
+
+def view_gossip_bytes(n: int, duration_s: float,
+                      params: ControlParams = DEFAULT_PARAMS) -> float:
+    """Membership cost of the gossip/flooding baselines: every node
+    pushes its full view to one random peer once per round."""
+    if n <= 1 or duration_s <= 0:
+        return 0.0
+    rounds = n * duration_s / params.gossip_round_s
+    return rounds * sync_req_bytes(n)
+
+
+# ------------------------------------------------------------------ #
+# Scenario-level aggregation                                          #
+# ------------------------------------------------------------------ #
+def snow_stable_control(n: int, duration_s: float,
+                        params: ControlParams = DEFAULT_PARAMS
+                        ) -> Dict[str, float]:
+    """Snow/Coloring control bytes for a membership-static run: the
+    constant-rate SWIM + anti-entropy streams, no member updates."""
+    return {
+        "swim": swim_epoch_bytes(n, 0, duration_s, params),
+        "member_update": 0.0,
+        "anti_entropy": anti_entropy_epoch_bytes(n, 0, duration_s, params),
+    }
+
+
+def snow_trace_control(trace: ChurnTrace, drain_s: float = 0.0,
+                       params: ControlParams = DEFAULT_PARAMS
+                       ) -> Dict[str, float]:
+    """Snow/Coloring control bytes over a :class:`ChurnTrace`: the
+    rate-based streams integrate per epoch span (membership and crashed
+    counts frozen inside each span, exactly the delivery engine's
+    discretization) and each effective join/leave/evict adds one
+    announcement over the announcer's view.
+
+    Announcement reach per kind: a joiner broadcasts over its freshly
+    synced view (the new membership, reaching ``m_new - 1`` others); a
+    leaver over its old view, which still holds itself (``m_old - 1 =
+    m_new`` others); an eviction is announced by the detector over its
+    already-pruned view (``m_new - 1`` others).  Silent crashes change
+    no view and announce nothing."""
+    out = {"swim": 0.0, "member_update": 0.0, "anti_entropy": 0.0}
+    epochs = trace.epochs()
+    spans = trace.epoch_spans(drain_s)
+    for ep, (t0, t1) in zip(epochs, spans):
+        m = int(ep.members.shape[0])
+        c = int(ep.crashed.shape[0])
+        out["swim"] += swim_epoch_bytes(m, c, t1 - t0, params)
+        out["anti_entropy"] += anti_entropy_epoch_bytes(m, c, t1 - t0,
+                                                        params)
+    size_at = {ep.first: int(ep.members.shape[0]) for ep in epochs}
+    for first, evs in trace.transitions():
+        m_new = size_at.get(first, trace.n)
+        for ev in evs:
+            if ev.kind == "crash":
+                continue
+            reach = m_new if ev.kind == "leave" else m_new - 1
+            out["member_update"] += member_update_event_bytes(reach)
+    return out
+
+
+def gossip_control(n: int, duration_s: float,
+                   params: ControlParams = DEFAULT_PARAMS
+                   ) -> Dict[str, float]:
+    """Control bytes of the gossip/flooding baselines: per-round
+    full-view push, no failure detector, no delta dissemination."""
+    return {"view_gossip": view_gossip_bytes(n, duration_s, params)}
+
+
+def apply_control(metrics, totals: Dict[str, float],
+                  frame_b: Optional[Dict[str, float]] = None) -> None:
+    """Feed closed-form category totals into a :class:`Metrics` /
+    :class:`ArrayMetrics` instance so ``control_summary()`` reads the
+    same on both engines.  Expected frame counts are derived from the
+    category's dominant frame size (reporting only — bytes are the
+    contract)."""
+    sizes = {"swim": PROBE_B, "member_update": UPDATE_FRAME_B + ACK_B,
+             "anti_entropy": 0.0, "view_gossip": 0.0}
+    if frame_b:
+        sizes.update(frame_b)
+    for kind, nbytes in totals.items():
+        if nbytes <= 0:
+            continue
+        per = sizes.get(kind) or 0.0
+        metrics.add_control(kind, nbytes,
+                            frames=(nbytes / per) if per else 0.0)

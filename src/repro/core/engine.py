@@ -36,6 +36,20 @@ blackholed: :func:`reach_mask` kills them and their whole subtrees, so
 Reliability dips exactly as in the paper's §5.5 — until the trace's
 ``evict`` event re-plans them away.  See DESIGN.md §6.
 
+Control-plane accounting (overhead axis)
+----------------------------------------
+Every vectorized runner accepts ``control=`` (a
+:class:`repro.core.control.ControlParams`): when set, the DESIGN.md §9
+closed-form control model — SWIM probe traffic and anti-entropy merges
+integrated over the trace's epoch spans, member-update dissemination
+per effective membership event (the stale engine prices it from its
+adoption sweeps) — is added to the metrics' ``control_summary()``,
+statistically pinned against the live loop's per-frame classification
+(``tests/test_control_plane.py``).  ``control=None`` (default) accounts
+nothing, preserving the engines' byte-identical differential contracts.
+The declarative sweep layer on top of these runners is
+:mod:`repro.core.experiments`.
+
 The remaining event-loop-only territory: reliable-message retries
 (epoch > 0 rebroadcasts), live SWIM/anti-entropy protocol traffic, and
 non-Snow baselines.
@@ -54,6 +68,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 import numpy as np
 
 from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
+from .control import (ACK_B, UPDATE_FRAME_B, ControlParams, apply_control,
+                      snow_stable_control, snow_trace_control)
 from .ids import NodeId
 from .messages import Data
 from .planner import (PRIMARY, SECONDARY, TreePlan, plan_broadcast,
@@ -496,11 +512,20 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
                           backend: Optional[str] = None,
                           bank: Optional[DelayBank] = None,
                           plans: Optional[Tuple[TreePlan, ...]] = None,
+                          control: Optional[ControlParams] = None,
                           ) -> VectorCluster:
     """The stable scenario (§5.3) in closed form: no nodes, no events —
     plan once, sample the bank, one level-synchronous sweep for all
     messages.  Metrics rows are bit-exact against
-    ``run_stable(..., engine="events")`` on the shared bank."""
+    ``run_stable(..., engine="events")`` on the shared bank.
+
+    ``control`` (a :class:`~repro.core.control.ControlParams`) adds the
+    §9 closed-form control-plane bytes — SWIM + anti-entropy at their
+    steady rates over the run window ``n_messages * rate_s`` — to the
+    metrics' ``control_summary()``.  ``None`` (default) accounts no
+    control traffic, matching the live loop's stable configuration
+    (SWIM and anti-entropy disabled), which keeps the engines'
+    differential tests byte-identical."""
     assert protocol in ("snow", "coloring"), \
         f"closed-form engine models snow/coloring, not {protocol!r}"
     from .messages import fresh_mid
@@ -522,6 +547,9 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
     for i in range(n_messages):
         metrics.record_message(fresh_mid(), i * rate_s, 0, times[i], nbytes,
                                receipts=receipts, frame_bytes=frame)
+    if control is not None:
+        apply_control(metrics,
+                      snow_stable_control(n, n_messages * rate_s, control))
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(n)), protocol=protocol,
                          k=k, plans=plans, bank=bank)
@@ -530,7 +558,9 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
 def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
                  n_messages: int = 2, rate_s: float = 1.0,
                  backend: Optional[str] = None,
-                 plans: Optional[Tuple[TreePlan, ...]] = None) -> List[dict]:
+                 plans: Optional[Tuple[TreePlan, ...]] = None,
+                 payload: int = 64,
+                 control: Optional[ControlParams] = None) -> List[dict]:
     """Multi-seed stable-scenario sweep for the scale benchmarks.
 
     The plan set depends only on ``(members, root, k)`` and is reused
@@ -538,6 +568,14 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
     re-samples its bank and re-runs the sweep.  Summary reduction happens
     on the arrays (no subset filtering — the stable scenario's fixed set
     is the whole cluster).
+
+    Row schema: ``ldt`` (s), ``rmr`` / ``rmr_redundant`` (bytes/node per
+    message — a uniform stable view reaches every non-root node on every
+    tree, so redundancy is exactly one frame per extra tree),
+    ``reliability``, ``wall_s``/``plan_s`` timings, and — when
+    ``control`` is given — the §9 per-category control totals under
+    ``control_B`` plus the run duration ``duration_s`` the rates were
+    integrated over.
     """
     import time
 
@@ -546,8 +584,11 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
         tp = time.time()
         plans = stable_plans(protocol, np.arange(n), 0, k)
         plan_s = time.time() - tp
-    nbytes = plan_bytes(plans, 64)
+    nbytes = plan_bytes(plans, payload)
+    frame = Data(0, 0, None, None, payload).size
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
+    duration = n_messages * rate_s
+    ctl = snow_stable_control(n, duration, control) if control else None
     rows = []
     for seed in seeds:
         tw = time.time()
@@ -556,15 +597,20 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
         rel = times[:, 1:]          # root (index 0) originates, never receives
         ldt = np.nanmax(rel - t0[:, None], axis=1)
         delivered = np.count_nonzero(~np.isnan(rel), axis=1)
-        rows.append({
+        row = {
             "seed": int(seed), "n": n, "k": k,
             "ldt": float(ldt.mean()),
             "rmr": nbytes / (n - 1),
+            "rmr_redundant": float(frame * (len(plans) - 1)),
             "reliability": float(delivered.mean()) / (n - 1),
             "n_messages": n_messages,
             "wall_s": time.time() - tw,
             "plan_s": plan_s,
-        })
+        }
+        if ctl is not None:
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = duration
+        rows.append(row)
     return rows
 
 
@@ -653,7 +699,9 @@ def _epoch_times(ep: _EpochPlan, bank: DelayBank,
 def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                          seed: int = 0, payload: int = 64,
                          backend: Optional[str] = None,
-                         bank: Optional[DelayBank] = None) -> VectorCluster:
+                         bank: Optional[DelayBank] = None,
+                         control: Optional[ControlParams] = None
+                         ) -> VectorCluster:
     """Replay a :class:`ChurnTrace` in closed form: one re-plan and one
     level-synchronous sweep per epoch, all of an epoch's broadcasts
     batched.  Intended sets follow the paper's methodology — the view at
@@ -664,7 +712,12 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
     ``scenarios.run_trace_aligned`` (the oracle-membership event loop)
     on the shared :func:`bank_for_trace`; on mid-flight traces (the
     paper cadences) it is the frozen-view-at-origination model the
-    differential tests pin statistically."""
+    differential tests pin statistically.
+
+    ``control`` adds the §9 closed-form control bytes (SWIM +
+    anti-entropy integrated per epoch span, one member-update
+    announcement per effective trace event) to ``control_summary()``;
+    ``None`` accounts nothing, preserving engine-differential parity."""
     from .messages import fresh_mid
 
     assert protocol in ("snow", "coloring"), \
@@ -683,6 +736,8 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                                    members=ep.members, receipts=ep.receipts,
                                    frame_bytes=ep.frame)
         all_plans.extend(ep.plans)
+    if control is not None:
+        apply_control(metrics, snow_trace_control(trace, params=control))
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(trace.n)),
                          protocol=protocol, k=k, plans=tuple(all_plans),
@@ -808,7 +863,8 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                                seed: int = 0, payload: int = 64,
                                backend: Optional[str] = None,
                                bank: Optional[DelayBank] = None,
-                               epochs: Optional[List[_EpochPlan]] = None
+                               epochs: Optional[List[_EpochPlan]] = None,
+                               control: Optional[ControlParams] = None
                                ) -> VectorCluster:
     """Replay a :class:`ChurnTrace` with **divergent views** in closed
     form — the model behind the paper's §5.4 redundancy claim.
@@ -833,6 +889,14 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
     ``epochs`` accepts precompiled :func:`compile_trace` output — the
     plans depend only on the trace, so multi-seed sweeps pay for
     whole-tree planning once (mirrors ``trace_sweep``).
+
+    ``control`` adds §9 control bytes to ``control_summary()``.  Unlike
+    the oracle engine's expected-value formula, the member-update
+    category here is derived from the adoption sweeps this engine
+    already runs: each boundary's announcement costs one update frame
+    plus one ACK per node its sweep actually reached (times the number
+    of effective events at that boundary) — the seed's sampled delays
+    decide the reach, not a closed-form mean.
     """
     from .messages import fresh_mid
 
@@ -870,6 +934,7 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                                    frame_bytes=sub.frame)
 
     all_plans: List[TreePlan] = []
+    mu_bytes = 0.0        # member-update dissemination, from the sweeps
     for i, ep in enumerate(eplans):
         all_plans.extend(ep.plans)
         origin = _update_origin(trans.get(ep.first, ())) if i > 0 else None
@@ -892,6 +957,10 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
             bank.link[arows, update_col, 0], t0=t_e, backend=backend)
         adopt_rows = np.full(n_bank, t_e)
         adopt_rows[arows] = a_t
+        if control is not None:
+            reached = int(np.count_nonzero(~np.isnan(a_t))) - 1
+            n_evs = sum(1 for ev in trans[ep.first] if ev.kind != "crash")
+            mu_bytes += n_evs * max(0, reached) * (UPDATE_FRAME_B + ACK_B)
         for ev in trans[ep.first]:
             if ev.kind == "leave":
                 # a leaver never adopts its own removal: it lingers,
@@ -940,6 +1009,10 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
             j += 1
         record_pure(ep, j)
         update_col += 1
+    if control is not None:
+        rates = snow_trace_control(trace, params=control)
+        rates["member_update"] = mu_bytes      # swept, not expected-value
+        apply_control(metrics, rates)
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(trace.n)),
                          protocol=protocol, k=k, plans=tuple(all_plans),
@@ -964,13 +1037,18 @@ def run_churn_stale_vectorized(protocol: str, n: int = 500, k: int = 4,
 def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 seeds: Sequence[int], backend: Optional[str] = None,
                 payload: int = 64,
-                epochs: Optional[List[_EpochPlan]] = None) -> List[dict]:
+                epochs: Optional[List[_EpochPlan]] = None,
+                control: Optional[ControlParams] = None) -> List[dict]:
     """Multi-seed churn/breakdown sweep for the scale benchmarks.
 
     Epoch plans depend only on the trace and are compiled once; each
     seed re-samples its bank and re-sweeps.  Metrics reduce over the
     paper's fixed subset directly on the arrays, using the generator
     invariant that fixed ids are ``< trace.n`` and transients are not.
+
+    ``control`` attaches the §9 closed-form per-category control totals
+    (seed-independent expected values over the trace) to every row
+    under ``control_B``, with the integration window in ``duration_s``.
     """
     import time
 
@@ -981,6 +1059,9 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         tp = time.time()
         epochs = compile_trace(protocol, trace, k, bank_members, payload)
         plan_s = time.time() - tp
+    ctl = snow_trace_control(trace, params=control) if control else None
+    spans = trace.epoch_spans()
+    trace_duration = float(spans[-1][1] - spans[0][0]) if spans else 0.0
     fixed_sel = [(ep.members < trace.n) & (ep.members != trace.src)
                  for ep in epochs]
     rows = []
@@ -1011,7 +1092,7 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         ldt_all = np.concatenate(ldts)
         rel_all = np.concatenate(rels)
         red_all = np.concatenate(reds)
-        rows.append({
+        row = {
             "seed": int(seed), "n": trace.n, "k": k,
             "ldt": float(np.nanmean(ldt_all)),
             "rmr": float(np.mean(rmrs)),
@@ -1021,5 +1102,9 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
             "n_epochs": len(epochs),
             "wall_s": time.time() - tw,
             "plan_s": plan_s,
-        })
+        }
+        if ctl is not None:
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = trace_duration
+        rows.append(row)
     return rows

@@ -24,6 +24,15 @@ full protocol fidelity on demand (``engine="events"``).
 ``run_trace_aligned`` is the oracle-membership event loop used by the
 differential tests: on boundary-aligned traces it matches the
 vectorized engine bit for bit.
+
+Since PR 5 every runner accepts ``control=`` (a
+:class:`~repro.core.control.ControlParams`): the vectorized routes add
+the DESIGN.md §9 closed-form control-plane bytes to
+``Metrics.control_summary()``, the events routes switch the live SWIM
+loop on (anti-entropy where the scenario already runs it) and account
+actual frames.  Grid sweeps over these runners live in
+:mod:`repro.core.experiments`; ``benchmarks/paper_repro.py`` drives
+them to regenerate the paper's tables.
 """
 from __future__ import annotations
 
@@ -149,16 +158,26 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
                n_messages: int = 100, rate_s: float = 1.0,
                seed: int = 0, payload: int = 64,
                share_view: bool = False, engine: str = "auto",
-               backend: Optional[str] = None) -> Cluster:
+               backend: Optional[str] = None, control=None) -> Cluster:
     """§5.3 stable scenario.
 
-    ``engine``: ``"vectorized"`` evaluates delivery times in closed form
-    (snow/coloring only — the stable path is a pure function of the plan
-    plus sampled delays); ``"events"`` runs the discrete-event loop;
-    ``"auto"`` (default) picks vectorized where it is sound.  Both
-    engines consume one shared :class:`~repro.core.engine.DelayBank`, so
-    for a given ``(protocol, n, k, n_messages, seed)`` they produce
-    identical metrics — exactly, not statistically.
+    Engine routing: ``"vectorized"`` evaluates delivery times in closed
+    form (snow/coloring only — the stable path is a pure function of
+    the plan plus sampled delays); ``"events"`` runs the discrete-event
+    loop; ``"auto"`` (default) picks vectorized for snow/coloring and
+    events for the gossip/plumtree/flooding baselines.  Both engines
+    consume one shared :class:`~repro.core.engine.DelayBank`, so for a
+    given ``(protocol, n, k, n_messages, seed)`` they produce identical
+    metrics — exactly, not statistically.
+
+    Metrics populated: per-message LDT/RMR/Reliability with the
+    payload/redundant split (``Metrics.per_message``), plus — when
+    ``control`` (a :class:`~repro.core.control.ControlParams`) is given
+    — control-plane bytes in ``control_summary()``: the vectorized
+    route applies the §9 closed forms over the ``n_messages * rate_s``
+    window; the events route (snow/coloring) switches the live SWIM +
+    anti-entropy loops on and accounts their actual frames, which is
+    what ``tests/test_control_plane.py`` pins the closed forms against.
     """
     closed_form = protocol in ("snow", "coloring")
     if engine == "auto":
@@ -167,14 +186,17 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
         from .engine import run_stable_vectorized
 
         return run_stable_vectorized(protocol, n, k, n_messages, rate_s,
-                                     seed, payload, backend=backend)
+                                     seed, payload, backend=backend,
+                                     control=control)
     bank = None
     if closed_form:
         from .engine import bank_for_stable
 
         bank = bank_for_stable(seed, n, protocol, n_messages)
+    live_control = control is not None and closed_form
     c = build_cluster(protocol, n, k, seed, share_view=share_view,
-                      delay_bank=bank)
+                      delay_bank=bank, enable_swim=live_control,
+                      enable_anti_entropy=live_control)
     src = 0
     for i in range(n_messages):
         c.sim.at(i * rate_s, lambda: c.broadcast_from(src, payload))
@@ -188,7 +210,7 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
               churn_every: int = 10, engine: str = "auto",
               backend: Optional[str] = None,
               trace: Optional[ChurnTrace] = None,
-              view_model: str = "oracle") -> Cluster:
+              view_model: str = "oracle", control=None) -> Cluster:
     """§5.4: while messages flow, one fresh node joins every
     ``churn_every`` messages and gracefully leaves ``churn_every``
     messages later.  Metrics are evaluated over the fixed n nodes only.
@@ -208,7 +230,14 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
     staleness window, producing the duplicate deliveries and redundant
     bytes the paper's §5.4 comparison is about.  The event loop is
     inherently stale (live MemberUpdate broadcasts, per-node lagged
-    views), so ``view_model`` does not change ``engine="events"``."""
+    views), so ``view_model`` does not change ``engine="events"``.
+
+    ``control`` adds control-plane accounting (DESIGN.md §9): the
+    vectorized routes apply the closed forms (the stale route derives
+    member-update bytes from its adoption sweeps); the events route
+    already broadcasts live MemberUpdates and runs anti-entropy, so its
+    ``control_summary()`` is populated regardless — ``control`` there
+    additionally switches live SWIM on for snow/coloring."""
     assert view_model in ("oracle", "stale"), view_model
     if trace is None:
         trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
@@ -220,11 +249,14 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
 
         if view_model == "stale":
             return run_trace_stale_vectorized(protocol, trace, k, seed,
-                                              payload, backend)
+                                              payload, backend,
+                                              control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend)
+                                    backend, control=control)
     c = build_cluster(protocol, n, k, seed,
-                      enable_anti_entropy=(protocol in ("snow", "coloring")))
+                      enable_anti_entropy=(protocol in ("snow", "coloring")),
+                      enable_swim=(control is not None
+                                   and protocol in ("snow", "coloring")))
     rng = random.Random(seed ^ 0xC0FFEE)
 
     def protocol_join(nid: int) -> None:
@@ -275,7 +307,7 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
                   crash_every: int = 10, reliable: bool = False,
                   engine: str = "auto", backend: Optional[str] = None,
                   trace: Optional[ChurnTrace] = None,
-                  view_model: str = "oracle") -> Cluster:
+                  view_model: str = "oracle", control=None) -> Cluster:
     """§5.5: every ``crash_every`` messages a random fixed node silently
     crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
     evicted within seconds; other nodes' views keep the dead node, which
@@ -288,7 +320,9 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
     runs and baselines keep the event loop, which ignores the trace
     evicts and lets live SWIM do the detecting.  ``view_model="stale"``
     additionally models EVICT propagation lag on the vectorized route
-    (see :func:`run_churn`)."""
+    (see :func:`run_churn`).  ``control`` adds §9 control accounting to
+    the vectorized routes (the events route runs live SWIM here by
+    construction, so its control frames are always classified)."""
     assert view_model in ("oracle", "stale"), view_model
     if trace is None:
         trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
@@ -301,9 +335,10 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
 
         if view_model == "stale":
             return run_trace_stale_vectorized(protocol, trace, k, seed,
-                                              payload, backend)
+                                              payload, backend,
+                                              control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend)
+                                    backend, control=control)
     c = build_cluster(protocol, n, k, seed,
                       enable_swim=(protocol in ("snow", "coloring")))
 

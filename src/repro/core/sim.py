@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .ids import NodeId
+from .messages import Ack, Data, Graft, IHave, Probe, Prune, SyncReq
 
 
 class Sim:
@@ -110,7 +111,29 @@ class Metrics:
     population; dividing whole-cluster bytes by the subset size would
     inflate RMR by ``n / |subset|``).  ``subset=None`` meters the whole
     cluster: bytes are the global per-message totals.
+
+    **Control plane (DESIGN.md §9).**  Every non-DATA frame the network
+    carries is accounted per category at *send* time (transmit
+    accounting — a probe into a blackholed node still costs its bytes):
+
+    * ``swim``          — SWIM PING / PING-REQ / PROBE-ACK frames,
+    * ``member_update`` — JOIN/LEAVE/EVICT announcements (the DATA
+      frames carrying a :class:`~repro.core.messages.MemberUpdate`) and
+      the Reliable-Message ACKs of those broadcasts,
+    * ``anti_entropy``  — periodic full-view SyncReq merges,
+    * ``plumtree``      — IHAVE / GRAFT / PRUNE tree-repair frames,
+    * ``ack``           — Reliable-Message ACKs of application
+      broadcasts.
+
+    The closed-form engines populate the same counters from the §9
+    expected-traffic formulas (:mod:`repro.core.control`), so
+    ``control_summary()`` compares across engines and against the live
+    loop (statistically pinned in ``tests/test_control_plane.py``).
     """
+
+    #: control-traffic categories, in reporting order
+    CONTROL_KINDS = ("swim", "member_update", "anti_entropy", "plumtree",
+                     "ack", "view_gossip")
 
     def __init__(self) -> None:
         self.start: Dict[int, float] = {}
@@ -123,6 +146,51 @@ class Metrics:
         self.node_red_bytes: Dict[int, Dict[NodeId, int]] = {}
         #: mid -> {node: duplicate receipt count}
         self.node_dups: Dict[int, Dict[NodeId, int]] = {}
+        #: control-plane traffic per category: kind -> bytes transmitted
+        self.control_bytes: Dict[str, float] = {}
+        #: kind -> frame count (float: closed-form expected counts)
+        self.control_frames: Dict[str, float] = {}
+        #: mids of member-update (control) broadcasts — classifies their
+        #: Reliable-Message ACKs, which carry no update themselves
+        self.control_mids: Set[int] = set()
+
+    # -- control plane -------------------------------------------------------
+    def note_control_mid(self, mid: int) -> None:
+        """Mark ``mid`` as a member-update broadcast so its ACK frames
+        are attributed to ``member_update`` rather than ``ack``."""
+        self.control_mids.add(mid)
+
+    def control_kind(self, msg) -> Optional[str]:
+        """Control category of a wire frame; None for data-plane DATA."""
+        if isinstance(msg, Probe):
+            return "swim"
+        if isinstance(msg, SyncReq):
+            return "anti_entropy"
+        if isinstance(msg, (IHave, Graft, Prune)):
+            return "plumtree"
+        if isinstance(msg, Ack):
+            return "member_update" if msg.mid in self.control_mids else "ack"
+        if isinstance(msg, Data) and msg.update is not None:
+            return "member_update"
+        return None
+
+    def add_control(self, kind: str, nbytes: float,
+                    frames: float = 1.0) -> None:
+        """Record ``nbytes`` of control traffic in category ``kind``.
+        ``frames`` may be fractional on the closed-form path (expected
+        counts)."""
+        self.control_bytes[kind] = self.control_bytes.get(kind, 0) + nbytes
+        self.control_frames[kind] = self.control_frames.get(kind, 0) + frames
+
+    def control_summary(self) -> dict:
+        """Per-category control bytes plus the ``control_B`` total —
+        whole-run transmit totals, NOT per-node rates (the experiment
+        layer normalizes by population and duration)."""
+        out = {f"{k}_B": float(self.control_bytes.get(k, 0))
+               for k in self.CONTROL_KINDS}
+        out["control_B"] = float(sum(self.control_bytes.values()))
+        out["control_frames"] = float(sum(self.control_frames.values()))
+        return out
 
     def begin(self, mid: int, t0: float, intended: Sequence[NodeId]) -> None:
         self.start[mid] = t0
@@ -270,6 +338,9 @@ class Network:
             return
         self.sends += 1
         self.bytes_total += msg.size
+        kind = self.metrics.control_kind(msg)
+        if kind is not None:
+            self.metrics.add_control(kind, msg.size)
         delay = None
         if self.delay_bank is not None:
             delay = self.delay_bank.link_for(dst, msg)

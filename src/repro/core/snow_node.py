@@ -101,6 +101,10 @@ class SnowNode(NodeBase):
         mid = fresh_mid()
         self.delivered.add(mid)
         if update is not None:
+            # a member-update broadcast is control-plane traffic: mark
+            # the mid before the first send so every DATA frame and ACK
+            # of this broadcast lands in the member_update category
+            self.metrics.note_control_mid(mid)
             self._apply_update(update)
         if coloring:
             self._forward(Data(mid, self.id, None, None, payload, reliable,

@@ -1,0 +1,138 @@
+"""The declarative sweep runner: grid canonicalization, engine routing,
+and the resumability/determinism contract (same grid + seeds → the
+identical JSON document, byte for byte)."""
+import json
+
+import pytest
+
+from repro.core.experiments import (Cell, ExperimentRunner, ExperimentSpec,
+                                    run_cell)
+
+SPEC = ExperimentSpec(
+    name="grid", protocols=("snow", "gossip"), scenes=("stable", "churn"),
+    ns=(120,), ks=(4,), seeds=(3, 4), n_messages=8,
+    view_models=("oracle", "stale"))
+
+
+def _read(runner, spec):
+    return runner.path(spec).read_bytes()
+
+
+def test_grid_canonicalization():
+    cells = SPEC.cells()
+    keys = [c.key() for c in cells]
+    assert len(keys) == len(set(keys))
+    # stable cells carry no stale axis; baselines have no stale engine
+    assert all(c.view_model == "oracle" for c in cells
+               if c.scene == "stable" or c.protocol == "gossip")
+    # the snow churn cell exists under BOTH view models
+    vm = {c.view_model for c in cells
+          if c.protocol == "snow" and c.scene == "churn"}
+    assert vm == {"oracle", "stale"}
+
+
+def test_determinism_across_fresh_runs(tmp_path):
+    a = ExperimentRunner(tmp_path / "a").run(SPEC)
+    b = ExperimentRunner(tmp_path / "b").run(SPEC)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert _read(ExperimentRunner(tmp_path / "a"), SPEC) == \
+        _read(ExperimentRunner(tmp_path / "b"), SPEC)
+
+
+def test_rerun_is_noop_and_resume_matches_oneshot(tmp_path):
+    one = ExperimentRunner(tmp_path / "one")
+    full = one.run(SPEC)
+    assert one.run(SPEC) == full              # complete file: no-op
+
+    two = ExperimentRunner(tmp_path / "two")
+    partial = two.run(SPEC, max_cells=2)      # interrupted sweep
+    assert len(partial["rows"]) == 2
+    resumed = two.run(SPEC)                   # picks up the rest
+    assert _read(two, SPEC) == _read(one, SPEC)
+    assert json.dumps(resumed, sort_keys=True) == \
+        json.dumps(full, sort_keys=True)
+
+
+def test_changed_spec_under_same_name_raises(tmp_path):
+    runner = ExperimentRunner(tmp_path)
+    runner.run(SPEC, max_cells=1)
+    changed = ExperimentSpec(name="grid", protocols=("snow",),
+                             ns=(120,), seeds=(9,), n_messages=8)
+    with pytest.raises(ValueError, match="different spec"):
+        runner.run(changed)
+
+
+def test_events_only_protocol_beyond_cap_is_skipped():
+    spec = ExperimentSpec(name="cap", protocols=("plumtree",),
+                          scenes=("stable",), ns=(5000,), seeds=(0,),
+                          n_messages=2, events_max_n=1000)
+    row = run_cell(spec, spec.cells()[0])
+    assert "skipped" in row and "events_max_n" in row["skipped"]
+
+
+def test_gossip_routes_closed_form_beyond_cap():
+    spec = ExperimentSpec(name="gsp", protocols=("gossip",),
+                          scenes=("stable",), ns=(5000,), seeds=(0,),
+                          n_messages=2, events_max_n=1000)
+    row = run_cell(spec, spec.cells()[0])
+    assert row["engine_used"] == "gossip-closed-form"
+    assert row["redundant_B"] > 50.0
+
+
+def test_route_decision_table():
+    from repro.core.experiments import route
+
+    spec = ExperimentSpec(name="r", events_max_n=1000)
+
+    def cell(**kw):
+        d = dict(protocol="snow", scene="stable", n=500, k=4,
+                 payload=64, view_model="oracle", engine="auto")
+        d.update(kw)
+        return Cell(**d)
+
+    assert route(spec, cell()) == "closed-form"
+    assert route(spec, cell(engine="events")) == "events"
+    assert route(spec, cell(protocol="gossip")) == "events"
+    assert route(spec, cell(protocol="gossip", n=5000)) \
+        == "gossip-closed-form"
+    assert route(spec, cell(protocol="gossip",
+                            engine="vectorized")) == "gossip-closed-form"
+    # a vectorized request no engine can serve is an explicit skip,
+    # not a silent events fallback
+    assert route(spec, cell(protocol="plumtree",
+                            engine="vectorized")).startswith("skipped:")
+    assert route(spec, cell(protocol="gossip", scene="churn",
+                            engine="vectorized")).startswith("skipped:")
+    assert route(spec, cell(protocol="plumtree", n=5000)) \
+        .startswith("skipped:")
+
+
+def test_overhead_fields_and_snow_below_gossip(tmp_path):
+    doc = ExperimentRunner(tmp_path).run(SPEC)
+    rows = doc["rows"]
+    snow = rows["snow/stable/n120/k4/p64/oracle/auto"]
+    gossip = rows["gossip/stable/n120/k4/p64/oracle/auto"]
+    for r in (snow, gossip):
+        for key in ("control_B", "control_Bps_node", "data_Bps_node",
+                    "total_Bps_node", "data_window_s",
+                    "control_window_s", "ldt_ms", "rmr_B",
+                    "redundant_B", "reliability"):
+            assert key in r, key
+    # events cells normalize control over the loop's real horizon
+    # (msg span + 15 s drain); closed-form cells over the span itself
+    assert gossip["engine_used"] == "events"
+    assert gossip["control_window_s"] == pytest.approx(8.0 + 15.0)
+    assert snow["control_window_s"] == pytest.approx(8.0)
+    # the §5 trade-off triangle: tree payload + tiny control vs
+    # duplicate-heavy data + per-round view push
+    assert snow["redundant_B"] == 0.0
+    assert gossip["redundant_B"] > 50.0
+    assert snow["control_Bps_node"] < 0.5 * gossip["control_Bps_node"]
+    assert snow["total_Bps_node"] < gossip["total_Bps_node"]
+    # snow churn rows exist for both membership models and stay reliable
+    assert rows["snow/churn/n120/k4/p64/stale/auto"]["reliability"] == 1.0
+
+
+def test_cell_key_shape():
+    c = Cell("snow", "churn", 500, 4, 64, "stale", "auto")
+    assert c.key() == "snow/churn/n500/k4/p64/stale/auto"
