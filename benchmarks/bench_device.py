@@ -1,0 +1,121 @@
+"""Device-resident sweep engine section (``device_scale``).
+
+Smoke mode (CI, ``run.py --smoke`` / ``--check``) pins the device path
+against the host numpy oracle at a small n and re-validates the
+*committed* ``results/scale_n.json`` device trajectory:
+
+* ``device_vs_host_ldt_drift`` — relative drift of the device engine's
+  mean LDT vs the host ``DelayBank`` rows over a shared seed batch
+  (banded by ``run.py --check``: the device path can't silently
+  diverge);
+* ``device_reliability`` — rides the generic reliability floor band;
+* ``device_committed_ok`` — 1.0 iff the committed ``device_scale``
+  section shows the device engine ≥ the host jax path at n = 1M AND a
+  completed ≥5-seed n = 10M row (the tentpole acceptance gates, checked
+  on every CI run without re-running the bench).
+
+Full mode runs :func:`bench_scale_n.run_device_scale` (n up to 10M) and
+merges the rows into ``results/scale_n.json`` under ``device_scale``,
+so a standalone ``--only device_scale`` refresh doesn't clobber the
+other committed sections.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+try:
+    import _bootstrap  # noqa: F401  (direct execution)
+except ImportError:
+    from benchmarks import _bootstrap  # noqa: F401  (package import)
+
+try:
+    import bench_scale_n
+except ImportError:
+    from benchmarks import bench_scale_n
+
+from repro.core.engine import stable_plans, stable_sweep
+
+RESULTS = bench_scale_n.RESULTS
+
+#: metrics of the last smoke invocation, read by ``run.py --check``
+LAST_SMOKE = {}
+
+
+def run_drift(n: int = 2000, k: int = 4, n_seeds: int = 8,
+              n_messages: int = 2) -> dict:
+    """Mean-LDT drift of the device engine vs the host numpy oracle on a
+    shared seed batch — the statistical pin, bench-sized (the full
+    n ∈ {500, 5000, 50k} pins live in tests/test_device_sweep.py)."""
+    plans = stable_plans("snow", np.arange(n), 0, k)
+    seeds = range(n_seeds)
+    t0 = time.time()
+    host = stable_sweep("snow", n, k, seeds, n_messages=n_messages,
+                        plans=plans, backend="numpy")
+    host_s = time.time() - t0
+    t0 = time.time()
+    dev = stable_sweep("snow", n, k, seeds, n_messages=n_messages,
+                       plans=plans, engine="device")
+    dev_s = time.time() - t0
+    h = float(np.mean([r["ldt"] for r in host]))
+    d = float(np.mean([r["ldt"] for r in dev]))
+    return {
+        "n": n, "seeds": n_seeds,
+        "host_ldt_ms": h * 1000, "device_ldt_ms": d * 1000,
+        "ldt_drift": abs(d - h) / h,
+        "device_reliability": min(r["reliability"] for r in dev),
+        "host_s": host_s, "device_s": dev_s,
+    }
+
+
+def committed_gates() -> dict:
+    """Re-derive the tentpole acceptance gates from the committed
+    ``scale_n.json`` — no re-run, just the recorded trajectory."""
+    gates = {"speedup_1m": 0.0, "rows_10m": 0}
+    if not RESULTS.exists():
+        return gates
+    sec = json.loads(RESULTS.read_text()).get("device_scale") or []
+    for r in sec:
+        if r.get("n") == 1_000_000 and "speedup" in r:
+            gates["speedup_1m"] = float(r["speedup"])
+        if (r.get("n") == 10_000_000 and r.get("seeds", 0) >= 5
+                and r.get("device_dispatches") == 1):
+            gates["rows_10m"] += 1
+    return gates
+
+
+def main(smoke: bool = False):
+    global LAST_SMOKE
+    if smoke:
+        row = run_drift()
+        gates = committed_gates()
+        ok = 1.0 if (gates["speedup_1m"] >= 1.0
+                     and gates["rows_10m"] >= 1) else 0.0
+        LAST_SMOKE = {
+            "device_vs_host_ldt_drift": row["ldt_drift"],
+            "device_reliability": row["device_reliability"],
+            "device_committed_ok": ok,
+        }
+        return [
+            (f"device vs host oracle @ n={row['n']}, "
+             f"{row['seeds']} seeds: host {row['host_ldt_ms']:.0f} ms, "
+             f"device {row['device_ldt_ms']:.0f} ms "
+             f"(drift {row['ldt_drift']:.1%}), "
+             f"reliability {row['device_reliability']:.4f}"),
+            (f"wall: host numpy {row['host_s']:.2f}s, device "
+             f"{row['device_s']:.2f}s (incl. compile on first call)"),
+            (f"committed gates: speedup@1M {gates['speedup_1m']:.2f}x, "
+             f"10M rows {gates['rows_10m']} -> "
+             f"{'ok' if ok else 'MISSING'}"),
+        ]
+    rows = bench_scale_n.run_device_scale()
+    doc = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    doc["device_scale"] = rows
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(doc, indent=2) + "\n")
+    out = ["-- device-resident fused sweep: one dispatch, no bank --"]
+    out += bench_scale_n._fmt_device(rows)
+    out.append(f"(json: {RESULTS}, section device_scale)")
+    return out

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import json
 import time
+import tracemalloc
 from pathlib import Path
 
 import numpy as np
@@ -57,6 +58,31 @@ RESULTS = Path(__file__).parent / "results" / "scale_n.json"
 
 #: metrics of the last smoke invocation, read by ``run.py --check``
 LAST_SMOKE = {}
+
+
+def _tracked(fn, *args, **kwargs):
+    """Run ``fn`` under tracemalloc; returns ``(result, peak_mb)``.
+
+    Tracks Python-allocator peaks — numpy buffers (the DelayBank, the
+    sweep planes) register with tracemalloc; jax's CPU device buffers
+    live outside the Python allocator, so device-path peaks understate
+    true RSS and are best read as "host-side bytes the path still
+    materializes" (see benchmarks/README.md)."""
+    tracemalloc.start()
+    try:
+        out = fn(*args, **kwargs)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return out, peak / 1e6
+
+
+def _rss_mb() -> float:
+    """Process peak RSS (MB) — Linux ru_maxrss is in KB; a monotonic
+    high-water mark, so per-row values reflect the largest row so far."""
+    import resource
+
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e3
 
 
 def run(ns=(100, 300, 500, 900, 1200, 1500), k: int = 4,
@@ -154,8 +180,9 @@ def run_churn_huge(ns=(50_000, 500_000, 1_000_000), k: int = 4,
             epochs = compile_trace("snow", trace, k, trace.all_ids())
             plan_s = time.time() - tp
             t0 = time.time()
-            seed_rows = trace_sweep("snow", trace, k, seeds=range(n_seeds),
-                                    backend="numpy", epochs=epochs)
+            seed_rows, peak_mb = _tracked(
+                trace_sweep, "snow", trace, k, seeds=range(n_seeds),
+                backend="numpy", epochs=epochs)
             wall = time.time() - t0
             ldts = np.array([r["ldt"] for r in seed_rows])
             rows.append({
@@ -167,7 +194,7 @@ def run_churn_huge(ns=(50_000, 500_000, 1_000_000), k: int = 4,
                 "rmr_B": float(np.mean([r["rmr"] for r in seed_rows])),
                 "reliability": min(r["reliability"] for r in seed_rows),
                 "wall_s": wall, "per_seed_s": wall / n_seeds,
-                "plan_s": plan_s,
+                "plan_s": plan_s, "peak_mb": peak_mb, "rss_mb": _rss_mb(),
                 "per_seed": seed_rows,
             })
     return rows
@@ -184,8 +211,9 @@ def run_huge(ns=(100_000, 500_000, 1_000_000), k: int = 4, n_seeds: int = 20,
         plans = stable_plans("snow", np.arange(n), 0, k)
         plan_s = time.time() - tp
         t0 = time.time()
-        seed_rows = stable_sweep("snow", n, k, seeds=range(n_seeds),
-                                 n_messages=n_messages, plans=plans)
+        seed_rows, peak_mb = _tracked(
+            stable_sweep, "snow", n, k, seeds=range(n_seeds),
+            n_messages=n_messages, plans=plans)
         wall = time.time() - t0
         ldts = np.array([r["ldt"] for r in seed_rows])
         # jax.jit backend: one warm-up compile, then one timed sweep
@@ -206,8 +234,79 @@ def run_huge(ns=(100_000, 500_000, 1_000_000), k: int = 4, n_seeds: int = 20,
             "eq8_bound": expected_height(n, k),
             "wall_s": wall, "per_seed_s": wall / n_seeds,
             "plan_s": plan_s, "jax_sweep_s": jax_s,
+            "peak_mb": peak_mb, "rss_mb": _rss_mb(),
             "per_seed": seed_rows,
         })
+    return rows
+
+
+def run_device_scale(ns=(50_000, 500_000, 1_000_000, 10_000_000),
+                     k: int = 4, n_seeds: int = 5, n_messages: int = 2,
+                     host_max_n: int = 1_000_000):
+    """Device-resident fused sweep vs the host-orchestrated jax path.
+
+    The device engine (``engine="device"``) never materializes a
+    DelayBank — delays regenerate on device from counter-based RNG —
+    and runs all seeds × messages × trees in one ``vmap``-ed dispatch,
+    which is what makes the n = 10M row possible at all (the host path
+    would sample ``n_seeds`` float64 banks and sweep them one Python
+    iteration at a time).  Each n is timed twice: ``wall_cold_s``
+    includes the one-time jit compile, ``wall_device_s`` is the warm
+    dispatch; the speedup column compares against the host jax path
+    (per-seed bank sampling + jitted sweep, ``backend="jax"``), which
+    is only run up to ``host_max_n``.  ``bank_mb_avoided`` is the
+    float64 bank footprint the host path materializes per seed.
+    """
+    rows = []
+    for n in ns:
+        tp = time.time()
+        plans = stable_plans("snow", np.arange(n), 0, k)
+        plan_s = time.time() - tp
+        seeds = range(n_seeds)
+        t0 = time.time()
+        stable_sweep("snow", n, k, seeds=seeds, n_messages=n_messages,
+                     plans=plans, engine="device")
+        wall_cold = time.time() - t0
+        t0 = time.time()
+        seed_rows, peak_mb = _tracked(
+            stable_sweep, "snow", n, k, seeds=seeds,
+            n_messages=n_messages, plans=plans, engine="device")
+        wall_dev = time.time() - t0
+        row = {
+            "n": n, "k": k, "seeds": n_seeds, "n_messages": n_messages,
+            "ldt_ms_mean": float(np.mean([r["ldt"] for r in seed_rows])
+                                 * 1000),
+            "ldt_ms_ci95": float(
+                1.96 * np.std([r["ldt"] for r in seed_rows], ddof=1)
+                * 1000 / np.sqrt(n_seeds)),
+            "reliability": min(r["reliability"] for r in seed_rows),
+            "height": int(np.asarray(plans[0].depth).max()),
+            "device_dispatches": 1,
+            "wall_cold_s": wall_cold, "wall_device_s": wall_dev,
+            "plan_s": plan_s, "peak_device_mb": peak_mb,
+            "rss_mb": _rss_mb(),
+            # per-seed (n, M, S) float64 fwd+link planes the host path
+            # materializes and the device path never allocates
+            "bank_mb_avoided": n * n_messages * 1 * 8 * 2 / 1e6,
+        }
+        if n <= host_max_n:
+            # host jax path: warm the per-shape jit cache off the clock,
+            # then time the full per-seed bank-sample + sweep loop
+            stable_sweep("snow", n, k, seeds=[0], n_messages=n_messages,
+                         plans=plans, backend="jax")
+            t0 = time.time()
+            host_rows, host_peak = _tracked(
+                stable_sweep, "snow", n, k, seeds=seeds,
+                n_messages=n_messages, plans=plans, backend="jax")
+            row["wall_host_jax_s"] = time.time() - t0
+            row["peak_host_mb"] = host_peak
+            row["speedup"] = row["wall_host_jax_s"] / max(wall_dev, 1e-9)
+            row["ldt_drift"] = abs(
+                row["ldt_ms_mean"]
+                - float(np.mean([r["ldt"] for r in host_rows]) * 1000)
+            ) / max(float(np.mean([r["ldt"] for r in host_rows]) * 1000),
+                    1e-9)
+        rows.append(row)
     return rows
 
 
@@ -302,12 +401,32 @@ def _fmt_large(rows):
 def _fmt_huge(rows):
     out = [(f"{'n':>8s} {'seeds':>5s} {'ldt_ms':>7s} {'±ci95':>6s} "
             f"{'rmr_B':>6s} {'rel':>5s} {'wall_s':>7s} {'s/seed':>7s} "
-            f"{'jax_s':>7s}")]
+            f"{'jax_s':>7s} {'peak_mb':>8s}")]
     for r in rows:
         out.append(f"{r['n']:8d} {r['seeds']:5d} {r['ldt_ms_mean']:7.0f} "
                    f"{r['ldt_ms_ci95']:6.1f} {r['rmr_B']:6.1f} "
                    f"{r['reliability']:5.3f} {r['wall_s']:7.2f} "
-                   f"{r['per_seed_s']:7.3f} {r['jax_sweep_s']:7.3f}")
+                   f"{r['per_seed_s']:7.3f} {r['jax_sweep_s']:7.3f} "
+                   f"{r.get('peak_mb', 0.0):8.1f}")
+    return out
+
+
+def _fmt_device(rows):
+    out = [(f"{'n':>8s} {'seeds':>5s} {'ldt_ms':>7s} {'±ci95':>6s} "
+            f"{'rel':>5s} {'dev_s':>7s} {'cold_s':>7s} {'host_s':>8s} "
+            f"{'speedup':>7s} {'drift':>6s} {'bank_mb':>8s}")]
+    for r in rows:
+        host = (f"{r['wall_host_jax_s']:8.2f}" if "wall_host_jax_s" in r
+                else f"{'—':>8s}")
+        speed = (f"{r['speedup']:6.1f}x" if "speedup" in r
+                 else f"{'—':>7s}")
+        drift = (f"{r['ldt_drift']:6.1%}" if "ldt_drift" in r
+                 else f"{'—':>6s}")
+        out.append(f"{r['n']:8d} {r['seeds']:5d} {r['ldt_ms_mean']:7.0f} "
+                   f"{r['ldt_ms_ci95']:6.1f} {r['reliability']:5.3f} "
+                   f"{r['wall_device_s']:7.2f} {r['wall_cold_s']:7.2f} "
+                   f"{host} {speed} {drift} "
+                   f"{r['bank_mb_avoided']:8.1f}")
     return out
 
 
@@ -398,6 +517,7 @@ def main(smoke: bool = False):
         churn_huge = run_churn_huge()
         redundancy = run_redundancy()
         stale = run_stale_huge()
+        device = run_device_scale()
     out = _fmt(fig)
     out.append("")
     out.append("-- large-scale: events vs closed-form engine (shared bank) --")
@@ -418,13 +538,17 @@ def main(smoke: bool = False):
     out.append("-- stale-view churn: divergent views, adoption + mixed plans --")
     out += _fmt_stale(stale)
     if not smoke:  # smoke runs must not clobber the tracked trajectory
+        out.append("")
+        out.append("-- device-resident fused sweep: one dispatch, no bank --")
+        out += _fmt_device(device)
         RESULTS.parent.mkdir(parents=True, exist_ok=True)
         RESULTS.write_text(json.dumps(
             {"figure_6a": fig, "large_scale": large,
              "churn_large_scale": churn_large, "huge_scale": huge,
              "churn_huge_scale": churn_huge,
              "redundancy_scale": redundancy,
-             "stale_churn_scale": stale},
+             "stale_churn_scale": stale,
+             "device_scale": device},
             indent=2) + "\n")
         out.append(f"(json: {RESULTS})")
     return out

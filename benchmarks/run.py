@@ -23,6 +23,7 @@ except ImportError:
 SECTION_MODULES = {
     "protocols_table2": "bench_protocols",
     "scale_n_fig6a": "bench_scale_n",
+    "device_scale": "bench_device",
     "fanout_k_fig6b": "bench_fanout_k",
     "paper_repro": "paper_repro",
     "children_micro": "bench_children_micro",
@@ -54,6 +55,11 @@ MIN_GOSSIP_REDUNDANT_B = 50.0
 # delta member-updates + 15 s anti-entropy vs a 1 s full-view round)
 MAX_OVERHEAD_RATIO = 1.0
 MAX_CONTROL_RATIO = 0.5
+# device-engine bands (device_scale smoke): the counter-RNG device path
+# is statistically pinned, not bit-exact — its seeded mean-LDT drift vs
+# the host DelayBank oracle may not exceed this, and the committed
+# device_scale trajectory (speedup at 1M, completed 10M row) must hold
+MAX_DEVICE_LDT_DRIFT = 0.10
 
 
 def _calibrate() -> float:
@@ -149,6 +155,19 @@ def _check(sections, metrics) -> list:
                     problems.append(
                         f"{name}: {key} {mval:.3f} ≥ {MAX_CONTROL_RATIO} "
                         f"— snow control plane is not ≪ gossip's")
+            elif key.endswith("ldt_drift"):
+                # absolute band: device-vs-host statistical pin
+                if mval > MAX_DEVICE_LDT_DRIFT:
+                    problems.append(
+                        f"{name}: {key} {mval:.1%} > "
+                        f"{MAX_DEVICE_LDT_DRIFT:.0%} — device engine "
+                        f"diverged from the host oracle")
+            elif key.endswith("committed_ok"):
+                if mval < 1.0:
+                    problems.append(
+                        f"{name}: {key} {mval} — committed device_scale "
+                        f"section is missing its acceptance rows (run "
+                        f"`run.py --only device_scale` to refresh)")
             elif key.endswith("redundant_B"):
                 # absolute redundancy bands (baseline-independent):
                 # snow's stable redundant bytes are structurally zero,
@@ -193,7 +212,8 @@ def main(argv=None) -> None:
     elif args.smoke:
         # protocol-layer sections only; the jax kernel/roofline benches
         # have their own timings and dominate smoke wall-time
-        names = ["scale_n_fig6a", "paper_repro", "children_micro"]
+        names = ["scale_n_fig6a", "device_scale", "paper_repro",
+                 "children_micro"]
     else:
         names = list(SECTIONS)
 

@@ -1,0 +1,301 @@
+"""Device-resident fused sweep engine: counter-based delays, one dispatch.
+
+The host engines (``engine.stable_sweep`` / ``engine.trace_sweep``) loop
+over seeds in Python and re-sample a fully materialized
+``(ids × messages × slots)`` float64 :class:`~repro.core.engine.DelayBank`
+per seed — at n = 10M the per-seed banks and the Python orchestration
+dominate.  This module removes both:
+
+* **No bank.**  Every delay draw is regenerated on device from
+  counter-mode threefry: one key per ``(seed, slot, draw-tag)`` (a
+  ``fold_in`` chain off ``jax.random.key(seed)``), with the counter
+  stream indexed by the ``(mid, node)`` grid position — each scalar is
+  a pure function of ``(seed, node, mid, slot)`` and the generation is
+  ~1 hash per 2 draws, so delays are cheaper to regenerate than to
+  load.  Trace epochs gather their ``(columns × bank rows)`` window out
+  of the same conceptual plane the stable path generates directly, so
+  the two paths draw from one coordinate system.
+* **One dispatch.**  The level sweep (``repro.kernels.tree_sweep``) is
+  ``vmap``-ed across seeds, and for churn traces ``lax.map``-ed across
+  padded epochs inside the seed ``vmap``, so a whole multi-seed cell is
+  a single jitted call.
+
+The numpy :class:`DelayBank` stays the bit-exactness oracle: the device
+path draws from the *same distributions* (uniform 10–200 ms forwarding,
+lognormal sub-ms links, 5% stragglers pinned at 1 s over the fixed ids)
+but with a different RNG stream, float32 device math, and per-node
+Bernoulli stragglers instead of the host's exact-count sample, so it is
+*statistically* pinned against the host rows (mean/p99 LDT tolerances
+in ``tests/test_device_sweep.py``), never bit-equal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels.tree_sweep import fwd_at_parent, level_sweep_xla
+from .planner import SECONDARY, TreePlan
+from .sim import LatencyModel
+
+# draw tags — the last fold_in of the key chain picks the variate
+_TAG_FWD, _TAG_LINK, _TAG_STRAGGLER = 0, 1, 2
+
+# §5.2 distribution parameters, identical to DelayBank.sample defaults
+_LAT = LatencyModel()
+FWD_LO, FWD_HI = 0.010, 0.200
+STRAGGLER_FRAC = 0.05
+STRAGGLER_DELAY = 1.0
+
+
+def _plan_slot(plan: TreePlan) -> int:
+    return 1 if plan.tree == SECONDARY else 0
+
+
+def _plan_meta(plans: Sequence[TreePlan]) -> Tuple[Tuple[int, int, int], ...]:
+    """Static (root, height, slot) per plan — the jit cache key."""
+    return tuple((int(p.root), int(np.asarray(p.depth).max()), _plan_slot(p))
+                 for p in plans)
+
+
+# ------------------------------------------------------------------ #
+# Counter-based delay generation                                      #
+# ------------------------------------------------------------------ #
+def _straggler_mask(base, fixed_mask, frac=STRAGGLER_FRAC):
+    """(n,) bool — per-node Bernoulli(``frac``) over the fixed ids.  The
+    host oracle draws an *exact-count* sample (``straggler_sample``);
+    the Bernoulli count concentrates around the same mean, which is
+    what the statistical pins absorb."""
+    ks = jax.random.fold_in(base, _TAG_STRAGGLER)
+    u = jax.random.uniform(ks, fixed_mask.shape)
+    return (u < frac) & fixed_mask
+
+
+def _fwd_link_planes(base, slot, m, n, strag):
+    """``(m, n)`` forwarding/link delay planes for one tree slot,
+    regenerated from counters: key = ``(seed → slot → tag)``, counter =
+    the ``(mid, node)`` grid position.  ``strag`` pins straggler rows at
+    :data:`STRAGGLER_DELAY` on every slot and column, like
+    ``DelayBank.sample``."""
+    kf = jax.random.fold_in(jax.random.fold_in(base, slot), _TAG_FWD)
+    kl = jax.random.fold_in(jax.random.fold_in(base, slot), _TAG_LINK)
+    uf = jax.random.uniform(kf, (m, n), minval=FWD_LO, maxval=FWD_HI)
+    fwd = jnp.where(strag[None, :], STRAGGLER_DELAY, uf)
+    link = _LAT.median_s * jnp.exp(_LAT.sigma
+                                   * jax.random.normal(kl, (m, n)))
+    return fwd, link
+
+
+# ------------------------------------------------------------------ #
+# Stable scenario: vmap over seeds, one dispatch                      #
+# ------------------------------------------------------------------ #
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "n_messages", "n_fixed"))
+def _stable_stats(seeds, parents, depths, rate_s, straggler_frac, *,
+                  meta, n_messages, n_fixed):
+    n = parents[0].shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    t0 = jnp.arange(n_messages) * rate_s
+    root0 = meta[0][0]
+
+    def one(seed):
+        base = jax.random.key(seed)
+        strag = _straggler_mask(base, ids < n_fixed, straggler_frac)
+        total = None
+        for parent, depth, (root, height, slot) in zip(parents, depths,
+                                                       meta):
+            fwd, link = _fwd_link_planes(base, slot, n_messages, n, strag)
+            fp = fwd_at_parent(parent, fwd, root)
+            t = level_sweep_xla(parent, depth, fp, link,
+                                t0.astype(fwd.dtype),
+                                root=root, height=height)
+            total = t if total is None else jnp.fmin(total, t)
+        valid = (ids != root0)[None, :] & ~jnp.isnan(total)
+        sub = total - t0[:, None].astype(total.dtype)
+        ldt = jnp.max(jnp.where(valid, sub, -jnp.inf), axis=1)
+        rel = valid.sum(axis=1) / (n - 1)
+        return ldt.mean(), rel.mean()
+
+    return jax.vmap(one)(seeds)
+
+
+def stable_stats_device(plans: Sequence[TreePlan], seeds: Sequence[int],
+                        n_messages: int, rate_s: float = 1.0,
+                        straggler_frac: float = STRAGGLER_FRAC
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-seed ``(mean LDT, mean reliability)`` of a stable multi-seed
+    sweep, all seeds × messages × trees fused into one device dispatch.
+    The jit cache key is ``(plan shapes, (root, height, slot) tuple,
+    n_messages, seed count)`` — re-running with the same shapes reuses
+    the compilation."""
+    ldt, rel = _stable_stats(
+        jnp.asarray(np.asarray(list(seeds), dtype=np.uint32)),
+        tuple(jnp.asarray(np.asarray(p.parent, dtype=np.int32))
+              for p in plans),
+        tuple(jnp.asarray(np.asarray(p.depth, dtype=np.int32))
+              for p in plans),
+        jnp.asarray(float(rate_s)), jnp.asarray(float(straggler_frac)),
+        meta=_plan_meta(plans), n_messages=int(n_messages),
+        n_fixed=int(np.asarray(plans[0].parent).shape[0]))
+    return np.asarray(ldt), np.asarray(rel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "n_messages", "n_fixed", "impl"))
+def _stable_times(seed, parents, depths, rate_s, straggler_frac, *,
+                  meta, n_messages, n_fixed, impl):
+    from ..kernels.ops import tree_sweep
+
+    n = parents[0].shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    t0 = jnp.arange(n_messages) * rate_s
+    base = jax.random.key(seed)
+    strag = _straggler_mask(base, ids < n_fixed, straggler_frac)
+    total = None
+    for parent, depth, (root, height, slot) in zip(parents, depths, meta):
+        fwd, link = _fwd_link_planes(base, slot, n_messages, n, strag)
+        fp = fwd_at_parent(parent, fwd, root)
+        t = tree_sweep(parent, depth, fp, link, t0.astype(fwd.dtype),
+                       root=root, height=height, impl=impl)
+        total = t if total is None else jnp.fmin(total, t)
+    return total
+
+
+def stable_times_device(plans: Sequence[TreePlan], seed: int,
+                        n_messages: int, rate_s: float = 1.0,
+                        impl: str = "xla",
+                        straggler_frac: float = STRAGGLER_FRAC
+                        ) -> np.ndarray:
+    """(M, n) absolute first-delivery times of one device-RNG stable
+    sweep — the single-seed debug/pinning view of
+    :func:`stable_stats_device` (identical draws: both run the same
+    counter chain).  ``impl`` routes the sweep through
+    :func:`repro.kernels.ops.tree_sweep`, so ``"pallas_interpret"``
+    exercises the Pallas kernel on the same generated delays as
+    ``"xla"`` — the pair is bit-equal."""
+    out = _stable_times(
+        jnp.uint32(int(seed) & 0xFFFFFFFF),
+        tuple(jnp.asarray(np.asarray(p.parent, dtype=np.int32))
+              for p in plans),
+        tuple(jnp.asarray(np.asarray(p.depth, dtype=np.int32))
+              for p in plans),
+        jnp.asarray(float(rate_s)), jnp.asarray(float(straggler_frac)),
+        meta=_plan_meta(plans), n_messages=int(n_messages),
+        n_fixed=int(np.asarray(plans[0].parent).shape[0]), impl=impl)
+    return np.asarray(out)
+
+
+# ------------------------------------------------------------------ #
+# Churn traces: lax.map over padded epochs inside the seed vmap       #
+# ------------------------------------------------------------------ #
+@functools.partial(jax.jit,
+                   static_argnames=("q", "height", "maxp", "n_slots",
+                                    "m_total"))
+def _trace_ldt(seeds, st, fixed_mask, *, q, height, maxp, n_slots,
+               m_total):
+    n_bank = fixed_mask.shape[0]
+
+    def one(seed):
+        base = jax.random.key(seed)
+        strag = _straggler_mask(base, fixed_mask)
+        planes = [_fwd_link_planes(base, s, m_total, n_bank, strag)
+                  for s in range(n_slots)]
+        fwd_all = jnp.stack([p[0] for p in planes])   # (S, M, n_bank)
+        link_all = jnp.stack([p[1] for p in planes])
+
+        def ep_fn(e):
+            cols = jnp.clip(e["col0"] + jnp.arange(q, dtype=jnp.int32),
+                            0, m_total - 1)
+            p0 = e["parent"][0].shape[0]
+            total = jnp.full((q, p0), jnp.nan, dtype=jnp.float32)
+            for p in range(maxp):
+                sl = e["slot"][p]
+                fwd = jnp.take(jnp.take(fwd_all, sl, axis=0)[cols],
+                               e["rows"], axis=-1)        # (q, P)
+                link = jnp.take(jnp.take(link_all, sl, axis=0)[cols],
+                                e["rows"], axis=-1)
+                parent = e["parent"][p]
+                fp = jnp.where(parent == e["root"], 0.0,
+                               jnp.take(fwd, parent, axis=-1))
+                t = level_sweep_xla(parent, e["depth"][p], fp, link,
+                                    e["times"].astype(fwd.dtype),
+                                    root=e["root"], height=height)
+                total = jnp.fmin(total, jnp.where(e["mask"][p], t,
+                                                  jnp.nan))
+            sub = total - e["times"][:, None].astype(total.dtype)
+            valid = e["sel"][None, :] & ~jnp.isnan(total)
+            ldt = jnp.max(jnp.where(valid, sub, -jnp.inf), axis=1)
+            ok = e["msgmask"] & valid.any(axis=1)
+            return jnp.where(ok, ldt, 0.0).sum(), ok.sum()
+
+        sums, cnts = lax.map(ep_fn, st)
+        c = cnts.sum()
+        return jnp.where(c > 0, sums.sum() / jnp.maximum(c, 1), jnp.nan)
+
+    return jax.vmap(one)(seeds)
+
+
+def _stack_epochs(epochs) -> Tuple[dict, int, int, int]:
+    """Pad a ``compile_trace`` epoch list into rectangular device
+    arrays.  Padding is inert by construction: padded members carry
+    ``depth = -1`` (no level ever matches → times stay NaN) and
+    ``sel/mask/msgmask = False``; dummy plan slots (epochs with fewer
+    trees than ``maxp``) keep an all-False mask, so their sweep output
+    is discarded before the coloring min."""
+    pmax = max(int(ep.members.shape[0]) for ep in epochs)
+    q = max(ep.count for ep in epochs)
+    maxp = max(len(ep.plans) for ep in epochs)
+    e = len(epochs)
+    st = {
+        "rows": np.zeros((e, pmax), dtype=np.int32),
+        "col0": np.zeros(e, dtype=np.int32),
+        "times": np.zeros((e, q), dtype=np.float64),
+        "msgmask": np.zeros((e, q), dtype=bool),
+        "root": np.zeros(e, dtype=np.int32),
+        "sel": np.zeros((e, pmax), dtype=bool),
+        "parent": np.zeros((e, maxp, pmax), dtype=np.int32),
+        "depth": np.full((e, maxp, pmax), -1, dtype=np.int32),
+        "mask": np.zeros((e, maxp, pmax), dtype=bool),
+        "slot": np.zeros((e, maxp), dtype=np.int32),
+    }
+    height = 0
+    for i, ep in enumerate(epochs):
+        ne = int(ep.members.shape[0])
+        st["rows"][i, :ne] = ep.rows
+        st["col0"][i] = ep.first
+        st["times"][i, :ep.count] = ep.times
+        st["msgmask"][i, :ep.count] = True
+        st["root"][i] = ep.src_index
+        for p, (plan, ok) in enumerate(zip(ep.plans, ep.reach)):
+            st["parent"][i, p, :ne] = np.asarray(plan.parent)
+            st["depth"][i, p, :ne] = np.asarray(plan.depth)
+            st["mask"][i, p, :ne] = True if ok is None else ok
+            st["slot"][i, p] = _plan_slot(plan)
+            height = max(height, int(np.asarray(plan.depth).max()))
+    return st, q, maxp, height
+
+
+def trace_ldt_device(epochs, trace, seeds: Sequence[int]) -> np.ndarray:
+    """Per-seed mean LDT over the paper's fixed subset for a whole churn
+    trace — every seed × epoch × message in one fused dispatch.  The
+    delay-independent metrics (reliability, RMR) are the caller's job
+    (``trace_sweep`` computes them once on the host); only the LDT
+    reduction needs the delays."""
+    st, q, maxp, height = _stack_epochs(epochs)
+    for i, ep in enumerate(epochs):
+        sel = (ep.members < trace.n) & (ep.members != trace.src)
+        st["sel"][i, :ep.members.shape[0]] = sel
+    bank_members = trace.all_ids()
+    n_slots = int(st["slot"].max()) + 1
+    out = _trace_ldt(
+        jnp.asarray(np.asarray(list(seeds), dtype=np.uint32)),
+        {k: jnp.asarray(v) for k, v in st.items()},
+        jnp.asarray(bank_members < trace.n),
+        q=q, height=height, maxp=maxp, n_slots=n_slots,
+        m_total=len(trace.msg_times))
+    return np.asarray(out)

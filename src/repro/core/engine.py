@@ -72,8 +72,8 @@ from .control import (ACK_B, UPDATE_FRAME_B, ControlParams, apply_control,
                       snow_stable_control, snow_trace_control)
 from .ids import NodeId
 from .messages import Data
-from .planner import (PRIMARY, SECONDARY, TreePlan, plan_broadcast,
-                      plan_colored)
+from .planner import (PRIMARY, SECONDARY, TreePlan, depth_levels,
+                      plan_broadcast, plan_colored)
 from .sim import LatencyModel, Metrics, Sim, straggler_sample
 
 
@@ -245,13 +245,10 @@ def bank_for_trace(seed: int, trace: ChurnTrace, protocol: str,
 # ------------------------------------------------------------------ #
 # Level-synchronous closed-form sweep                                 #
 # ------------------------------------------------------------------ #
-def _levels(depth: np.ndarray) -> List[np.ndarray]:
-    """Ring-index groups per depth 1..height, via one stable argsort."""
-    height = int(depth.max()) if depth.size else 0
-    order = np.argsort(depth, kind="stable")
-    dsorted = depth[order]
-    bounds = np.searchsorted(dsorted, np.arange(1, height + 2))
-    return [order[bounds[h]:bounds[h + 1]] for h in range(height)]
+#: back-compat alias — plan-aware callers should use ``plan.levels``,
+#: which caches the argsort per TreePlan (epoch plans are reused across
+#: seeds, so per-sweep recomputation was pure waste)
+_levels = depth_levels
 
 
 def delivery_times(plan: TreePlan, fwd, link, t0=0.0,
@@ -275,7 +272,7 @@ def delivery_times(plan: TreePlan, fwd, link, t0=0.0,
     t = np.full(np.broadcast_shapes(fwd.shape, link.shape), np.nan)
     t[..., plan.root] = t0
     root = plan.root
-    for idx in _levels(depth):
+    for idx in plan.levels:
         p = parent[idx]
         fp = np.where(p == root, 0.0, fwd[..., p])
         t[..., idx] = (t[..., p] + fp) + link[..., idx]
@@ -358,7 +355,7 @@ def reach_mask(plan: TreePlan, crashed: np.ndarray) -> np.ndarray:
     parent = np.asarray(plan.parent)
     ok = ~np.asarray(crashed, dtype=bool)
     ok &= depth >= 0
-    for idx in _levels(depth):
+    for idx in plan.levels:
         ok[idx] &= ok[parent[idx]]
     return ok
 
@@ -560,22 +557,33 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
                  backend: Optional[str] = None,
                  plans: Optional[Tuple[TreePlan, ...]] = None,
                  payload: int = 64,
-                 control: Optional[ControlParams] = None) -> List[dict]:
+                 control: Optional[ControlParams] = None,
+                 engine: str = "host") -> List[dict]:
     """Multi-seed stable-scenario sweep for the scale benchmarks.
 
     The plan set depends only on ``(members, root, k)`` and is reused
-    across seeds (pass ``plans`` to reuse one built elsewhere); each seed
-    re-samples its bank and re-runs the sweep.  Summary reduction happens
-    on the arrays (no subset filtering — the stable scenario's fixed set
-    is the whole cluster).
+    across seeds (pass ``plans`` to reuse one built elsewhere).
+
+    ``engine`` selects the orchestration model:
+
+    * ``"host"`` (default) — each seed re-samples its materialized
+      :class:`DelayBank` on the host and re-runs the level sweep
+      (``backend`` picks numpy or the per-call jitted jax sweep);
+    * ``"device"`` — :mod:`repro.core.device_sweep`: no bank is ever
+      materialized (delays regenerate on device from counter-based RNG
+      keyed by ``(seed, node, message, slot)``) and the WHOLE sweep —
+      all seeds × messages × trees — runs as one fused device dispatch,
+      ``vmap``-ed across seeds.  Statistically pinned against the host
+      rows (``tests/test_device_sweep.py``), not bit-equal.
 
     Row schema: ``ldt`` (s), ``rmr`` / ``rmr_redundant`` (bytes/node per
     message — a uniform stable view reaches every non-root node on every
     tree, so redundancy is exactly one frame per extra tree),
-    ``reliability``, ``wall_s``/``plan_s`` timings, and — when
-    ``control`` is given — the §9 per-category control totals under
-    ``control_B`` plus the run duration ``duration_s`` the rates were
-    integrated over.
+    ``reliability``, ``wall_s``/``plan_s`` timings (the one-time plan
+    compile is attributed to the FIRST row only — summing ``plan_s``
+    over rows equals the cost paid once), and — when ``control`` is
+    given — the §9 per-category control totals under ``control_B`` plus
+    the run duration ``duration_s`` the rates were integrated over.
     """
     import time
 
@@ -589,23 +597,41 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
     duration = n_messages * rate_s
     ctl = snow_stable_control(n, duration, control) if control else None
-    rows = []
-    for seed in seeds:
+    seeds = list(seeds)
+    if engine == "device":
+        from .device_sweep import stable_stats_device
+
         tw = time.time()
-        bank = bank_for_stable(seed, n, protocol, n_messages)
-        times = broadcast_times(plans, bank, n_messages, rate_s, backend)
-        rel = times[:, 1:]          # root (index 0) originates, never receives
-        ldt = np.nanmax(rel - t0[:, None], axis=1)
-        delivered = np.count_nonzero(~np.isnan(rel), axis=1)
+        ldt_mean, rel_mean = stable_stats_device(
+            plans, seeds, n_messages, rate_s)
+        wall = time.time() - tw
+        stats = [(float(ldt_mean[i]), float(rel_mean[i]),
+                  wall / max(1, len(seeds))) for i in range(len(seeds))]
+    else:
+        assert engine == "host", f"engine must be host|device, not {engine!r}"
+        stats = []
+        for seed in seeds:
+            tw = time.time()
+            bank = bank_for_stable(seed, n, protocol, n_messages)
+            times = broadcast_times(plans, bank, n_messages, rate_s, backend)
+            rel = times[:, 1:]      # root (index 0) originates, never receives
+            ldt = np.nanmax(rel - t0[:, None], axis=1)
+            delivered = np.count_nonzero(~np.isnan(rel), axis=1)
+            stats.append((float(ldt.mean()),
+                          float(delivered.mean()) / (n - 1),
+                          time.time() - tw))
+    rows = []
+    for i, (seed, (ldt_i, rel_i, wall_i)) in enumerate(zip(seeds, stats)):
         row = {
             "seed": int(seed), "n": n, "k": k,
-            "ldt": float(ldt.mean()),
+            "ldt": ldt_i,
             "rmr": nbytes / (n - 1),
             "rmr_redundant": float(frame * (len(plans) - 1)),
-            "reliability": float(delivered.mean()) / (n - 1),
+            "reliability": rel_i,
             "n_messages": n_messages,
-            "wall_s": time.time() - tw,
-            "plan_s": plan_s,
+            "wall_s": wall_i,
+            "plan_s": plan_s if i == 0 else 0.0,
+            "engine": engine,
         }
         if ctl is not None:
             row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
@@ -1038,17 +1064,30 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 seeds: Sequence[int], backend: Optional[str] = None,
                 payload: int = 64,
                 epochs: Optional[List[_EpochPlan]] = None,
-                control: Optional[ControlParams] = None) -> List[dict]:
+                control: Optional[ControlParams] = None,
+                engine: str = "host") -> List[dict]:
     """Multi-seed churn/breakdown sweep for the scale benchmarks.
 
     Epoch plans depend only on the trace and are compiled once; each
-    seed re-samples its bank and re-sweeps.  Metrics reduce over the
+    seed re-samples its delays and re-sweeps.  Metrics reduce over the
     paper's fixed subset directly on the arrays, using the generator
     invariant that fixed ids are ``< trace.n`` and transients are not.
+
+    ``engine="host"`` materializes one :class:`DelayBank` per seed and
+    sweeps epoch by epoch from Python; ``engine="device"`` runs every
+    seed × epoch × message through one fused dispatch
+    (:func:`repro.core.device_sweep.trace_ldt_device` — counter-based
+    delays, ``lax.map`` over padded epochs inside a seed ``vmap``).
+    Reach/byte metrics are delay-independent (delays are always finite;
+    only crash blackholing produces NaNs), so both engines share the
+    same host-computed reliability/RMR values and differ only in the
+    LDT statistics (statistically pinned, not bit-equal).
 
     ``control`` attaches the §9 closed-form per-category control totals
     (seed-independent expected values over the trace) to every row
     under ``control_B``, with the integration window in ``duration_s``.
+    The one-time ``plan_s`` compile cost is attributed to the first row
+    only, so summed wall-time reports count it once.
     """
     import time
 
@@ -1064,8 +1103,55 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
     trace_duration = float(spans[-1][1] - spans[0][0]) if spans else 0.0
     fixed_sel = [(ep.members < trace.n) & (ep.members != trace.src)
                  for ep in epochs]
+    seeds = list(seeds)
+
+    def _finish(seed, i, ldt, rmr, red, rel, wall):
+        row = {
+            "seed": int(seed), "n": trace.n, "k": k,
+            "ldt": ldt, "rmr": rmr, "rmr_redundant": red,
+            "reliability": rel,
+            "n_messages": len(trace.msg_times),
+            "n_epochs": len(epochs),
+            "wall_s": wall,
+            "plan_s": plan_s if i == 0 else 0.0,
+            "engine": engine,
+        }
+        if ctl is not None:
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = trace_duration
+        return row
+
+    if engine == "device":
+        from .device_sweep import trace_ldt_device
+
+        # delay-independent per-epoch stats, computed once on the host:
+        # a node counts as delivered iff SOME plan covers it and its
+        # crash-reach mask lets the frame through
+        rmrs: List[float] = []
+        rels: List[float] = []
+        reds: List[float] = []
+        for ep, sel in zip(epochs, fixed_sel):
+            n_int = int(sel.sum())
+            rec_sub = int(ep.receipts[sel].sum())
+            reached = np.zeros(ep.members.shape[0], dtype=bool)
+            for plan, ok in zip(ep.plans, ep.reach):
+                covered = np.asarray(plan.depth) >= 1
+                reached |= covered if ok is None else (ok & covered)
+            cnt = int(reached[sel].sum())
+            rels.extend([cnt / max(1, n_int)] * ep.count)
+            rmrs.extend([ep.frame * rec_sub / max(1, n_int)] * ep.count)
+            reds.extend([ep.frame * (rec_sub - cnt) / max(1, n_int)]
+                        * ep.count)
+        tw = time.time()
+        ldt_dev = trace_ldt_device(epochs, trace, seeds)
+        wall = (time.time() - tw) / max(1, len(seeds))
+        return [_finish(seed, i, float(ldt_dev[i]), float(np.mean(rmrs)),
+                        float(np.mean(reds)), float(np.mean(rels)), wall)
+                for i, seed in enumerate(seeds)]
+
+    assert engine == "host", f"engine must be host|device, not {engine!r}"
     rows = []
-    for seed in seeds:
+    for i, seed in enumerate(seeds):
         tw = time.time()
         bank = bank_for_trace(seed, trace, protocol)
         ldts: List[np.ndarray] = []
@@ -1092,19 +1178,7 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         ldt_all = np.concatenate(ldts)
         rel_all = np.concatenate(rels)
         red_all = np.concatenate(reds)
-        row = {
-            "seed": int(seed), "n": trace.n, "k": k,
-            "ldt": float(np.nanmean(ldt_all)),
-            "rmr": float(np.mean(rmrs)),
-            "rmr_redundant": float(red_all.mean()),
-            "reliability": float(rel_all.mean()),
-            "n_messages": len(trace.msg_times),
-            "n_epochs": len(epochs),
-            "wall_s": time.time() - tw,
-            "plan_s": plan_s,
-        }
-        if ctl is not None:
-            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
-            row["duration_s"] = trace_duration
-        rows.append(row)
+        rows.append(_finish(seed, i, float(np.nanmean(ldt_all)),
+                            float(np.mean(rmrs)), float(red_all.mean()),
+                            float(rel_all.mean()), time.time() - tw))
     return rows

@@ -263,11 +263,21 @@ def _closed_form_cell(spec: ExperimentSpec, cell: Cell,
                       trace: Optional[ChurnTrace]
                       ) -> Tuple[List[dict], Optional[Dict[str, float]],
                                  str]:
-    """Run one snow/coloring cell through the closed-form engines."""
+    """Run one snow/coloring cell through the closed-form engines.
+
+    ``cell.engine="device"`` requests the device-resident fused sweep
+    (:mod:`repro.core.device_sweep`): stable cells and oracle-view
+    churn/breakdown cells run the whole seed batch in one device
+    dispatch (``engine_used="device"``).  Stale-view cells have no
+    device expression (the adoption sweep is inherently host-ordered),
+    so they fall back to the host engine and report it honestly via
+    ``engine_used="vectorized-stale"``.
+    """
     params = ControlParams() if spec.control else None
+    sweep_engine = "device" if cell.engine == "device" else "host"
     if cell.scene == "stable":
-        rows = stable_sweep_rows(spec, cell, params)
-        used = "vectorized"
+        rows = stable_sweep_rows(spec, cell, params, engine=sweep_engine)
+        used = "device" if sweep_engine == "device" else "vectorized"
     elif cell.view_model == "stale":
         rows = _stale_rows(spec, cell, trace, params)
         used = "vectorized-stale"
@@ -275,8 +285,9 @@ def _closed_form_cell(spec: ExperimentSpec, cell: Cell,
         from .engine import trace_sweep
 
         rows = trace_sweep(cell.protocol, trace, cell.k, spec.seeds,
-                           payload=cell.payload, control=params)
-        used = "vectorized"
+                           payload=cell.payload, control=params,
+                           engine=sweep_engine)
+        used = "device" if sweep_engine == "device" else "vectorized"
     ctl = None
     if spec.control:
         ctl_rows = [r["control_B"] for r in rows if "control_B" in r]
@@ -288,12 +299,14 @@ def _closed_form_cell(spec: ExperimentSpec, cell: Cell,
 
 
 def stable_sweep_rows(spec: ExperimentSpec, cell: Cell,
-                      params: Optional[ControlParams]) -> List[dict]:
+                      params: Optional[ControlParams],
+                      engine: str = "host") -> List[dict]:
     from .engine import stable_sweep
 
     return stable_sweep(cell.protocol, cell.n, cell.k, spec.seeds,
                         n_messages=spec.n_messages, rate_s=spec.rate_s,
-                        payload=cell.payload, control=params)
+                        payload=cell.payload, control=params,
+                        engine=engine)
 
 
 def _stale_rows(spec: ExperimentSpec, cell: Cell, trace: ChurnTrace,
@@ -321,8 +334,11 @@ def route(spec: ExperimentSpec, cell: Cell) -> str:
 
     * snow/coloring: the closed forms unless ``engine="events"``
       (which is capped at ``events_max_n`` like every events cell);
+      ``engine="device"`` selects the device-resident fused sweep
+      inside the closed-form path (``_closed_form_cell``);
     * gossip: its closed form exists for the stable scene only —
-      used beyond the cap or on ``engine="vectorized"``;
+      used beyond the cap or on ``engine="vectorized"``; it has no
+      device expression, so ``engine="device"`` is an explicit skip;
     * plumtree/flooding (and dynamic-membership gossip): events only.
 
     Returns ``"closed-form" | "gossip-closed-form" | "events"``, or
@@ -331,6 +347,8 @@ def route(spec: ExperimentSpec, cell: Cell) -> str:
     if cell.protocol in CLOSED_FORM:
         if cell.engine != "events":
             return "closed-form"
+    elif cell.engine == "device":
+        return f"skipped:no device engine for {cell.protocol}"
     elif cell.protocol == "gossip" and cell.scene == "stable":
         if cell.engine == "vectorized" or (cell.engine == "auto"
                                            and cell.n > spec.events_max_n):

@@ -26,6 +26,7 @@ host; each level's math is pure array ops.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -37,6 +38,20 @@ PRIMARY = 0
 SECONDARY = 1
 
 _MAX_LEVELS = 128          # >> any real height (Eq. 8: ~log_k n + 1)
+
+
+def depth_levels(depth: np.ndarray) -> Tuple[np.ndarray, ...]:
+    """Ring-index groups per depth 1..height, via one stable argsort —
+    the iteration order of every level-synchronous sweep.  Prefer
+    :attr:`TreePlan.levels`, which caches this per plan (epoch plans are
+    reused across seeds, so recomputing the argsort per sweep is pure
+    waste)."""
+    depth = np.asarray(depth)
+    height = int(depth.max()) if depth.size else 0
+    order = np.argsort(depth, kind="stable")
+    dsorted = depth[order]
+    bounds = np.searchsorted(dsorted, np.arange(1, height + 2))
+    return tuple(order[bounds[h]:bounds[h + 1]] for h in range(height))
 
 
 def _get_xp(backend: Union[str, Any]):
@@ -88,6 +103,13 @@ class TreePlan:
     def height(self) -> int:
         d = np.asarray(self.depth)
         return int(d.max()) if d.size else 0
+
+    @cached_property
+    def levels(self) -> Tuple[np.ndarray, ...]:
+        """Cached :func:`depth_levels` of this plan — computed once per
+        plan instance, shared by every sweep over it (``cached_property``
+        writes straight to ``__dict__``, bypassing the frozen guard)."""
+        return depth_levels(np.asarray(self.depth))
 
     @property
     def leaf_mask(self):

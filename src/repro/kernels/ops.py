@@ -17,6 +17,7 @@ from . import ref
 from .decode_attention import decode_attention_pallas
 from .flash_attention import flash_attention_pallas
 from .rglru_scan import rglru_scan_pallas
+from .tree_sweep import level_sweep_xla, tree_sweep_pallas
 from .wkv6 import wkv6_pallas
 
 
@@ -63,4 +64,20 @@ def rglru_scan(a, b, h0, *, chunk: int = 256, impl: str = "auto"):
     if mode == "xla":
         return ref.rglru_scan_reference(a, b, h0)
     return rglru_scan_pallas(a, b, h0, chunk=chunk,
+                             interpret=(mode == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("root", "height", "impl"))
+def tree_sweep(parent, depth, fp, link, t0, *, root: int, height: int,
+               impl: str = "auto"):
+    """Level-synchronous closed-form delivery sweep over one
+    :class:`~repro.core.planner.TreePlan` (see
+    :mod:`repro.kernels.tree_sweep`).  Both impls compute the identical
+    float program, so "pallas_interpret" is bit-equal to "xla"."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return level_sweep_xla(parent, depth, fp, link, t0,
+                               root=root, height=height)
+    return tree_sweep_pallas(parent, depth, fp, link, t0,
+                             root=root, height=height,
                              interpret=(mode == "pallas_interpret"))
