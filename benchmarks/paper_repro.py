@@ -79,7 +79,8 @@ def specs(scale: str) -> List[ExperimentSpec]:
             ExperimentSpec(name="fanout_k_smoke", ks=(2, 4, 8),
                            ns=(200,), seeds=(5,), n_messages=5),
             ExperimentSpec(name="overhead_smoke",
-                           protocols=("snow", "coloring", "gossip"),
+                           protocols=("snow", "coloring", "gossip",
+                                      "plumtree"),
                            ns=(2000,), seeds=(3,), n_messages=2,
                            engines=("vectorized",)),
             # 20 msgs with crash_every=3 ⇒ crashes actually fire (the
@@ -101,7 +102,8 @@ def specs(scale: str) -> List[ExperimentSpec]:
         ExperimentSpec(name=f"fanout_k_{scale}", ks=(2, 4, 6, 8),
                        ns=(600,), seeds=(5, 6), n_messages=20),
         ExperimentSpec(name=f"overhead_{scale}",
-                       protocols=("snow", "coloring", "gossip"),
+                       protocols=("snow", "coloring", "gossip",
+                                  "plumtree"),
                        ns=(500,) + big, seeds=(3, 5), n_messages=2,
                        engines=("vectorized",)),
         # 20 messages: two join/leave cycles; crash_every=3 puts six
@@ -265,6 +267,13 @@ def overhead_gate(doc: dict) -> List[str]:
             problems.append(
                 f"n={n}: snow control {ctl_by_n[n]['snow']:.1f} B/s·node "
                 f"is not below gossip {ctl_by_n[n]['gossip']:.1f}")
+        # the hybrid corner of the §5 triangle: plumtree trades gossip's
+        # duplicate payload floor for IHAVE control traffic and must
+        # still land strictly below the gossip baseline in total
+        if "plumtree" in totals and not totals["plumtree"] < totals["gossip"]:
+            problems.append(
+                f"n={n}: plumtree total overhead {totals['plumtree']:.1f} "
+                f"B/s·node is not below gossip {totals['gossip']:.1f}")
     return problems
 
 
@@ -323,12 +332,18 @@ def main(smoke: bool = False) -> List[str]:
                     if r["cell"]["protocol"] == "snow")
         gossip = next(r for r in oh.values()
                       if r["cell"]["protocol"] == "gossip")
+        plumtree = next(r for r in oh.values()
+                        if r["cell"]["protocol"] == "plumtree")
         LAST_SMOKE = {
-            # --check bands: total must stay < 1.0, control < 0.5
+            # --check bands: totals must stay < 1.0, control < 0.5;
+            # the plumtree closed form completes the tree/gossip/hybrid
+            # triangle and must also undercut the gossip baseline
             "snow_gossip_overhead_ratio":
                 snow["total_Bps_node"] / gossip["total_Bps_node"],
             "snow_gossip_control_ratio":
                 snow["control_Bps_node"] / gossip["control_Bps_node"],
+            "plumtree_gossip_overhead_ratio":
+                plumtree["total_Bps_node"] / gossip["total_Bps_node"],
             "repro_reliability": min(
                 r["reliability"] for d in docs.values()
                 for r in d["rows"].values() if "reliability" in r),

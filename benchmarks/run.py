@@ -55,6 +55,12 @@ MIN_GOSSIP_REDUNDANT_B = 50.0
 # delta member-updates + 15 s anti-entropy vs a 1 s full-view round)
 MAX_OVERHEAD_RATIO = 1.0
 MAX_CONTROL_RATIO = 0.5
+# §11 fault-injection bands (scale_n smoke): the pull-repair engine
+# must close the loss/crash reliability dip to exactly 1.0 at loss
+# ≤ 5%, and its closed-form byte bill (digest cadence + fetches) must
+# stay strictly under the reliable-epoch rebroadcast comparator
+MIN_REPAIR_RELIABILITY = 1.0
+MAX_REPAIR_REBROADCAST_RATIO = 1.0
 # device-engine bands (device_scale smoke): the counter-RNG device path
 # is statistically pinned, not bit-exact — its seeded mean-LDT drift vs
 # the host DelayBank oracle may not exceed this, and the committed
@@ -131,6 +137,12 @@ def _check(sections, metrics) -> list:
                 if rel > LDT_REL_TOL:
                     problems.append(f"{name}: {key} {mval:.0f} vs "
                                     f"baseline {bval:.0f} ({rel:.0%})")
+            elif key.endswith("repair_reliability"):
+                # absolute band: repair must close the dip completely
+                if mval < MIN_REPAIR_RELIABILITY - 1e-9:
+                    problems.append(
+                        f"{name}: {key} {mval} — pull repair left a "
+                        f"reliability dip open at loss ≤ 5%")
             elif key.endswith("reliability"):
                 if mval < (bval or 0.0) - 1e-9:
                     problems.append(f"{name}: {key} dropped to {mval}")
@@ -144,12 +156,19 @@ def _check(sections, metrics) -> list:
                     problems.append(f"{name}: {key} "
                                     f"{mval:.1f}x < {floor}x")
             elif key.endswith("overhead_ratio"):
-                # absolute band: snow total overhead strictly below the
-                # gossip baseline (the paper's §5 headline comparison)
+                # absolute band: total overhead strictly below the
+                # gossip baseline (the paper's §5 headline comparison;
+                # applies to snow and to the plumtree closed form)
                 if mval >= MAX_OVERHEAD_RATIO:
                     problems.append(
-                        f"{name}: {key} {mval:.3f} — snow total overhead "
-                        f"is not below gossip")
+                        f"{name}: {key} {mval:.3f} — total overhead "
+                        f"is not below the gossip baseline")
+            elif key.endswith("rebroadcast_ratio"):
+                # absolute band: repair bytes < rebroadcast comparator
+                if mval >= MAX_REPAIR_REBROADCAST_RATIO:
+                    problems.append(
+                        f"{name}: {key} {mval:.3f} — pull repair costs "
+                        f"as much as rebroadcasting every dipped message")
             elif key.endswith("control_ratio"):
                 if mval >= MAX_CONTROL_RATIO:
                     problems.append(

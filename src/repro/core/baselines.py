@@ -14,7 +14,10 @@
 for the §5.4 redundancy benchmarks: at n = 500k+ the event loop cannot
 run gossip at all, but its delivery times satisfy a shortest-path
 relaxation over the random fan-out graph that a few scatter-min passes
-solve exactly.
+solve exactly.  :func:`plumtree_sweep` is the same construction for
+``PlumtreeNode`` — eager push over a fixed k-out overlay plus a
+lazy-IHAVE/GRAFT repair edge set — completing the tree / gossip /
+hybrid baseline triangle in the overhead table.
 """
 from __future__ import annotations
 
@@ -252,6 +255,222 @@ def gossip_message_vectorized(n: int, k: int, g: np.random.Generator,
     delivered = ~np.isnan(t)
     receipts = np.bincount(d_sorted[delivered[src_sorted]], minlength=n)
     return t, receipts
+
+
+def _relax_edges(n: int, src: NodeId, fwd: np.ndarray, esrc: np.ndarray,
+                 edst: np.ndarray, ecost: np.ndarray,
+                 max_rounds: int = 128) -> np.ndarray:
+    """Shortest-path relaxation ``t[c] = min over edges (v→c) of
+    (t[v] + fwd[v] + cost(v→c))`` via the segment-min idiom of
+    :func:`gossip_message_vectorized`, over an explicit edge list —
+    the shared solver under the Plumtree closed form, where eager and
+    lazy edges carry different costs."""
+    order = np.argsort(edst, kind="stable")
+    d_sorted = edst[order]
+    s_sorted = esrc[order]
+    c_sorted = ecost[order]
+    starts = np.searchsorted(d_sorted, np.arange(n + 1))
+    nonempty = starts[1:] > starts[:-1]
+    # NaN sentinel: makes start == len(edges) segments valid and
+    # fmin-neutral (see the reduceat note in gossip_message_vectorized)
+    s_ext = np.append(s_sorted, 0)
+    c_ext = np.append(c_sorted, np.nan)
+    t = np.full(n, np.nan)
+    t[src] = 0.0
+    for _ in range(max_rounds):
+        arrivals = (t + fwd)[s_ext] + c_ext
+        seg = np.fmin.reduceat(arrivals, starts[:-1]) if d_sorted.size \
+            else np.full(n, np.nan)
+        seg = np.where(nonempty, seg, np.nan)
+        t_new = np.fmin(t, seg)
+        t_new[src] = 0.0
+        if np.array_equal(t_new, t, equal_nan=True):
+            break
+        t = t_new
+    return t
+
+
+def plumtree_message_vectorized(n: int, k: int, g: np.random.Generator,
+                                *, src: NodeId = 0, lazy_degree: int = 2,
+                                ihave_delay: float = 0.5,
+                                graft_timeout: float = 1.0,
+                                lo: float = 0.010, hi: float = 0.200,
+                                straggler_frac: float = 0.05,
+                                straggler_delay: float = 1.0,
+                                latency: Optional[LatencyModel] = None,
+                                max_rounds: int = 128,
+                                eager_dst: Optional[np.ndarray] = None,
+                                lazy_dst: Optional[np.ndarray] = None,
+                                extra_src: Optional[np.ndarray] = None,
+                                extra_dst: Optional[np.ndarray] = None):
+    """One Plumtree broadcast in closed form.
+
+    Eager push is the gossip relaxation over a *fixed* k-out overlay
+    (``eager_dst``; pass the same array across messages to model the
+    per-seed partial view ``PlumtreeNode`` keeps).  Nodes the eager
+    graph never reaches recover through the lazy edge set: an IHAVE
+    arrives ``ihave_delay`` after the holder's push (Plumtree's batched
+    lazy queue), the missing-timer expires after ``graft_timeout``, and
+    the GRAFT round trip fetches the payload — so a lazy edge (v→c)
+    costs ``fwd[v] + ihave_delay + link_ihave + graft_timeout +
+    link_graft + link_data`` where an eager edge costs
+    ``fwd[v] + link``.  One relaxation over the union of both edge sets
+    yields final delivery times; the eager-only relaxation identifies
+    which nodes needed a graft.
+
+    ``extra_src``/``extra_dst`` are *grafted* eager edges from earlier
+    broadcasts: a GRAFT permanently promotes the lazy edge to eager on
+    both ends, so eager-unreached nodes pay the graft latency once, not
+    per message (the live loop's tree self-repair).  Their links are
+    redrawn fresh each message like every other edge.
+
+    Returns ``(t, receipts, grafts)``: absolute delivery times (NaN =
+    unreachable even via lazy edges), the eager DATA receipt count per
+    node on the current eager graph (what the first, pre-PRUNE
+    broadcast over it pays — see the warming-up amortization in
+    :func:`plumtree_sweep`), and the new graft edges as a
+    ``(holder_src, grafted_dst)`` pair of arrays — the lowest-latency
+    delivered lazy in-neighbour answers the GRAFT.
+    """
+    latency = latency or LatencyModel()
+    if eager_dst is None or lazy_dst is None:
+        # targets via the (self + U{1, n-1}) % n idiom: never self,
+        # duplicate targets within a row vanish at benchmark sizes
+        both = ((np.arange(n)[:, None]
+                 + g.integers(1, n, size=(n, k + lazy_degree))) % n)
+        eager_dst, lazy_dst = both[:, :k], both[:, k:]
+    fwd = g.uniform(lo, hi, n)
+    n_strag = int(round(straggler_frac * n))
+    if n_strag:
+        fwd[g.choice(n, size=n_strag, replace=False)] = straggler_delay
+    fwd[src] = 0.0
+    def links(shape):
+        return latency.median_s * np.exp(g.normal(0.0, latency.sigma, shape))
+    link_e = links((n, k))
+    lazy_cost = ((ihave_delay + graft_timeout)
+                 + links((n, lazy_degree))      # IHAVE
+                 + links((n, lazy_degree))      # GRAFT
+                 + links((n, lazy_degree)))     # payload
+    esrc_e = np.repeat(np.arange(n), k)
+    edst_e = eager_dst.ravel()
+    cost_e = link_e.ravel()
+    if extra_src is not None and extra_src.size:
+        esrc_e = np.concatenate([esrc_e, extra_src])
+        edst_e = np.concatenate([edst_e, extra_dst])
+        cost_e = np.concatenate([cost_e, links((extra_src.size,))])
+    esrc_l = np.repeat(np.arange(n), lazy_degree)
+    edst_l = lazy_dst.ravel()
+    t_eager = _relax_edges(n, src, fwd, esrc_e, edst_e, cost_e,
+                           max_rounds)
+    t = _relax_edges(n, src, fwd,
+                     np.concatenate([esrc_e, esrc_l]),
+                     np.concatenate([edst_e, edst_l]),
+                     np.concatenate([cost_e, lazy_cost.ravel()]),
+                     max_rounds)
+    delivered = ~np.isnan(t)
+    receipts = np.bincount(edst_e[delivered[esrc_e]], minlength=n)
+    grafted = np.isnan(t_eager) & delivered
+    if grafted.any():
+        # the winning holder: the earliest-delivered lazy in-neighbour
+        m = grafted[edst_l] & ~np.isnan(t[esrc_l])
+        order = np.lexsort((t[esrc_l[m]], edst_l[m]))
+        ds, ss = edst_l[m][order], esrc_l[m][order]
+        first = np.concatenate([[True], ds[1:] != ds[:-1]]) \
+            if ds.size else np.zeros(0, dtype=bool)
+        grafts = (ss[first], ds[first])
+    else:
+        grafts = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+    return t, receipts, grafts
+
+
+def plumtree_sweep(n: int, k: int, seeds: Sequence[int],
+                   n_messages: int = 2, payload: int = 64,
+                   src: NodeId = 0, rate_s: float = 1.0,
+                   control=None, lazy_degree: int = 2) -> List[dict]:
+    """Multi-seed closed-form Plumtree sweep — rows shaped like
+    :func:`gossip_sweep`'s, statistically pinned against the live
+    ``PlumtreeNode`` (``tests/test_repair.py``).
+
+    Data accounting models the paper's warming-up phase explicitly: the
+    *first* broadcast over a fresh overlay pays the raw k-out graph's
+    duplicate floor (``receipts - delivered`` redundant frames), PRUNE
+    then strips exactly those edges, and every later broadcast rides
+    the surviving spanning tree at one frame per node and zero
+    duplicates.  The sweep therefore amortizes the initial duplicate
+    mass over ``n_messages`` instead of replaying it per message.
+
+    Control accounting (``control`` = a ``ControlParams``): per-message
+    lazy IHAVE announcements from every delivered holder, IHAVEs on the
+    pruned (now-lazy) edges, one GRAFT frame per eager-unreached node,
+    plus the HyParView-style O(k) partial-view shuffle — the middle
+    corner of the §9 membership triangle, priced by
+    :func:`repro.core.control.plumtree_control`."""
+    import time
+
+    from .control import plumtree_control
+
+    frame = GossipData(0, src, payload).size
+    duration = n_messages * rate_s
+    rows = []
+    for seed in seeds:
+        g = np.random.default_rng(
+            np.random.SeedSequence([seed & 0xFFFFFFFF, 0x7075]))
+        tw = time.time()
+        # the per-seed overlay is fixed across messages, like the live
+        # node's partial view; delays are fresh per message
+        both = ((np.arange(n)[:, None]
+                 + g.integers(1, n, size=(n, k + lazy_degree))) % n)
+        eager_dst, lazy_dst = both[:, :k], both[:, k:]
+        mask = np.ones(n, dtype=bool)
+        mask[src] = False
+        n_int = n - 1
+        xsrc = np.zeros(0, dtype=np.int64)
+        xdst = np.zeros(0, dtype=np.int64)
+        ldts, rels, rmrs, reds, ihaves = [], [], [], [], []
+        for _ in range(n_messages):
+            t, rec_init, grafts = plumtree_message_vectorized(
+                n, k, g, src=src, lazy_degree=lazy_degree,
+                eager_dst=eager_dst, lazy_dst=lazy_dst,
+                extra_src=xsrc, extra_dst=xdst)
+            n_grafts = int(grafts[0].size)
+            if n_grafts:
+                # grafted edges stay eager for the rest of the sweep
+                xsrc = np.concatenate([xsrc, grafts[0]])
+                xdst = np.concatenate([xdst, grafts[1]])
+            dcnt = int((~np.isnan(t[mask])).sum())
+            rec0 = int(rec_init[mask].sum())
+            warm = max(0, rec0 - dcnt) / n_messages
+            ldts.append(float(np.nanmax(t[mask])))
+            rels.append(dcnt / n_int)
+            rmrs.append(frame * (dcnt + warm) / n_int)
+            reds.append(frame * warm / n_int)
+            # IHAVE floor: every delivered holder (and the source)
+            # announces on its lazy_degree lazy links; each pruned
+            # eager edge turns lazy on BOTH ends (the pruner demotes
+            # the sender, the PRUNE receiver demotes the pruner), so
+            # the duplicate mass counts twice; one GRAFT frame per
+            # repaired node
+            ihaves.append((dcnt + 1) * lazy_degree
+                          + 2 * max(0, rec0 - dcnt) + n_grafts)
+        row = {
+            "seed": int(seed), "n": n, "k": k,
+            "ldt": float(np.mean(ldts)),
+            "rmr": float(np.mean(rmrs)),
+            "rmr_redundant": float(np.mean(reds)),
+            "payload_B": float(np.mean(rmrs)) - float(np.mean(reds)),
+            "reliability": float(np.mean(rels)),
+            "n_messages": n_messages,
+            "wall_s": time.time() - tw,
+        }
+        if control is not None:
+            ctl = plumtree_control(n, k, duration,
+                                   float(np.mean(ihaves)), n_messages,
+                                   lazy_degree=lazy_degree,
+                                   params=control)
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = duration
+        rows.append(row)
+    return rows
 
 
 def gossip_sweep(n: int, k: int, seeds: Sequence[int], n_messages: int = 2,

@@ -48,11 +48,13 @@ seed-independent, valid at any n.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, Optional
 
 from .churn import ChurnTrace
-from .messages import Ack, Data, MemberUpdate, Probe, SyncReq
+from .messages import (Ack, Data, IHave, MemberUpdate, MidDigest, MidFetch,
+                       Probe, RepairData, SyncReq)
 
 #: wire size of one SWIM probe frame (PING == PING-REQ == PROBE-ACK)
 PROBE_B = Probe("ping", 0).size
@@ -61,10 +63,17 @@ ACK_B = Ack(0).size
 #: wire size of one member-update announcement DATA frame (payload 0)
 UPDATE_FRAME_B = Data(0, 0, None, None, 0, True, None,
                       MemberUpdate("join", 0)).size
+#: wire size of one pull-repair digest frame (default 64-mid bitmap)
+MID_DIGEST_B = MidDigest((), 64).size
+#: wire size of one pull-repair fetch request
+MID_FETCH_B = MidFetch(0).size
+#: wire size of one Plumtree IHAVE (== GRAFT) frame
+IHAVE_B = IHave(0).size
 
 
 def sync_req_bytes(n_entries: int) -> int:
-    """Wire size of one full-view SyncReq frame over ``n_entries``."""
+    """Wire size of one SyncReq frame carrying ``n_entries`` membership
+    entries (delta-sized: steady state is a 0-entry header ping)."""
     return SyncReq(n_entries).size
 
 
@@ -125,12 +134,53 @@ def anti_entropy_epoch_bytes(m: int, c: int, duration_s: float,
                              params: ControlParams = DEFAULT_PARAMS
                              ) -> float:
     """Expected anti-entropy bytes over one epoch: each alive node
-    initiates one exchange (two full-view SyncReq frames) per
-    ``anti_entropy_interval_s``."""
+    initiates one exchange per ``anti_entropy_interval_s``.
+
+    Since the delta-sizing fix an exchange moves two SyncReq frames
+    sized by the entries the merge actually transfers — zero in steady
+    state (membership changes ride the MemberUpdate broadcast, so by
+    the time a merge fires the views already agree): two header pings.
+    Transient deltas around membership events are priced per event in
+    :func:`anti_entropy_event_delta_bytes`."""
     if m <= 1 or duration_s <= 0 or not params.anti_entropy:
         return 0.0
     exchanges = (m - c) * duration_s / params.anti_entropy_interval_s
-    return exchanges * 2 * sync_req_bytes(m)
+    # an initiator that picks a crashed peer aborts the exchange — no
+    # frames move (matching the live tick's alive check)
+    p_alive = max(0.0, (m - 1 - c) / max(1, m - 1))
+    return exchanges * p_alive * 2 * sync_req_bytes(0)
+
+
+#: mean per-hop relay time (s) of the announcement broadcast — §5.2
+#: forwarding delay (~0.105 s mean) plus one link traversal (~0.09 s)
+AE_HOP_S = 0.2
+
+
+def ae_discord_window_s(m: int, k: int = 4) -> float:
+    """Mean view-discordance window after a membership announcement:
+    the announcement broadcast's dissemination time, ≈ tree depth
+    (``log_k m`` hops at the canonical fanout) × the per-hop relay
+    time.  Calibrated against the live loop in
+    ``tests/test_control_plane.py``: exchanges firing inside the window
+    carry the one-entry delta."""
+    if m <= 1:
+        return 0.0
+    return AE_HOP_S * math.log(m) / math.log(k)
+
+
+def anti_entropy_event_delta_bytes(m: int,
+                                   params: ControlParams = DEFAULT_PARAMS
+                                   ) -> float:
+    """Expected delta entries anti-entropy carries for ONE membership
+    event: while the announcement propagates
+    (:func:`ae_discord_window_s`), an exchange between a node that
+    adopted and one that has not moves one 18 B entry.  Expected
+    discordant exchanges ≈ ticks in the window × the ~½ chance the
+    pair straddles the update front."""
+    if m <= 1 or not params.anti_entropy:
+        return 0.0
+    ticks = m * ae_discord_window_s(m) / params.anti_entropy_interval_s
+    return ticks * 0.5 * (sync_req_bytes(1) - sync_req_bytes(0))
 
 
 def view_gossip_bytes(n: int, duration_s: float,
@@ -141,6 +191,38 @@ def view_gossip_bytes(n: int, duration_s: float,
         return 0.0
     rounds = n * duration_s / params.gossip_round_s
     return rounds * sync_req_bytes(n)
+
+
+def repair_digest_epoch_bytes(m: int, c: int, duration_s: float,
+                              interval_s: float) -> float:
+    """Expected pull-repair digest stream over one epoch: each alive
+    node's tick (every ``interval_s``) runs one digest exchange — two
+    bitmap frames — when the picked peer is alive (DESIGN.md §11)."""
+    if m <= 1 or duration_s <= 0:
+        return 0.0
+    ticks = (m - c) * duration_s / interval_s
+    p_alive = max(0.0, (m - 1 - c) / max(1, m - 1))
+    return ticks * p_alive * 2 * MID_DIGEST_B
+
+
+def repair_fetch_bytes(n_missed: float, payload: int) -> float:
+    """Expected pull-repair fetch bytes: each (node, missed broadcast)
+    pair costs one fetch request plus one payload response."""
+    return n_missed * (MID_FETCH_B + RepairData(0, payload).size)
+
+
+def hyparview_shuffle_bytes(n: int, degree: int, duration_s: float,
+                            params: ControlParams = DEFAULT_PARAMS
+                            ) -> float:
+    """Membership cost of the Plumtree baseline: Plumtree rides a
+    partial-view overlay (HyParView), whose maintenance shuffles an
+    O(degree) peer sample — not the full view — to one random peer per
+    round.  Same cadence as :func:`view_gossip_bytes`, O(k) entries
+    instead of O(n): the middle corner of the membership-cost triangle."""
+    if n <= 1 or duration_s <= 0:
+        return 0.0
+    rounds = n * duration_s / params.gossip_round_s
+    return rounds * sync_req_bytes(degree)
 
 
 # ------------------------------------------------------------------ #
@@ -190,6 +272,10 @@ def snow_trace_control(trace: ChurnTrace, drain_s: float = 0.0,
                 continue
             reach = m_new if ev.kind == "leave" else m_new - 1
             out["member_update"] += member_update_event_bytes(reach)
+            # the transient view delta this event leaves for the
+            # anti-entropy stream to mop up (delta-sized frames)
+            out["anti_entropy"] += anti_entropy_event_delta_bytes(m_new,
+                                                                  params)
     return out
 
 
@@ -201,6 +287,24 @@ def gossip_control(n: int, duration_s: float,
     return {"view_gossip": view_gossip_bytes(n, duration_s, params)}
 
 
+def plumtree_control(n: int, k: int, duration_s: float,
+                     ihave_frames_per_msg: float, n_messages: int,
+                     lazy_degree: int = 2,
+                     params: ControlParams = DEFAULT_PARAMS
+                     ) -> Dict[str, float]:
+    """Control bytes of the Plumtree baseline: the per-message lazy
+    IHAVE announcements (``ihave_frames_per_msg`` comes from the
+    realized eager graph — see ``baselines.plumtree_sweep``) plus the
+    HyParView-style partial-view shuffle.  Completes the §9 membership
+    triangle: gossip pays O(n)/round, Plumtree O(k)/round, Snow O(1)
+    probes + O(n) per membership change."""
+    return {
+        "plumtree": float(ihave_frames_per_msg) * n_messages * IHAVE_B,
+        "view_gossip": hyparview_shuffle_bytes(
+            n, k + lazy_degree + 2, duration_s, params),
+    }
+
+
 def apply_control(metrics, totals: Dict[str, float],
                   frame_b: Optional[Dict[str, float]] = None) -> None:
     """Feed closed-form category totals into a :class:`Metrics` /
@@ -209,7 +313,8 @@ def apply_control(metrics, totals: Dict[str, float],
     category's dominant frame size (reporting only — bytes are the
     contract)."""
     sizes = {"swim": PROBE_B, "member_update": UPDATE_FRAME_B + ACK_B,
-             "anti_entropy": 0.0, "view_gossip": 0.0}
+             "anti_entropy": 0.0, "view_gossip": 0.0,
+             "plumtree": IHAVE_B, "repair": 0.0}
     if frame_b:
         sizes.update(frame_b)
     for kind, nbytes in totals.items():

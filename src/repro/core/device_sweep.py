@@ -44,7 +44,7 @@ from .planner import SECONDARY, TreePlan
 from .sim import LatencyModel
 
 # draw tags — the last fold_in of the key chain picks the variate
-_TAG_FWD, _TAG_LINK, _TAG_STRAGGLER = 0, 1, 2
+_TAG_FWD, _TAG_LINK, _TAG_STRAGGLER, _TAG_LOSS = 0, 1, 2, 3
 
 # §5.2 distribution parameters, identical to DelayBank.sample defaults
 _LAT = LatencyModel()
@@ -89,6 +89,22 @@ def _fwd_link_planes(base, slot, m, n, strag):
     link = _LAT.median_s * jnp.exp(_LAT.sigma
                                    * jax.random.normal(kl, (m, n)))
     return fwd, link
+
+
+def _loss_planes(base, slot, m, n, rate, timeout_s, max_attempts):
+    """(m, n) retransmit-extra delays and lost masks — the device twin
+    of ``LossModel.edge_faults``.  Same protocol (Bernoulli per attempt,
+    ``extra = failures × timeout``, dead after ``max_attempts``), but
+    threefry draws instead of the host's splitmix64 counter hash, so
+    device-under-loss rows pin statistically against host rows, never
+    bit-equal — exactly like the delay planes themselves."""
+    kl = jax.random.fold_in(jax.random.fold_in(base, slot), _TAG_LOSS)
+    u = jax.random.uniform(kl, (max_attempts, m, n))
+    ok = u >= rate
+    lost = ~ok.any(axis=0)
+    failures = jnp.where(lost, max_attempts, jnp.argmax(ok, axis=0))
+    extra = timeout_s * failures.astype(jnp.float32)
+    return extra, lost
 
 
 # ------------------------------------------------------------------ #
@@ -143,6 +159,73 @@ def stable_stats_device(plans: Sequence[TreePlan], seeds: Sequence[int],
         meta=_plan_meta(plans), n_messages=int(n_messages),
         n_fixed=int(np.asarray(plans[0].parent).shape[0]))
     return np.asarray(ldt), np.asarray(rel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "n_messages", "n_fixed",
+                                    "max_attempts"))
+def _stable_stats_loss(seeds, parents, depths, rate_s, straggler_frac,
+                       loss_rate, loss_timeout, *, meta, n_messages,
+                       n_fixed, max_attempts):
+    n = parents[0].shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    t0 = jnp.arange(n_messages) * rate_s
+    root0 = meta[0][0]
+
+    def one(seed):
+        base = jax.random.key(seed)
+        strag = _straggler_mask(base, ids < n_fixed, straggler_frac)
+        total = None
+        receipts = None
+        for parent, depth, (root, height, slot) in zip(parents, depths,
+                                                       meta):
+            fwd, link = _fwd_link_planes(base, slot, n_messages, n, strag)
+            extra, lost = _loss_planes(base, slot, n_messages, n,
+                                       loss_rate, loss_timeout,
+                                       max_attempts)
+            link = jnp.where(lost, jnp.nan, link + extra)
+            fp = fwd_at_parent(parent, fwd, root)
+            t = level_sweep_xla(parent, depth, fp, link,
+                                t0.astype(fwd.dtype),
+                                root=root, height=height)
+            r = (~jnp.isnan(t)) & (depth >= 1)[None, :]
+            receipts = r.astype(jnp.int32) if receipts is None \
+                else receipts + r
+            total = t if total is None else jnp.fmin(total, t)
+        valid = (ids != root0)[None, :] & ~jnp.isnan(total)
+        sub = total - t0[:, None].astype(total.dtype)
+        got = valid.any(axis=1)
+        ldt = jnp.max(jnp.where(valid, sub, -jnp.inf), axis=1)
+        ldt_mean = (jnp.where(got, ldt, 0.0).sum()
+                    / jnp.maximum(got.sum(), 1))
+        rel = valid.sum(axis=1) / (n - 1)
+        return ldt_mean, rel.mean(), receipts.sum(axis=1).mean()
+
+    return jax.vmap(one)(seeds)
+
+
+def stable_stats_device_loss(plans: Sequence[TreePlan],
+                             seeds: Sequence[int], n_messages: int,
+                             rate_s: float = 1.0, *, loss,
+                             straggler_frac: float = STRAGGLER_FRAC
+                             ) -> Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray]:
+    """Per-seed ``(mean LDT, mean reliability, mean DATA receipts per
+    message)`` of a stable sweep under §11 device-RNG edge loss.  A
+    separate entry point so the lossless :func:`stable_stats_device`
+    keeps its pinned outputs and jit cache untouched."""
+    ldt, rel, rec = _stable_stats_loss(
+        jnp.asarray(np.asarray(list(seeds), dtype=np.uint32)),
+        tuple(jnp.asarray(np.asarray(p.parent, dtype=np.int32))
+              for p in plans),
+        tuple(jnp.asarray(np.asarray(p.depth, dtype=np.int32))
+              for p in plans),
+        jnp.asarray(float(rate_s)), jnp.asarray(float(straggler_frac)),
+        jnp.asarray(float(loss.rate)), jnp.asarray(float(loss.timeout_s)),
+        meta=_plan_meta(plans), n_messages=int(n_messages),
+        n_fixed=int(np.asarray(plans[0].parent).shape[0]),
+        max_attempts=int(loss.max_attempts))
+    return np.asarray(ldt), np.asarray(rel), np.asarray(rec)
 
 
 @functools.partial(jax.jit,

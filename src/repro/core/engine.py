@@ -60,21 +60,42 @@ suite under both.
 """
 from __future__ import annotations
 
+import math
 import os
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
 from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .control import (ACK_B, UPDATE_FRAME_B, ControlParams, apply_control,
+                      repair_digest_epoch_bytes, repair_fetch_bytes,
                       snow_stable_control, snow_trace_control)
+from .faults import LossModel, RepairModel
 from .ids import NodeId
 from .messages import Data
 from .planner import (PRIMARY, SECONDARY, TreePlan, depth_levels,
                       plan_broadcast, plan_colored)
 from .sim import LatencyModel, Metrics, Sim, straggler_sample
+
+#: expected one-way link latency (lognormal mean) — the closed-form
+#: repair pass prices its digest/fetch round trips in these
+_MEAN_LINK_S = LatencyModel.median_s * math.exp(LatencyModel.sigma ** 2 / 2)
+#: digest request + response + fetch + payload: four link traversals
+FETCH_RTT_S = 4.0 * _MEAN_LINK_S
+
+
+def _repair_control_params(control: Optional[ControlParams],
+                           repair: Optional[RepairModel]
+                           ) -> Optional[ControlParams]:
+    """Repair replaces the plain anti-entropy cadence: when both are
+    configured, the §9 anti-entropy stream integrates at the repair
+    interval (the live tick does the SyncReq merge and the digest
+    exchange in one round)."""
+    if control is None or repair is None:
+        return control
+    return replace(control, anti_entropy_interval_s=repair.interval_s)
 
 
 def default_backend() -> str:
@@ -362,18 +383,55 @@ def reach_mask(plan: TreePlan, crashed: np.ndarray) -> np.ndarray:
 
 def broadcast_times(plans: Sequence[TreePlan], bank: DelayBank,
                     n_messages: int, rate_s: float = 1.0,
-                    backend: Optional[str] = None) -> np.ndarray:
+                    backend: Optional[str] = None,
+                    loss: Optional[LossModel] = None,
+                    with_receipts: bool = False):
     """(M, n) absolute first-delivery times for M broadcasts originating
-    at ``i * rate_s`` — the elementwise min over the plan set."""
+    at ``i * rate_s`` — the elementwise min over the plan set.
+
+    ``loss`` applies the §11 counter-RNG loss masks per tree: failed
+    attempts add their retransmit timeouts to the link plane, edges dead
+    after ``max_attempts`` go NaN, and the NaN rides the level sweep's
+    adds so the whole subtree goes dark on that tree — before the
+    coloring min, exactly like crash blackholing.  ``with_receipts``
+    additionally returns the (M, n) per-tree receipt counts (under loss
+    a tree only charges the nodes it actually reaches)."""
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
+    cols = np.arange(n_messages)
     total = None
+    receipts = None
     for plan in plans:
         s = _slot(plan.tree)
-        t = delivery_times(plan, bank.fwd_plane(s, n_messages),
-                           bank.link_plane(s, n_messages),
+        link = bank.link_plane(s, n_messages)
+        if loss is not None and loss.active:
+            link = loss.apply_to_links(link, cols, s, bank.members)
+        t = delivery_times(plan, bank.fwd_plane(s, n_messages), link,
                            t0=t0, backend=backend)
+        if with_receipts:
+            r = (~np.isnan(t)) & (np.asarray(plan.depth) >= 1)
+            receipts = r.astype(np.int64) if receipts is None \
+                else receipts + r
         total = t if total is None else np.fmin(total, t)
-    return total
+    return (total, receipts) if with_receipts else total
+
+
+def _repair_fill(total: np.ndarray, t0s: np.ndarray, members: np.ndarray,
+                 crashed_mask: Optional[np.ndarray], m: int, c: int,
+                 repair: RepairModel) -> Tuple[np.ndarray, np.ndarray]:
+    """Fill §11 closed-form repair times into a (M, n) delivery plane:
+    every alive node a broadcast missed (loss-darkened or crash-darkened
+    subtree) pulls the payload at its first digest tick after the miss.
+    Returns ``(times, missed)`` — the repaired plane and the (M, n) bool
+    mask of repaired slots (crashed nodes stay NaN: nothing repairs a
+    blackholed node, so reliability with repair is over the alive set)."""
+    alive = np.ones(members.shape[0], dtype=bool) if crashed_mask is None \
+        else ~crashed_mask
+    missed = np.isnan(total) & alive[None, :]
+    if missed.any():
+        t0s = np.asarray(t0s, dtype=np.float64)[:, None]
+        wait = repair.repair_wait(t0s, members, m, c, FETCH_RTT_S)
+        total = np.where(missed, t0s + wait, total)
+    return total, missed
 
 
 # ------------------------------------------------------------------ #
@@ -401,12 +459,16 @@ class ArrayMetrics(Metrics):
         #: ``receipts - delivered`` is the duplicate count
         self.receipts: Dict[int, np.ndarray] = {}
         self.frame_bytes: Dict[int, int] = {}       # wire size of one frame
+        #: per-message (n,) bool — nodes delivered by the §11 pull-repair
+        #: pass (they hold a time but no DATA receipt)
+        self.repaired: Dict[int, np.ndarray] = {}
 
     def record_message(self, mid: int, t0: float, src_index: int,
                        times: np.ndarray, nbytes: int,
                        members: Optional[np.ndarray] = None,
                        receipts: Optional[np.ndarray] = None,
-                       frame_bytes: Optional[int] = None) -> None:
+                       frame_bytes: Optional[int] = None,
+                       repaired: Optional[np.ndarray] = None) -> None:
         self.start[mid] = t0
         self.src_index[mid] = src_index
         self.times[mid] = times
@@ -417,6 +479,8 @@ class ArrayMetrics(Metrics):
             self.receipts[mid] = receipts
         if frame_bytes is not None:
             self.frame_bytes[mid] = frame_bytes
+        if repaired is not None:
+            self.repaired[mid] = repaired
 
     def times_for(self, mid: int) -> np.ndarray:
         return self.times[mid]
@@ -467,7 +531,11 @@ class ArrayMetrics(Metrics):
             else:
                 rsub = int(rec[mask].sum())
                 total = frame * rsub
-                dups = rsub - vals.size
+                # repair-delivered nodes hold a time without a DATA
+                # receipt — they are not duplicates of anything
+                rep = self.repaired.get(mid)
+                n_rep = int(rep[mask].sum()) if rep is not None else 0
+                dups = rsub - (vals.size - n_rep)
                 red = frame * dups
             rows.append({
                 "mid": mid,
@@ -510,6 +578,8 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
                           bank: Optional[DelayBank] = None,
                           plans: Optional[Tuple[TreePlan, ...]] = None,
                           control: Optional[ControlParams] = None,
+                          loss: Optional[LossModel] = None,
+                          repair: Optional[RepairModel] = None,
                           ) -> VectorCluster:
     """The stable scenario (§5.3) in closed form: no nodes, no events —
     plan once, sample the bank, one level-synchronous sweep for all
@@ -532,21 +602,46 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
         bank = bank_for_stable(seed, n, protocol, n_messages)
     if plans is None:
         plans = stable_plans(protocol, members, 0, k)
-    times = broadcast_times(plans, bank, n_messages, rate_s, backend)
-    nbytes = plan_bytes(plans, payload)
     frame = Data(0, 0, None, None, payload).size
-    # one receipt per node per tree that reaches it (uniform stable view:
-    # every tree reaches every non-root node) — coloring's second frame
-    # is the duplicate the event engine records per receipt
-    receipts = sum(np.asarray((np.asarray(p.depth) >= 1), dtype=np.int64)
-                   for p in plans)
+    lossy = loss is not None and loss.active
     metrics = ArrayMetrics(members)
-    for i in range(n_messages):
-        metrics.record_message(fresh_mid(), i * rate_s, 0, times[i], nbytes,
-                               receipts=receipts, frame_bytes=frame)
+    if not lossy:
+        times = broadcast_times(plans, bank, n_messages, rate_s, backend)
+        nbytes = plan_bytes(plans, payload)
+        # one receipt per node per tree that reaches it (uniform stable
+        # view: every tree reaches every non-root node) — coloring's
+        # second frame is the duplicate the event engine records
+        receipts = sum(np.asarray((np.asarray(p.depth) >= 1),
+                                  dtype=np.int64) for p in plans)
+        for i in range(n_messages):
+            metrics.record_message(fresh_mid(), i * rate_s, 0, times[i],
+                                   nbytes, receipts=receipts,
+                                   frame_bytes=frame)
+    else:
+        # under loss, receipts and bytes depend on which edges survived
+        times, rec = broadcast_times(plans, bank, n_messages, rate_s,
+                                     backend, loss=loss,
+                                     with_receipts=True)
+        repaired = None
+        if repair is not None:
+            times, repaired = _repair_fill(
+                times, np.arange(n_messages, dtype=np.float64) * rate_s,
+                members, None, n, 0, repair)
+        for i in range(n_messages):
+            metrics.record_message(
+                fresh_mid(), i * rate_s, 0, times[i],
+                frame * int(rec[i].sum()), receipts=rec[i],
+                frame_bytes=frame,
+                repaired=None if repaired is None else repaired[i])
     if control is not None:
+        params = _repair_control_params(control, repair)
         apply_control(metrics,
-                      snow_stable_control(n, n_messages * rate_s, control))
+                      snow_stable_control(n, n_messages * rate_s, params))
+        if repair is not None:
+            n_missed = float(sum(r.sum() for r in metrics.repaired.values()))
+            apply_control(metrics, {"repair": repair_digest_epoch_bytes(
+                n, 0, n_messages * rate_s, repair.interval_s)
+                + repair_fetch_bytes(n_missed, payload)})
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(n)), protocol=protocol,
                          k=k, plans=plans, bank=bank)
@@ -558,7 +653,9 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
                  plans: Optional[Tuple[TreePlan, ...]] = None,
                  payload: int = 64,
                  control: Optional[ControlParams] = None,
-                 engine: str = "host") -> List[dict]:
+                 engine: str = "host",
+                 loss: Optional[LossModel] = None,
+                 repair: Optional[RepairModel] = None) -> List[dict]:
     """Multi-seed stable-scenario sweep for the scale benchmarks.
 
     The plan set depends only on ``(members, root, k)`` and is reused
@@ -596,8 +693,16 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
     frame = Data(0, 0, None, None, payload).size
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
     duration = n_messages * rate_s
-    ctl = snow_stable_control(n, duration, control) if control else None
+    ctl = snow_stable_control(
+        n, duration, _repair_control_params(control, repair)) \
+        if control else None
     seeds = list(seeds)
+    lossy = loss is not None and loss.active
+    if lossy or repair is not None:
+        return _stable_sweep_faulty(
+            protocol, n, k, seeds, n_messages, rate_s, backend, plans,
+            payload, engine, loss if lossy else None, repair, nbytes,
+            frame, t0, duration, ctl, plan_s)
     if engine == "device":
         from .device_sweep import stable_stats_device
 
@@ -640,6 +745,110 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
     return rows
 
 
+def _stable_sweep_faulty(protocol, n, k, seeds, n_messages, rate_s,
+                         backend, plans, payload, engine, loss, repair,
+                         nbytes, frame, t0, duration, ctl,
+                         plan_s) -> List[dict]:
+    """The §11 loss/repair arm of :func:`stable_sweep` — separated so
+    the lossless sweep keeps its exact pre-existing float program.
+
+    Rows carry the sweep's standard schema plus ``n_repaired``,
+    ``rebroadcast_B`` (one full broadcast's bytes for every message
+    that missed ≥1 node — the reliable-epoch comparator) and, with
+    repair on, the closed-form ``repair_B``.  ``engine="device"``
+    supports loss (threefry masks, statistically pinned) but not
+    repair (the repair fill needs the full times plane on the host)."""
+    import time
+
+    def _finish(seed, i, ldt, rel, rmr, red, wall, extra):
+        row = {
+            "seed": int(seed), "n": n, "k": k,
+            "ldt": ldt,
+            "rmr": rmr,
+            "rmr_redundant": red,
+            "reliability": rel,
+            "n_messages": n_messages,
+            "wall_s": wall,
+            "plan_s": plan_s if i == 0 else 0.0,
+            "engine": engine,
+        }
+        if ctl is not None:
+            row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
+            row["duration_s"] = duration
+        row.update(extra)
+        if ctl is not None and "repair_B" in extra:
+            row["control_B"]["repair"] = float(extra["repair_B"])
+        return row
+
+    if engine == "device":
+        if repair is not None:
+            raise ValueError(
+                "repair sweeps require engine='host': the repair fill "
+                "needs the full delivery-time plane on the host")
+        from .device_sweep import stable_stats_device_loss
+
+        tw = time.time()
+        ldt_m, rel_m, rec_m = stable_stats_device_loss(
+            plans, seeds, n_messages, rate_s, loss=loss)
+        wall = (time.time() - tw) / max(1, len(seeds))
+        rows = []
+        for i, seed in enumerate(seeds):
+            delivered = float(rel_m[i]) * (n - 1)
+            # per-message miss detail stays on device; these rows exist
+            # for the statistical LDT/reliability pin, so no
+            # rebroadcast_B comparator here (host rows carry it)
+            rows.append(_finish(
+                seed, i, float(ldt_m[i]), float(rel_m[i]),
+                frame * float(rec_m[i]) / (n - 1),
+                frame * (float(rec_m[i]) - delivered) / (n - 1),
+                wall, {"n_repaired": 0}))
+        return rows
+
+    assert engine == "host", f"engine must be host|device, not {engine!r}"
+    members = np.arange(n)
+    rows = []
+    for i, seed in enumerate(seeds):
+        tw = time.time()
+        bank = bank_for_stable(seed, n, protocol, n_messages)
+        times, rec = broadcast_times(plans, bank, n_messages, rate_s,
+                                     backend, loss=loss,
+                                     with_receipts=True)
+        repaired = None
+        if repair is not None:
+            times, repaired = _repair_fill(times, t0, members, None,
+                                           n, 0, repair)
+            miss = repaired
+        else:
+            miss = np.isnan(times)
+            miss[:, 0] = False           # the root always holds the payload
+        sub = times[:, 1:] - t0[:, None]
+        cnt = (~np.isnan(sub)).sum(axis=1)
+        got = cnt > 0
+        ldt = np.full(n_messages, np.nan)
+        if got.any():
+            ldt[got] = np.nanmax(sub[got], axis=1)
+        rec_sub = rec[:, 1:].sum(axis=1)
+        push_cnt = cnt if repaired is None \
+            else cnt - repaired[:, 1:].sum(axis=1)
+        n_missed = int(miss.sum())
+        extra = {
+            "n_repaired": 0 if repaired is None else int(repaired.sum()),
+            "rebroadcast_B": float(nbytes * int(miss.any(axis=1).sum())),
+        }
+        if repair is not None:
+            extra["repair_B"] = float(
+                repair_digest_epoch_bytes(n, 0, duration,
+                                          repair.interval_s)
+                + repair_fetch_bytes(n_missed, payload))
+        rows.append(_finish(
+            seed, i, float(np.nanmean(ldt)),
+            float(cnt.mean()) / (n - 1),
+            frame * float(rec_sub.mean()) / (n - 1),
+            frame * float((rec_sub - push_cnt).mean()) / (n - 1),
+            time.time() - tw, extra))
+    return rows
+
+
 # ------------------------------------------------------------------ #
 # Epoch-segmented engine: churn & breakdown in closed form            #
 # ------------------------------------------------------------------ #
@@ -657,6 +866,7 @@ class _EpochPlan:
     src_index: int
     receipts: np.ndarray = None      #: (n_e,) frame receipts per member
     frame: int = 0                   #: wire size of one DATA frame
+    crashed_mask: Optional[np.ndarray] = None  #: (n_e,) bool; None=none
 
     @property
     def count(self) -> int:
@@ -695,38 +905,56 @@ def compile_trace(protocol: str, trace: ChurnTrace, k: int,
             first=ep.first, times=ep.times, plans=plans,
             reach=tuple(reach), nbytes=size * int(receipts.sum()),
             src_index=int(np.searchsorted(members, trace.src)),
-            receipts=receipts, frame=size))
+            receipts=receipts, frame=size, crashed_mask=cmask))
     return out
 
 
 def _epoch_times(ep: _EpochPlan, bank: DelayBank,
-                 backend: Optional[str]) -> np.ndarray:
+                 backend: Optional[str],
+                 loss: Optional[LossModel] = None,
+                 with_receipts: bool = False):
     """(m_e, n_e) first-delivery times of one epoch's broadcasts: the
     stable closed form over the epoch's plan set, restricted to the
     epoch's bank rows and message columns, with crashed subtrees NaN'd
     out per tree *before* the coloring min (a node unreachable on one
-    tree may still be delivered by the other)."""
+    tree may still be delivered by the other).
+
+    ``loss`` applies the §11 per-edge loss masks (keyed by the epoch's
+    absolute bank columns, so the draws match ``Network.send``'s);
+    ``with_receipts`` additionally returns the (m_e, n_e) realized
+    per-message receipt counts — under loss the precompiled
+    ``ep.receipts`` no longer holds, a tree only charges nodes its
+    surviving edges reach."""
     # one-shot gather of exactly the (rows × columns) block needed —
     # row-indexing first would copy the full message axis per epoch
     rows = ep.rows[:, None]
-    cols = np.arange(ep.first, ep.first + ep.count)[None, :]
+    cols = np.arange(ep.first, ep.first + ep.count)
     total = None
+    receipts = None
     for plan, ok in zip(ep.plans, ep.reach):
         s = _slot(plan.tree)
-        fwd = np.ascontiguousarray(bank.fwd[rows, cols, s].T)
-        link = np.ascontiguousarray(bank.link[rows, cols, s].T)
+        fwd = np.ascontiguousarray(bank.fwd[rows, cols[None, :], s].T)
+        link = np.ascontiguousarray(bank.link[rows, cols[None, :], s].T)
+        if loss is not None and loss.active:
+            link = loss.apply_to_links(link, cols, s, ep.members)
         t = delivery_times(plan, fwd, link, t0=ep.times, backend=backend)
         if ok is not None:
             t = np.where(ok, t, np.nan)
+        if with_receipts:
+            r = (~np.isnan(t)) & (np.asarray(plan.depth) >= 1)
+            receipts = r.astype(np.int64) if receipts is None \
+                else receipts + r
         total = t if total is None else np.fmin(total, t)
-    return total
+    return (total, receipts) if with_receipts else total
 
 
 def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                          seed: int = 0, payload: int = 64,
                          backend: Optional[str] = None,
                          bank: Optional[DelayBank] = None,
-                         control: Optional[ControlParams] = None
+                         control: Optional[ControlParams] = None,
+                         loss: Optional[LossModel] = None,
+                         repair: Optional[RepairModel] = None,
                          ) -> VectorCluster:
     """Replay a :class:`ChurnTrace` in closed form: one re-plan and one
     level-synchronous sweep per epoch, all of an epoch's broadcasts
@@ -743,7 +971,13 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
     ``control`` adds the §9 closed-form control bytes (SWIM +
     anti-entropy integrated per epoch span, one member-update
     announcement per effective trace event) to ``control_summary()``;
-    ``None`` accounts nothing, preserving engine-differential parity."""
+    ``None`` accounts nothing, preserving engine-differential parity.
+
+    ``loss``/``repair`` enable the §11 fault and pull-repair closed
+    forms: loss darkens subtrees per tree (NaN through the level
+    sweep), repair fills alive-but-missed nodes with their first
+    digest-tick-plus-fetch time.  Crashed members stay NaN — nothing
+    repairs a blackholed node."""
     from .messages import fresh_mid
 
     assert protocol in ("snow", "coloring"), \
@@ -753,17 +987,52 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
         bank = bank_for_trace(seed, trace, protocol)
     epochs = compile_trace(protocol, trace, k, bank.members, payload)
     metrics = ArrayMetrics(bank.members)
+    lossy = loss is not None and loss.active
     all_plans: List[TreePlan] = []
+    n_missed = 0
     for ep in epochs:
-        total = _epoch_times(ep, bank, backend)
-        for j in range(ep.count):
-            metrics.record_message(fresh_mid(), float(ep.times[j]),
-                                   ep.src_index, total[j], ep.nbytes,
-                                   members=ep.members, receipts=ep.receipts,
-                                   frame_bytes=ep.frame)
+        if not lossy and repair is None:
+            total = _epoch_times(ep, bank, backend)
+            for j in range(ep.count):
+                metrics.record_message(fresh_mid(), float(ep.times[j]),
+                                       ep.src_index, total[j], ep.nbytes,
+                                       members=ep.members,
+                                       receipts=ep.receipts,
+                                       frame_bytes=ep.frame)
+        else:
+            total, rec = _epoch_times(ep, bank, backend, loss=loss,
+                                      with_receipts=True)
+            repaired = None
+            if repair is not None:
+                m_e = ep.members.shape[0]
+                c_e = 0 if ep.crashed_mask is None \
+                    else int(ep.crashed_mask.sum())
+                total, repaired = _repair_fill(
+                    total, ep.times, ep.members, ep.crashed_mask,
+                    m_e, c_e, repair)
+                n_missed += int(repaired.sum())
+            for j in range(ep.count):
+                metrics.record_message(
+                    fresh_mid(), float(ep.times[j]), ep.src_index,
+                    total[j], ep.frame * int(rec[j].sum()),
+                    members=ep.members, receipts=rec[j],
+                    frame_bytes=ep.frame,
+                    repaired=None if repaired is None else repaired[j])
         all_plans.extend(ep.plans)
     if control is not None:
-        apply_control(metrics, snow_trace_control(trace, params=control))
+        params = _repair_control_params(control, repair)
+        apply_control(metrics, snow_trace_control(trace, params=params))
+        if repair is not None:
+            spans = trace.epoch_spans()
+            dur = float(spans[-1][1] - spans[0][0]) if spans else 0.0
+            c_mean = float(np.mean(
+                [0 if ep.crashed_mask is None else int(ep.crashed_mask.sum())
+                 for ep in epochs])) if epochs else 0.0
+            m_mean = float(np.mean(
+                [ep.members.shape[0] for ep in epochs])) if epochs else 0.0
+            apply_control(metrics, {"repair": repair_digest_epoch_bytes(
+                m_mean, c_mean, dur, repair.interval_s)
+                + repair_fetch_bytes(n_missed, payload)})
     return VectorCluster(sim=Sim(seed=seed), net=None, metrics=metrics,
                          nodes={}, fixed=list(range(trace.n)),
                          protocol=protocol, k=k, plans=tuple(all_plans),
@@ -775,11 +1044,15 @@ def run_churn_vectorized(protocol: str, n: int = 500, k: int = 4,
                          seed: int = 0, payload: int = 64,
                          churn_every: int = 10,
                          backend: Optional[str] = None,
-                         trace: Optional[ChurnTrace] = None) -> VectorCluster:
+                         trace: Optional[ChurnTrace] = None,
+                         loss: Optional[LossModel] = None,
+                         repair: Optional[RepairModel] = None
+                         ) -> VectorCluster:
     """§5.4 churn in closed form (paper cadence unless ``trace`` given)."""
     if trace is None:
         trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
-    return run_trace_vectorized(protocol, trace, k, seed, payload, backend)
+    return run_trace_vectorized(protocol, trace, k, seed, payload, backend,
+                                loss=loss, repair=repair)
 
 
 def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
@@ -788,14 +1061,17 @@ def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
                              crash_every: int = 10,
                              detect_after: Optional[float] = 2.5,
                              backend: Optional[str] = None,
-                             trace: Optional[ChurnTrace] = None
+                             trace: Optional[ChurnTrace] = None,
+                             loss: Optional[LossModel] = None,
+                             repair: Optional[RepairModel] = None
                              ) -> VectorCluster:
     """§5.5 breakdown in closed form: silent crashes blackhole subtrees
     until the ``detect_after`` eviction surrogate re-plans them away."""
     if trace is None:
         trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
                                       crash_every, detect_after=detect_after)
-    return run_trace_vectorized(protocol, trace, k, seed, payload, backend)
+    return run_trace_vectorized(protocol, trace, k, seed, payload, backend,
+                                loss=loss, repair=repair)
 
 
 # ------------------------------------------------------------------ #
@@ -1065,7 +1341,9 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 payload: int = 64,
                 epochs: Optional[List[_EpochPlan]] = None,
                 control: Optional[ControlParams] = None,
-                engine: str = "host") -> List[dict]:
+                engine: str = "host",
+                loss: Optional[LossModel] = None,
+                repair: Optional[RepairModel] = None) -> List[dict]:
     """Multi-seed churn/breakdown sweep for the scale benchmarks.
 
     Epoch plans depend only on the trace and are compiled once; each
@@ -1088,24 +1366,41 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
     under ``control_B``, with the integration window in ``duration_s``.
     The one-time ``plan_s`` compile cost is attributed to the first row
     only, so summed wall-time reports count it once.
+
+    ``loss``/``repair`` run the §11 fault + pull-repair closed forms
+    (host engine only — the device path's delay-independent byte/reach
+    shortcut does not hold once loss darkens edges).  Rows then carry
+    three extra keys: ``n_repaired`` (pull-repaired deliveries over the
+    whole trace), ``repair_B`` (closed-form repair bytes: digest cadence
+    + realized fetches), and ``rebroadcast_B`` (the comparator — one
+    full reliable-epoch rebroadcast for every broadcast that missed at
+    least one node).  Reliability under repair is over the alive fixed
+    subset (crashed members cannot be repaired).
     """
     import time
 
     backend = _resolve_backend(backend)
+    lossy = loss is not None and loss.active
+    if (lossy or repair is not None) and engine == "device":
+        raise ValueError(
+            "loss/repair sweeps require engine='host': the device path's "
+            "delay-independent reach shortcut breaks under edge loss")
     bank_members = trace.all_ids()
     plan_s = 0.0
     if epochs is None:
         tp = time.time()
         epochs = compile_trace(protocol, trace, k, bank_members, payload)
         plan_s = time.time() - tp
-    ctl = snow_trace_control(trace, params=control) if control else None
+    ctl = snow_trace_control(
+        trace, params=_repair_control_params(control, repair)) \
+        if control else None
     spans = trace.epoch_spans()
     trace_duration = float(spans[-1][1] - spans[0][0]) if spans else 0.0
     fixed_sel = [(ep.members < trace.n) & (ep.members != trace.src)
                  for ep in epochs]
     seeds = list(seeds)
 
-    def _finish(seed, i, ldt, rmr, red, rel, wall):
+    def _finish(seed, i, ldt, rmr, red, rel, wall, extra=None):
         row = {
             "seed": int(seed), "n": trace.n, "k": k,
             "ldt": ldt, "rmr": rmr, "rmr_redundant": red,
@@ -1119,6 +1414,10 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         if ctl is not None:
             row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
             row["duration_s"] = trace_duration
+        if extra:
+            row.update(extra)
+            if ctl is not None and "repair_B" in extra:
+                row["control_B"]["repair"] = float(extra["repair_B"])
         return row
 
     if engine == "device":
@@ -1150,6 +1449,7 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 for i, seed in enumerate(seeds)]
 
     assert engine == "host", f"engine must be host|device, not {engine!r}"
+    faulty = lossy or repair is not None
     rows = []
     for i, seed in enumerate(seeds):
         tw = time.time()
@@ -1158,27 +1458,78 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         rels: List[np.ndarray] = []
         rmrs: List[float] = []
         reds: List[np.ndarray] = []
+        n_repaired = 0
+        n_missed = 0
+        rebroadcast_B = 0.0
         for ep, sel in zip(epochs, fixed_sel):
-            total = _epoch_times(ep, bank, backend)
-            sub = total[:, sel] - ep.times[:, None]
+            rec = repaired = None
+            if not faulty:
+                total = _epoch_times(ep, bank, backend)
+            else:
+                total, rec = _epoch_times(ep, bank, backend, loss=loss,
+                                          with_receipts=True)
+                alive = np.ones(ep.members.shape[0], dtype=bool) \
+                    if ep.crashed_mask is None else ~ep.crashed_mask
+                if repair is not None:
+                    m_e = ep.members.shape[0]
+                    c_e = int(np.count_nonzero(~alive))
+                    total, repaired = _repair_fill(
+                        total, ep.times, ep.members, ep.crashed_mask,
+                        m_e, c_e, repair)
+                    miss = repaired
+                    n_repaired += int(repaired.sum())
+                else:
+                    miss = np.isnan(total) & alive[None, :]
+                n_missed += int(miss.sum())
+                rebroadcast_B += float(
+                    ep.nbytes * int(miss.any(axis=1).sum()))
+            # §11 semantics: with repair on, reliability is over the
+            # alive fixed subset — crashed members cannot be repaired
+            basis = sel if (repaired is None or ep.crashed_mask is None) \
+                else (sel & ~ep.crashed_mask)
+            sub = total[:, basis] - ep.times[:, None]
             cnt = (~np.isnan(sub)).sum(axis=1)
             ldt = np.full(ep.count, np.nan)
             got = cnt > 0
             if got.any():
                 ldt[got] = np.nanmax(sub[got], axis=1)
-            n_int = int(sel.sum())
+            n_int = int(basis.sum())
+            ldts.append(ldt)
+            rels.append(cnt / max(1, n_int))
             # §5.4 subset semantics: bytes attributed to the metered
             # population only — frames received BY subset members — not
             # whole-cluster bytes over the subset denominator
-            rec_sub = int(ep.receipts[sel].sum())
-            ldts.append(ldt)
-            rels.append(cnt / max(1, n_int))
-            rmrs.extend([ep.frame * rec_sub / max(1, n_int)] * ep.count)
-            reds.append(ep.frame * (rec_sub - cnt) / max(1, n_int))
+            if rec is None:
+                rec_sub = int(ep.receipts[sel].sum())
+                rmrs.extend([ep.frame * rec_sub / max(1, n_int)] * ep.count)
+                reds.append(ep.frame * (rec_sub - cnt) / max(1, n_int))
+            else:
+                rec_sub = rec[:, basis].sum(axis=1)
+                push_cnt = cnt if repaired is None \
+                    else cnt - repaired[:, basis].sum(axis=1)
+                rmrs.extend((ep.frame * rec_sub / max(1, n_int)).tolist())
+                reds.append(ep.frame * (rec_sub - push_cnt)
+                            / max(1, n_int))
         ldt_all = np.concatenate(ldts)
         rel_all = np.concatenate(rels)
         red_all = np.concatenate(reds)
+        extra = None
+        if faulty:
+            extra = {"n_repaired": n_repaired,
+                     "rebroadcast_B": rebroadcast_B}
+            if repair is not None:
+                c_mean = float(np.mean(
+                    [0 if ep.crashed_mask is None
+                     else int(ep.crashed_mask.sum()) for ep in epochs]))
+                m_mean = float(np.mean(
+                    [ep.members.shape[0] for ep in epochs]))
+                extra["repair_B"] = float(
+                    repair_digest_epoch_bytes(m_mean, c_mean,
+                                              trace_duration,
+                                              repair.interval_s)
+                    + repair_fetch_bytes(n_missed, payload))
         rows.append(_finish(seed, i, float(np.nanmean(ldt_all)),
                             float(np.mean(rmrs)), float(red_all.mean()),
-                            float(rel_all.mean()), time.time() - tw))
+                            float(rel_all.mean()), time.time() - tw,
+                            extra))
     return rows

@@ -22,12 +22,14 @@ Engine routing (per cell)
       ``view_model="stale"`` →
       :func:`repro.core.engine.run_trace_stale_vectorized` (divergent
       views, shared precompiled epoch plans across seeds).
-* ``gossip``: events below ``events_max_n`` (or on request), else the
-  closed-form :func:`repro.core.baselines.gossip_sweep` (stable only —
-  dynamic-membership gossip cells beyond the cap are recorded as
+* ``gossip`` / ``plumtree``: events below ``events_max_n`` (or on
+  request), else the closed forms
+  :func:`repro.core.baselines.gossip_sweep` /
+  :func:`repro.core.baselines.plumtree_sweep` (stable only —
+  dynamic-membership baseline cells beyond the cap are recorded as
   skipped, not silently dropped).
-* ``plumtree`` / ``flooding``: events only (no closed form exists);
-  cells beyond ``events_max_n`` are recorded as skipped.
+* ``flooding``: events only (no closed form exists); cells beyond
+  ``events_max_n`` are recorded as skipped.
 
 Metrics populated per row: seed-averaged LDT (ms, with a ci95 column),
 RMR and its payload/redundant split (bytes/node/message), worst-case
@@ -59,7 +61,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from .baselines import gossip_sweep
+from .baselines import gossip_sweep, plumtree_sweep
 from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .control import ControlParams, gossip_control
 from .scenarios import run_breakdown, run_churn, run_stable, summarize
@@ -336,23 +338,25 @@ def route(spec: ExperimentSpec, cell: Cell) -> str:
       (which is capped at ``events_max_n`` like every events cell);
       ``engine="device"`` selects the device-resident fused sweep
       inside the closed-form path (``_closed_form_cell``);
-    * gossip: its closed form exists for the stable scene only —
-      used beyond the cap or on ``engine="vectorized"``; it has no
-      device expression, so ``engine="device"`` is an explicit skip;
-    * plumtree/flooding (and dynamic-membership gossip): events only.
+    * gossip/plumtree: their closed forms exist for the stable scene
+      only — used beyond the cap or on ``engine="vectorized"``; they
+      have no device expression, so ``engine="device"`` is an explicit
+      skip;
+    * flooding (and dynamic-membership baselines): events only.
 
-    Returns ``"closed-form" | "gossip-closed-form" | "events"``, or
-    ``"skipped:<reason>"`` when no engine can serve the cell.
+    Returns ``"closed-form" | "gossip-closed-form" |
+    "plumtree-closed-form" | "events"``, or ``"skipped:<reason>"``
+    when no engine can serve the cell.
     """
     if cell.protocol in CLOSED_FORM:
         if cell.engine != "events":
             return "closed-form"
     elif cell.engine == "device":
         return f"skipped:no device engine for {cell.protocol}"
-    elif cell.protocol == "gossip" and cell.scene == "stable":
+    elif cell.protocol in ("gossip", "plumtree") and cell.scene == "stable":
         if cell.engine == "vectorized" or (cell.engine == "auto"
                                            and cell.n > spec.events_max_n):
-            return "gossip-closed-form"
+            return f"{cell.protocol}-closed-form"
     elif cell.engine == "vectorized":
         return (f"skipped:no closed form for {cell.protocol}/"
                 f"{cell.scene}")
@@ -376,15 +380,15 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> dict:
         per_seed, ctl = _events_cell(spec, cell, trace)
         return _reduce(cell, spec, "events", per_seed, ctl, duration,
                        _events_horizon_s(spec, cell, trace))
-    if r == "gossip-closed-form":
+    if r in ("gossip-closed-form", "plumtree-closed-form"):
         params = ControlParams() if spec.control else None
-        rows = gossip_sweep(cell.n, cell.k, spec.seeds,
-                            n_messages=spec.n_messages,
-                            payload=cell.payload, rate_s=spec.rate_s,
-                            control=params)
+        sweep = gossip_sweep if r == "gossip-closed-form" else plumtree_sweep
+        rows = sweep(cell.n, cell.k, spec.seeds,
+                     n_messages=spec.n_messages,
+                     payload=cell.payload, rate_s=spec.rate_s,
+                     control=params)
         ctl = rows[0].get("control_B") if spec.control else None
-        return _reduce(cell, spec, "gossip-closed-form", rows, ctl,
-                       duration)
+        return _reduce(cell, spec, r, rows, ctl, duration)
     per_seed, ctl, used = _closed_form_cell(spec, cell, trace)
     return _reduce(cell, spec, used, per_seed, ctl, duration)
 

@@ -1,0 +1,208 @@
+"""Seedable fault injection and pull-repair models (DESIGN.md §11).
+
+Two dataclasses shared by both engines:
+
+* :class:`LossModel` — per-link Bernoulli message loss with
+  timeout-and-retransmit recovery.  Every (message, destination,
+  attempt) triple maps to one counter-RNG uniform via a splitmix64
+  avalanche hash, evaluated scalar-at-a-time by ``Network.send`` and as
+  whole ``(attempts, messages, nodes)`` planes by the closed-form
+  engine — so both engines see the *same* failed attempts on the same
+  edges.  A sender retries a lost frame after ``timeout_s``; after
+  ``max_attempts`` consecutive losses the edge is dead for that message
+  and (in tree protocols) the destination's whole subtree goes dark.
+  The closed form expresses this as ``link += failures * timeout_s``
+  with NaN on dead edges — NaN then propagates down the level sweep
+  exactly like crash blackholing.
+
+* :class:`RepairModel` — the pull/anti-entropy data-repair pass: each
+  node's anti-entropy tick grows a mid-digest exchange so nodes that
+  missed a broadcast fetch it from a random alive peer.  The closed
+  form prices per-node repair time as the first digest tick after the
+  miss (per-node deterministic phase, drawn from the same hash family)
+  plus a dead-peer geometric retry correction plus the fetch RTT.
+
+Loss applies to application DATA frames only (``Data`` without a
+member update, and ``GossipData``): control traffic — SWIM probes,
+membership announcements, anti-entropy, digests — is small and rides
+reliable transport in the modeled deployment.  Repair frames are
+likewise lossless, which is what lets repair guarantee convergence.
+
+Everything is deterministic in ``(seed, message column, tree slot,
+destination, attempt)``; no state is kept between draws.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple, Union
+
+import numpy as np
+
+_U64 = np.uint64
+
+#: stream tags — keep loss draws and repair phases on disjoint streams
+_LOSS_STREAM = 0x10551055
+_PHASE_STREAM = 0x9E9A9E9A
+
+#: odd Weyl constants folding each key component into the 64-bit counter
+_C_COL = 0x9E3779B97F4A7C15
+_C_SLOT = 0xD1342543DE82EF95
+_C_NODE = 0xC2B2AE3D27D4EB4F
+_C_ATTEMPT = 0x165667B19E3779F9
+
+
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """The splitmix64 finalizer — full-avalanche 64-bit hash, identical
+    scalar and vectorized (uint64 arithmetic wraps; the wrap is the
+    point, so the overflow warning is silenced)."""
+    with np.errstate(over="ignore"):
+        z = (x + _U64(0x9E3779B97F4A7C15)).astype(_U64)
+        z = (z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)
+        return z ^ (z >> _U64(31))
+
+
+def _splitmix64_int(x: int) -> int:
+    """Pure-Python twin of :func:`_splitmix64` — bit-identical, no array
+    allocation; the event loop's per-send path."""
+    z = (x + 0x9E3779B97F4A7C15) & _MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return z ^ (z >> 31)
+
+
+def _uniform01(z: np.ndarray) -> np.ndarray:
+    """Top 53 bits → float64 uniform in [0, 1)."""
+    return (z >> _U64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def _stream(seed: int, tag: int) -> np.uint64:
+    return _splitmix64(_U64((seed ^ tag) & 0xFFFFFFFFFFFFFFFF))
+
+
+@dataclass(frozen=True)
+class LossModel:
+    """Per-link Bernoulli loss with timeout + geometric retransmit.
+
+    ``rate`` — per-transmission loss probability; ``timeout_s`` — sender
+    retransmit timeout (each failed attempt adds one timeout to the
+    edge's effective latency); ``max_attempts`` — transmissions before
+    the sender gives up (the edge is then *lost*: expected residual loss
+    per edge is ``rate ** max_attempts``)."""
+
+    rate: float = 0.0
+    timeout_s: float = 0.25
+    max_attempts: int = 4
+    seed: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.rate > 0.0
+
+    def edge_faults(self, cols: np.ndarray, slot: int,
+                    nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized draws for a ``(messages, nodes)`` plane.
+
+        ``cols`` — (M,) bank column of each message; ``nodes`` — (N,)
+        destination ids.  Returns ``(extra, lost)``: (M, N) float64
+        retransmit delay (failures × timeout) and (M, N) bool mask of
+        edges dead after ``max_attempts`` losses."""
+        h = _stream(self.seed, _LOSS_STREAM)
+        a = np.arange(self.max_attempts, dtype=np.int64)
+        with np.errstate(over="ignore"):
+            ctr = (h
+                   + _U64(_C_COL) * cols.astype(_U64)[None, :, None]
+                   + _U64(_C_SLOT) * _U64(slot)
+                   + _U64(_C_NODE) * nodes.astype(_U64)[None, None, :]
+                   + _U64(_C_ATTEMPT) * a.astype(_U64)[:, None, None])
+        u = _uniform01(_splitmix64(ctr))          # (A, M, N)
+        fail = u < self.rate
+        ok = ~fail
+        lost = ~ok.any(axis=0)
+        failures = np.where(lost, self.max_attempts, np.argmax(ok, axis=0))
+        extra = self.timeout_s * failures.astype(np.float64)
+        return extra, lost
+
+    def edge_fault(self, col: int, slot: int,
+                   node: Union[int, np.integer]) -> Tuple[float, bool]:
+        """Scalar view of :meth:`edge_faults` for the event loop: the
+        retransmit delay and lost flag of one (message, dst) edge.
+        Pure-Python hashing, bit-identical to the vectorized planes
+        (asserted in ``tests/test_repair.py``)."""
+        base = (int(_stream(self.seed, _LOSS_STREAM))
+                + _C_COL * int(col) + _C_SLOT * int(slot)
+                + _C_NODE * int(node)) & _MASK64
+        for a in range(self.max_attempts):
+            z = _splitmix64_int((base + _C_ATTEMPT * a) & _MASK64)
+            if (z >> 11) * (2.0 ** -53) >= self.rate:
+                return self.timeout_s * a, False
+        return self.timeout_s * self.max_attempts, True
+
+    def apply_to_links(self, link: np.ndarray, cols: np.ndarray,
+                       slot: int, nodes: np.ndarray) -> np.ndarray:
+        """The closed-form transformation: effective link latency with
+        retransmit delay added and lost edges NaN'd (NaN then blackholes
+        the subtree through the level sweep's adds)."""
+        extra, lost = self.edge_faults(cols, slot, nodes)
+        eff = link + extra
+        eff[lost] = np.nan
+        return eff
+
+
+@dataclass(frozen=True)
+class RepairModel:
+    """Pull/anti-entropy data repair (the hybrid push-pull pass).
+
+    Every node runs a digest exchange with one random alive view peer
+    each ``interval_s`` (replacing the plain anti-entropy cadence when
+    enabled): peers swap bitmaps of recently delivered mids older than
+    ``min_age_s`` (younger frames may still be in flight on the push
+    path), the initiator fetches what it missed, and the peer answers
+    with the cached payload.  ``window`` bounds the digest bitmap and
+    the per-node payload cache.  Per-node tick phases are deterministic
+    in ``(seed, node)`` so the closed form reproduces the live loop's
+    first-tick-after-miss timing exactly."""
+
+    interval_s: float = 5.0
+    min_age_s: float = 3.0
+    window: int = 64
+    seed: int = 0
+
+    def phases(self, nodes: np.ndarray) -> np.ndarray:
+        """(N,) deterministic first-tick offset in [0, interval_s)."""
+        h = _stream(self.seed, _PHASE_STREAM)
+        with np.errstate(over="ignore"):
+            z = _splitmix64(h
+                            + _U64(_C_NODE) * np.asarray(nodes).astype(_U64))
+        return _uniform01(z) * self.interval_s
+
+    def phase(self, node: Union[int, np.integer]) -> float:
+        return float(self.phases(np.asarray([int(node)]))[0])
+
+    def repair_wait(self, t0: Union[float, np.ndarray], nodes: np.ndarray,
+                    m: int, c: int, fetch_rtt_s: float) -> np.ndarray:
+        """Expected time from broadcast origination ``t0`` until a node
+        that missed it holds the payload, per node (closed form):
+
+        * wait for the node's first digest tick at or after
+          ``t0 + min_age_s`` (before that the peer's digest excludes the
+          mid as possibly-in-flight),
+        * plus a geometric dead-peer correction — a tick that picks one
+          of the ``c`` crashed members of the ``m``-strong view repairs
+          nothing and costs a full interval,
+        * plus ``fetch_rtt_s`` — digest request/response + fetch +
+          payload, four control-plane link traversals.
+        """
+        T = self.interval_s
+        phase = self.phases(nodes)
+        w = np.mod(phase - np.asarray(t0, dtype=np.float64), T)
+        w = np.where(w >= self.min_age_s, w, w + T)
+        p_dead = min(1.0, c / max(1, m - 1))
+        if p_dead < 1.0:
+            w = w + T * p_dead / (1.0 - p_dead)
+        else:
+            w = np.full_like(w, np.inf)
+        return w + fetch_rtt_s

@@ -138,10 +138,54 @@ class Probe:
 
 @dataclass(frozen=True)
 class SyncReq:
-    """Anti-entropy pull request / response (§4.5.1)."""
+    """Anti-entropy pull request / response (§4.5.1).
+
+    ``n_entries`` is the number of membership entries actually carried —
+    since the delta-sizing fix this is the symmetric difference the
+    exchange moves (steady state: 0 entries, a 2 B header ping), not the
+    full view."""
 
     n_entries: int
 
     @property
     def size(self) -> int:
         return _TYPE_BYTES + self.n_entries * ENDPOINT_BYTES
+
+
+@dataclass(frozen=True)
+class MidDigest:
+    """Pull-repair digest (DESIGN.md §11): a bitmap of recently
+    delivered message ids — one anchor mid plus ``window`` bits.  Sent
+    as the repair request and its response (``reply`` disambiguates)."""
+
+    mids: Tuple[int, ...]
+    window: int = 64
+    reply: bool = False
+
+    @property
+    def size(self) -> int:
+        return _TYPE_BYTES + MSG_ID_BYTES + self.window // 8
+
+
+@dataclass(frozen=True)
+class MidFetch:
+    """Pull-repair fetch: request one missed message id's payload."""
+
+    mid: int
+
+    @property
+    def size(self) -> int:
+        return _TYPE_BYTES + MSG_ID_BYTES
+
+
+@dataclass(frozen=True)
+class RepairData:
+    """Pull-repair payload response: the cached broadcast content
+    re-served point-to-point (no boundaries — it is not re-forwarded)."""
+
+    mid: int
+    payload: int = DEFAULT_PAYLOAD
+
+    @property
+    def size(self) -> int:
+        return _TYPE_BYTES + MSG_ID_BYTES + self.payload

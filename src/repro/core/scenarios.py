@@ -93,6 +93,8 @@ def build_cluster(
     payload: int = 64,
     share_view: bool = False,
     delay_bank=None,
+    loss=None,
+    repair=None,
 ) -> Cluster:
     """``share_view=True`` hands every node the *same* MembershipView
     instance — valid only for membership-static (stable) runs, where it
@@ -102,13 +104,21 @@ def build_cluster(
     ``delay_bank`` (a :class:`repro.core.engine.DelayBank`) replaces live
     RNG draws for forwarding delays and broadcast link latencies with
     pre-sampled per-(node, message, tree) arrays — the same arrays the
-    closed-form engine reduces, so the two engines agree bit-for-bit."""
+    closed-form engine reduces, so the two engines agree bit-for-bit.
+
+    ``loss`` (a :class:`repro.core.faults.LossModel`) injects per-link
+    Bernoulli DATA loss in :meth:`Network.send`; ``repair`` (a
+    :class:`repro.core.faults.RepairModel`) arms the §11 pull-repair
+    digest exchange on every Snow node (it rides — and repaces — the
+    anti-entropy tick, so it implies the tick even when
+    ``enable_anti_entropy`` is off)."""
     assert protocol in PROTOCOLS, protocol
     assert not (share_view and (enable_swim or enable_anti_entropy)), \
         "share_view is only sound when no one mutates membership"
     sim = Sim(seed=seed)
     metrics = Metrics()
-    net = Network(sim, metrics, LatencyModel(), delay_bank=delay_bank)
+    net = Network(sim, metrics, LatencyModel(), delay_bank=delay_bank,
+                  loss=loss)
     rng = random.Random(seed ^ 0x5EED)
     ids = list(range(n))
     shared = MembershipView.from_sorted(ids) if share_view else None
@@ -121,7 +131,8 @@ def build_cluster(
         if protocol in ("snow", "coloring"):
             nodes[i] = SnowNode(i, sim, net, metrics, mkview(), k,
                                 profiles[i], enable_swim=enable_swim,
-                                enable_anti_entropy=enable_anti_entropy)
+                                enable_anti_entropy=enable_anti_entropy,
+                                repair=repair)
         elif protocol == "gossip":
             nodes[i] = GossipNode(i, sim, net, metrics, mkview(),
                                   k, profiles[i])
@@ -154,11 +165,19 @@ def _schedule_broadcasts(cluster: Cluster, trace: ChurnTrace,
         cluster.sim.at(tm, originate)
 
 
+def _repair_drain(repair) -> float:
+    """Extra drain so the LAST broadcasts' pull repairs land before the
+    horizon: one full digest interval past the min-age gate plus one
+    more for a dead-peer retry."""
+    return 0.0 if repair is None else 2 * repair.interval_s + repair.min_age_s
+
+
 def run_stable(protocol: str, n: int = 500, k: int = 4,
                n_messages: int = 100, rate_s: float = 1.0,
                seed: int = 0, payload: int = 64,
                share_view: bool = False, engine: str = "auto",
-               backend: Optional[str] = None, control=None) -> Cluster:
+               backend: Optional[str] = None, control=None,
+               loss=None, repair=None) -> Cluster:
     """§5.3 stable scenario.
 
     Engine routing: ``"vectorized"`` evaluates delivery times in closed
@@ -187,7 +206,8 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
 
         return run_stable_vectorized(protocol, n, k, n_messages, rate_s,
                                      seed, payload, backend=backend,
-                                     control=control)
+                                     control=control, loss=loss,
+                                     repair=repair)
     bank = None
     if closed_form:
         from .engine import bank_for_stable
@@ -196,11 +216,12 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
     live_control = control is not None and closed_form
     c = build_cluster(protocol, n, k, seed, share_view=share_view,
                       delay_bank=bank, enable_swim=live_control,
-                      enable_anti_entropy=live_control)
+                      enable_anti_entropy=live_control,
+                      loss=loss, repair=repair)
     src = 0
     for i in range(n_messages):
         c.sim.at(i * rate_s, lambda: c.broadcast_from(src, payload))
-    c.sim.run(until=n_messages * rate_s + 15.0)
+    c.sim.run(until=n_messages * rate_s + 15.0 + _repair_drain(repair))
     return c
 
 
@@ -210,7 +231,8 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
               churn_every: int = 10, engine: str = "auto",
               backend: Optional[str] = None,
               trace: Optional[ChurnTrace] = None,
-              view_model: str = "oracle", control=None) -> Cluster:
+              view_model: str = "oracle", control=None,
+              loss=None, repair=None) -> Cluster:
     """§5.4: while messages flow, one fresh node joins every
     ``churn_every`` messages and gracefully leaves ``churn_every``
     messages later.  Metrics are evaluated over the fixed n nodes only.
@@ -248,15 +270,19 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
         from .engine import run_trace_stale_vectorized, run_trace_vectorized
 
         if view_model == "stale":
+            assert loss is None and repair is None, \
+                "loss/repair run through the oracle vectorized route"
             return run_trace_stale_vectorized(protocol, trace, k, seed,
                                               payload, backend,
                                               control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend, control=control)
+                                    backend, control=control,
+                                    loss=loss, repair=repair)
     c = build_cluster(protocol, n, k, seed,
                       enable_anti_entropy=(protocol in ("snow", "coloring")),
                       enable_swim=(control is not None
-                                   and protocol in ("snow", "coloring")))
+                                   and protocol in ("snow", "coloring")),
+                      loss=loss, repair=repair)
     rng = random.Random(seed ^ 0xC0FFEE)
 
     def protocol_join(nid: int) -> None:
@@ -264,7 +290,7 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
         if c.protocol in ("snow", "coloring"):
             node = SnowNode(nid, c.sim, c.net, c.metrics,
                             MembershipView([nid]), k, prof,
-                            enable_anti_entropy=True)
+                            enable_anti_entropy=True, repair=repair)
             seed_node = c.nodes[rng.choice(c.fixed)]
             node.join_via(seed_node)
         elif c.protocol == "gossip":
@@ -297,7 +323,8 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
     _schedule_trace(c, trace, {"join": protocol_join,
                                "leave": protocol_leave})
     _schedule_broadcasts(c, trace, payload)
-    c.sim.run(until=trace.msg_times[-1] + rate_s + 15.0)
+    c.sim.run(until=trace.msg_times[-1] + rate_s + 15.0
+              + _repair_drain(repair))
     return c
 
 
@@ -307,7 +334,8 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
                   crash_every: int = 10, reliable: bool = False,
                   engine: str = "auto", backend: Optional[str] = None,
                   trace: Optional[ChurnTrace] = None,
-                  view_model: str = "oracle", control=None) -> Cluster:
+                  view_model: str = "oracle", control=None,
+                  loss=None, repair=None) -> Cluster:
     """§5.5: every ``crash_every`` messages a random fixed node silently
     crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
     evicted within seconds; other nodes' views keep the dead node, which
@@ -334,26 +362,32 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
         from .engine import run_trace_stale_vectorized, run_trace_vectorized
 
         if view_model == "stale":
+            assert loss is None and repair is None, \
+                "loss/repair run through the oracle vectorized route"
             return run_trace_stale_vectorized(protocol, trace, k, seed,
                                               payload, backend,
                                               control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend, control=control)
+                                    backend, control=control,
+                                    loss=loss, repair=repair)
     c = build_cluster(protocol, n, k, seed,
-                      enable_swim=(protocol in ("snow", "coloring")))
+                      enable_swim=(protocol in ("snow", "coloring")),
+                      loss=loss, repair=repair)
 
     def silent_crash(nid: int) -> None:
         c.net.crash(nid)
 
     _schedule_trace(c, trace, {"crash": silent_crash})
     _schedule_broadcasts(c, trace, payload, reliable=reliable)
-    c.sim.run(until=trace.msg_times[-1] + rate_s - 0.02 + 15.0)
+    c.sim.run(until=trace.msg_times[-1] + rate_s - 0.02 + 15.0
+              + _repair_drain(repair))
     return c
 
 
 def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
                       seed: int = 0, payload: int = 64,
-                      drain_s: float = 20.0) -> Cluster:
+                      drain_s: float = 20.0,
+                      loss=None, repair=None) -> Cluster:
     """Oracle-membership event loop over a :class:`ChurnTrace`: every
     event is applied synchronously to ONE shared view (join inserts,
     leave/evict remove, crash blackholes via the network), so all nodes
@@ -369,12 +403,12 @@ def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
 
     bank = bank_for_trace(seed, trace, protocol)
     c = build_cluster(protocol, trace.n, k, seed, share_view=True,
-                      delay_bank=bank)
+                      delay_bank=bank, loss=loss, repair=repair)
     view = c.nodes[trace.src].view      # THE shared view instance
 
     def oracle_join(nid: int) -> None:
         node = SnowNode(nid, c.sim, c.net, c.metrics, view, k,
-                        NodeProfile())
+                        NodeProfile(), repair=repair)
         c.nodes[nid] = node
         view.add(nid)
 
@@ -392,7 +426,7 @@ def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
                                "crash": oracle_crash,
                                "evict": oracle_evict})
     _schedule_broadcasts(c, trace, payload)
-    c.sim.run(until=trace.horizon() + drain_s)
+    c.sim.run(until=trace.horizon() + drain_s + _repair_drain(repair))
     return c
 
 

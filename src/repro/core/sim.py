@@ -24,7 +24,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .ids import NodeId
-from .messages import Ack, Data, Graft, IHave, Probe, Prune, SyncReq
+from .messages import (Ack, Data, Graft, GossipData, IHave, MidDigest,
+                       MidFetch, Probe, Prune, RepairData, SyncReq)
 
 
 class Sim:
@@ -123,7 +124,9 @@ class Metrics:
     * ``anti_entropy``  — periodic full-view SyncReq merges,
     * ``plumtree``      — IHAVE / GRAFT / PRUNE tree-repair frames,
     * ``ack``           — Reliable-Message ACKs of application
-      broadcasts.
+      broadcasts,
+    * ``repair``        — pull-repair digest / fetch / payload frames
+      (DESIGN.md §11; present only when a RepairModel is enabled).
 
     The closed-form engines populate the same counters from the §9
     expected-traffic formulas (:mod:`repro.core.control`), so
@@ -133,7 +136,7 @@ class Metrics:
 
     #: control-traffic categories, in reporting order
     CONTROL_KINDS = ("swim", "member_update", "anti_entropy", "plumtree",
-                     "ack", "view_gossip")
+                     "ack", "view_gossip", "repair")
 
     def __init__(self) -> None:
         self.start: Dict[int, float] = {}
@@ -168,6 +171,8 @@ class Metrics:
             return "anti_entropy"
         if isinstance(msg, (IHave, Graft, Prune)):
             return "plumtree"
+        if isinstance(msg, (MidDigest, MidFetch, RepairData)):
+            return "repair"
         if isinstance(msg, Ack):
             return "member_update" if msg.mid in self.control_mids else "ack"
         if isinstance(msg, Data) and msg.update is not None:
@@ -294,7 +299,7 @@ class Network:
 
     def __init__(self, sim: Sim, metrics: Metrics,
                  latency: Optional[LatencyModel] = None,
-                 delay_bank=None):
+                 delay_bank=None, loss=None):
         self.sim = sim
         self.metrics = metrics
         self.latency = latency or LatencyModel()
@@ -303,6 +308,13 @@ class Network:
         #: per-(dst, message, tree) arrays instead of the live RNG, making
         #: the event loop bit-exact against the closed-form engine.
         self.delay_bank = delay_bank
+        #: optional :class:`repro.core.faults.LossModel` — per-link
+        #: Bernoulli loss on application DATA frames, drawn from the
+        #: same counter RNG the closed-form loss masks use (DESIGN §11)
+        self.loss = loss
+        #: message-id → loss column when no bank assigns columns (live
+        #: baseline runs): first-send order, same as the bank's rule
+        self._loss_cols: Dict[int, int] = {}
         self.nodes: Dict[NodeId, "NodeBase"] = {}
         self.crashed: Set[NodeId] = set()
         self.departed: Set[NodeId] = set()
@@ -336,17 +348,55 @@ class Network:
             return
         if dst not in self.nodes:
             return
-        self.sends += 1
-        self.bytes_total += msg.size
+        extra, lost, attempts = 0.0, False, 1
+        if self.loss is not None and self.loss.active \
+                and isinstance(msg, (Data, GossipData)) \
+                and getattr(msg, "update", None) is None:
+            extra, lost = self._loss_fault(dst, msg)
+            # failed attempts each paid a timeout; a surviving frame
+            # adds its one successful transmission on top
+            attempts = round(extra / self.loss.timeout_s) + (0 if lost else 1)
+        # every retransmission re-pays the frame on the wire (transmit
+        # accounting); receipt-side metrics see only the surviving copy
+        self.sends += attempts
+        self.bytes_total += msg.size * attempts
         kind = self.metrics.control_kind(msg)
         if kind is not None:
-            self.metrics.add_control(kind, msg.size)
+            self.metrics.add_control(kind, msg.size * attempts,
+                                     frames=attempts)
+        if lost:
+            return
         delay = None
         if self.delay_bank is not None:
             delay = self.delay_bank.link_for(dst, msg)
         if delay is None:
             delay = self.latency.sample(self.sim.rng)
-        self.sim.after(delay, lambda: self._deliver(src, dst, msg))
+        self.sim.after(extra + delay, lambda: self._deliver(src, dst, msg))
+
+    def _loss_fault(self, dst: NodeId, msg) -> Tuple[float, bool]:
+        """(retransmit delay, permanently lost) for one DATA send.
+
+        First-epoch frames draw from the counter RNG keyed by (message
+        column, tree slot, dst) — the exact draws the closed-form loss
+        masks evaluate as planes.  Reliable-retry frames (epoch > 0, not
+        modeled in closed form) draw fresh Bernoulli trials from the sim
+        RNG so a rebroadcast can heal an edge the first epoch lost."""
+        if getattr(msg, "epoch", 0) == 0:
+            if self.delay_bank is not None:
+                col = self.delay_bank.column(msg.mid)
+            else:
+                col = self._loss_cols.setdefault(msg.mid,
+                                                 len(self._loss_cols))
+            if col is not None:
+                tree = getattr(msg, "tree", None)
+                return self.loss.edge_fault(col, 1 if tree == 1 else 0,
+                                            dst)
+        failures = 0
+        while failures < self.loss.max_attempts \
+                and self.sim.rng.random() < self.loss.rate:
+            failures += 1
+        return (self.loss.timeout_s * failures,
+                failures >= self.loss.max_attempts)
 
     def _deliver(self, src: NodeId, dst: NodeId, msg) -> None:
         if not self.alive(dst):

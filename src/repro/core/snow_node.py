@@ -16,14 +16,17 @@ Implements, per the paper:
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from .coloring import (PRIMARY, SECONDARY, find_children_colored,
                        secondary_root, secondary_root_boundaries)
+from .faults import RepairModel
 from .ids import NodeId
 from .membership import MembershipView
-from .messages import (Ack, Data, MemberUpdate, Probe, SyncReq, fresh_mid)
+from .messages import (Ack, Data, MemberUpdate, MidDigest, MidFetch, Probe,
+                       RepairData, SyncReq, fresh_mid)
 from .regions import find_children, leaf_assignment
 from .sim import Metrics, Network, NodeBase, Sim
 
@@ -58,6 +61,7 @@ class SnowNode(NodeBase):
         anti_entropy_interval: float = 15.0,
         enable_swim: bool = False,
         enable_anti_entropy: bool = False,
+        repair: Optional[RepairModel] = None,
     ):
         super().__init__(node_id, sim, net, profile)
         self.metrics = metrics
@@ -68,7 +72,18 @@ class SnowNode(NodeBase):
         self.probe_interval = probe_interval
         self.probe_timeout = probe_timeout
         self.indirect_probes = indirect_probes
+        #: §11 pull repair rides the anti-entropy tick: when configured
+        #: it forces the tick on, pins the cadence to its interval, and
+        #: replaces the random stagger with the model's deterministic
+        #: per-node phase — so the closed form reproduces the live
+        #: first-tick-after-miss timing exactly
+        self.repair = repair
+        if repair is not None:
+            anti_entropy_interval = repair.interval_s
         self.anti_entropy_interval = anti_entropy_interval
+        #: recently delivered data-plane payloads serving repair fetches:
+        #: mid -> (payload bytes, delivery time), capped at the window
+        self._recent: "OrderedDict[int, Tuple[int, float]]" = OrderedDict()
 
         self.delivered: Set[int] = set()
         self.forwarded: Set[Tuple[int, Optional[int]]] = set()
@@ -88,8 +103,10 @@ class SnowNode(NodeBase):
 
         if enable_swim:
             self.sim.after(self.rng.uniform(0, probe_interval), self._probe_tick)
-        if enable_anti_entropy:
-            self.sim.after(self.rng.uniform(0, anti_entropy_interval), self._anti_entropy_tick)
+        if enable_anti_entropy or repair is not None:
+            first = repair.phase(node_id) if repair is not None \
+                else self.rng.uniform(0, anti_entropy_interval)
+            self.sim.after(first, self._anti_entropy_tick)
 
     # ------------------------------------------------------------------ #
     # Broadcast origination                                               #
@@ -100,6 +117,8 @@ class SnowNode(NodeBase):
         """Originate a broadcast; returns the message id."""
         mid = fresh_mid()
         self.delivered.add(mid)
+        if update is None:
+            self._remember(mid, payload)
         if update is not None:
             # a member-update broadcast is control-plane traffic: mark
             # the mid before the first send so every DATA frame and ACK
@@ -153,6 +172,12 @@ class SnowNode(NodeBase):
             self._on_ack(src, msg)
         elif isinstance(msg, Probe):
             self._on_probe(src, msg)
+        elif isinstance(msg, MidDigest):
+            self._on_mid_digest(src, msg)
+        elif isinstance(msg, MidFetch):
+            self._on_mid_fetch(src, msg)
+        elif isinstance(msg, RepairData):
+            self._on_repair_data(src, msg)
         elif isinstance(msg, SyncReq):
             pass  # anti-entropy handled via _anti_entropy_tick state pulls
 
@@ -167,6 +192,8 @@ class SnowNode(NodeBase):
             self.metrics.delivered(msg.mid, self.id, self.sim.now)
             if msg.update is not None:
                 self._apply_update(msg.update)
+            else:
+                self._remember(msg.mid, msg.payload)
         key = (msg.mid, msg.tree, msg.epoch)
         if key in self.forwarded:
             return  # duplicate receipt on this tree/epoch
@@ -346,6 +373,48 @@ class SnowNode(NodeBase):
                 self.send(r, Probe("probe_ack", p.subject))
 
     # ------------------------------------------------------------------ #
+    # Pull repair (DESIGN.md §11)                                         #
+    # ------------------------------------------------------------------ #
+    def _remember(self, mid: int, payload: int) -> None:
+        """Cache a delivered data-plane payload for repair fetches."""
+        if self.repair is None:
+            return
+        self._recent[mid] = (payload, self.sim.now)
+        self._recent.move_to_end(mid)
+        while len(self._recent) > self.repair.window:
+            self._recent.popitem(last=False)
+
+    def _digest_mids(self) -> Tuple[int, ...]:
+        """Recently delivered mids old enough to advertise: younger than
+        ``min_age_s`` a frame may still be in flight on the push path and
+        advertising it would trigger fetches that race the tree."""
+        cutoff = self.sim.now - self.repair.min_age_s
+        return tuple(mid for mid, (_, t) in self._recent.items()
+                     if t <= cutoff)
+
+    def _on_mid_digest(self, src: NodeId, d: MidDigest) -> None:
+        if self.repair is None:
+            return
+        if not d.reply:
+            self.send(src, MidDigest(self._digest_mids(),
+                                     self.repair.window, reply=True))
+        else:
+            for mid in d.mids:
+                if mid not in self.delivered:
+                    self.send(src, MidFetch(mid))
+
+    def _on_mid_fetch(self, src: NodeId, f: MidFetch) -> None:
+        ent = self._recent.get(f.mid)
+        if ent is not None:
+            self.send(src, RepairData(f.mid, ent[0]))
+
+    def _on_repair_data(self, src: NodeId, r: RepairData) -> None:
+        if r.mid not in self.delivered:
+            self.delivered.add(r.mid)
+            self.metrics.delivered(r.mid, self.id, self.sim.now)
+            self._remember(r.mid, r.payload)
+
+    # ------------------------------------------------------------------ #
     # Anti-entropy (§4.5.1)                                               #
     # ------------------------------------------------------------------ #
     def _anti_entropy_tick(self) -> None:
@@ -359,11 +428,23 @@ class SnowNode(NodeBase):
                     break
             peer = self.net.nodes.get(target)
             if peer is not None and self.net.alive(target) and isinstance(peer, SnowNode):
-                # model: request + response, then merge both directions
-                self.net.send(self.id, target, SyncReq(len(self.view)))
-                self.net.send(target, self.id, SyncReq(len(peer.view)))
+                # model: request + response, then merge both directions.
+                # Each frame is sized by the entries it actually moves —
+                # the member/tombstone differences in its direction — so
+                # agreeing views exchange two 2 B header pings
+                mine, theirs = set(self.view), set(peer.view)
+                tmine = self.view.tombstones()
+                ttheirs = peer.view.tombstones()
+                self.net.send(self.id, target, SyncReq(
+                    len(mine - theirs) + len(tmine - ttheirs)))
+                self.net.send(target, self.id, SyncReq(
+                    len(theirs - mine) + len(ttheirs - tmine)))
                 merged = self.view.copy()
                 merged.merge(peer.view)
                 self.view.merge(peer.view)
                 peer.view.merge(merged)
+                if self.repair is not None:
+                    # kick the one-directional digest exchange: request
+                    # the peer's recent-mid bitmap, fetch what we missed
+                    self.send(target, MidDigest((), self.repair.window))
         self.sim.after(self.anti_entropy_interval, self._anti_entropy_tick)

@@ -63,11 +63,26 @@ def test_changed_spec_under_same_name_raises(tmp_path):
 
 
 def test_events_only_protocol_beyond_cap_is_skipped():
-    spec = ExperimentSpec(name="cap", protocols=("plumtree",),
+    spec = ExperimentSpec(name="cap", protocols=("flooding",),
                           scenes=("stable",), ns=(5000,), seeds=(0,),
                           n_messages=2, events_max_n=1000)
     row = run_cell(spec, spec.cells()[0])
     assert "skipped" in row and "events_max_n" in row["skipped"]
+
+
+def test_plumtree_routes_closed_form_beyond_cap():
+    spec = ExperimentSpec(name="plm", protocols=("plumtree",),
+                          scenes=("stable",), ns=(5000,), seeds=(0,),
+                          n_messages=2, events_max_n=1000)
+    row = run_cell(spec, spec.cells()[0])
+    assert row["engine_used"] == "plumtree-closed-form"
+    assert row["reliability"] > 0.99
+    # converged-tree data plane: the redundancy floor is the warming-up
+    # duplicate mass (~(k-1) frames/node) amortized over n_messages=2,
+    # under gossip's every-message duplicate floor of the same shape
+    assert 0.0 < row["redundant_B"] < 122.0 * 3 / 2
+    assert row["redundant_B"] < row["rmr_B"]
+    assert row["control_B"]["plumtree"] > 0.0
 
 
 def test_gossip_routes_closed_form_beyond_cap():
@@ -97,13 +112,17 @@ def test_route_decision_table():
         == "gossip-closed-form"
     assert route(spec, cell(protocol="gossip",
                             engine="vectorized")) == "gossip-closed-form"
+    assert route(spec, cell(protocol="plumtree",
+                            engine="vectorized")) == "plumtree-closed-form"
+    assert route(spec, cell(protocol="plumtree", n=5000)) \
+        == "plumtree-closed-form"
     # a vectorized request no engine can serve is an explicit skip,
     # not a silent events fallback
-    assert route(spec, cell(protocol="plumtree",
+    assert route(spec, cell(protocol="flooding",
                             engine="vectorized")).startswith("skipped:")
     assert route(spec, cell(protocol="gossip", scene="churn",
                             engine="vectorized")).startswith("skipped:")
-    assert route(spec, cell(protocol="plumtree", n=5000)) \
+    assert route(spec, cell(protocol="flooding", n=5000)) \
         .startswith("skipped:")
 
 
