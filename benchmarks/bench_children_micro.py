@@ -91,6 +91,30 @@ def seed_find_children(view: MembershipView, self_id: NodeId,
 
 
 # --------------------------------------------------------------------- #
+def _latency_sample_us(samples: int = 50_000) -> float:
+    """Amortized cost of ``LatencyModel.sample`` on the event-loop hot
+    path.  The model refills in blocks of 4096 via one vectorized
+    lognormal (module-level numpy import — the refill body must stay off
+    the per-call path), so the per-call mean must remain sub-microsecond
+    scale; the assert guards against the refill cost leaking back into
+    every call."""
+    import random
+
+    from repro.core.sim import LatencyModel
+
+    lat = LatencyModel()
+    rng = random.Random(0)
+    lat.sample(rng)                                  # first refill
+    t0 = time.perf_counter()
+    for _ in range(samples):
+        lat.sample(rng)
+    per_call_us = (time.perf_counter() - t0) / samples * 1e6
+    assert per_call_us < 5.0, (
+        f"LatencyModel.sample {per_call_us:.2f} us/call — block refill "
+        f"is no longer amortized")
+    return per_call_us
+
+
 def _tree_hops(n: int, k: int):
     """All (self, lb, rb) hop inputs of one broadcast, root included."""
     t = trace_broadcast(0, MembershipView.from_sorted(range(n)), k)
@@ -154,10 +178,14 @@ def run(n: int = 1500, k: int = 4, reps: int = 5):
 
 def main(smoke: bool = False):
     r = run(n=600 if smoke else 1500, reps=2 if smoke else 5)
+    r["latency_sample_us"] = _latency_sample_us(
+        samples=10_000 if smoke else 50_000)
     if not smoke:  # smoke runs must not clobber the tracked trajectory
         RESULTS.parent.mkdir(parents=True, exist_ok=True)
         RESULTS.write_text(json.dumps(r, indent=2) + "\n")
     return [
+        f"LatencyModel.sample (hot path, refill amortized): "
+        f"{r['latency_sample_us']:.3f} us/call",
         f"n={r['n']} k={r['k']} internal hops={r['hops']} height={r['height']}",
         f"full-ring hop (region = n): seed {r['seed_fullring_hop_us']:7.2f} us"
         f" -> index {r['index_fullring_hop_us']:6.2f} us"

@@ -1,0 +1,151 @@
+"""Locality-aware planning at scale (``locality_scale``, DESIGN.md §12.3).
+
+Under the hierarchical cloud fabric the id-sorted ring scatters every
+subtree across regions (cloud schedulers hash instances over racks), so
+almost every tree edge is a cross-region link.  Sorting the planning
+ring by (region, zone, rack, id) aligns subtree boundaries with zone
+boundaries at zero protocol cost — same balance invariant, same
+delivery guarantee — and moves the byte bill down the tier table.
+
+Full mode sweeps ``n ∈ {50k, 500k, 1M}``, uniform vs locality rings,
+through the host closed-form engine on one shared
+:class:`~repro.core.topology.HierarchicalLatency` fabric and commits
+the rows (LDT, reliability, per-tier byte split) to
+``results/locality_scale.json``.
+
+Smoke mode re-runs the 50k pair with the committed seeds and exports
+for ``run.py --check``:
+
+* ``locality_ldt_ms`` / ``uniform_ldt_ms`` — seeded drift band;
+* ``locality_ldt_drift`` — relative drift vs the committed 50k row
+  (absolute ≤ 10% band);
+* ``locality_cross_region_B`` / ``uniform_cross_region_B`` — checked
+  strictly ``locality < uniform``;
+* ``locality_reliability`` — generic reliability floor;
+* ``locality_committed_ok`` — 1.0 iff the committed file holds all
+  three n's and every pair shows fewer cross-region bytes under the
+  locality ring at reliability 1.0.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:
+    import _bootstrap  # noqa: F401  (direct execution)
+except ImportError:
+    from benchmarks import _bootstrap  # noqa: F401  (package import)
+
+from repro.core.engine import stable_sweep
+from repro.core.specs import NetworkSpec, RunSpec
+from repro.core.topology import TIER_NAMES, HierarchicalLatency, Topology
+
+RESULTS = Path(__file__).parent / "results" / "locality_scale.json"
+
+NS = (50_000, 500_000, 1_000_000)
+SEEDS = (0, 1)
+N_MESSAGES = 3
+K = 4
+
+#: metrics of the last smoke invocation, read by ``run.py --check``
+LAST_SMOKE = {}
+
+
+def _fabric(n: int) -> HierarchicalLatency:
+    return HierarchicalLatency(Topology(n, seed=0))
+
+
+def run_pair(n: int) -> dict:
+    """One uniform-vs-locality row pair on the shared fabric at ``n``."""
+    hier = _fabric(n)
+    out = {"n": n, "k": K, "seeds": list(SEEDS), "n_messages": N_MESSAGES}
+    for name, locality in (("uniform", "uniform"), ("locality", "zone")):
+        net = NetworkSpec(latency=hier, locality=locality)
+        t0 = time.time()
+        rows = stable_sweep("snow", n, K, SEEDS, n_messages=N_MESSAGES,
+                            net=net, run=RunSpec(engine="host",
+                                                 backend="numpy"))
+        side = {
+            "ldt_ms": float(np.mean([r["ldt"] for r in rows])) * 1000.0,
+            "reliability": min(r["reliability"] for r in rows),
+            "wall_s": time.time() - t0,
+        }
+        for t in TIER_NAMES:
+            side[f"{t}_B"] = rows[0][f"{t}_B"]   # seed-independent split
+        out[name] = side
+    u, l = out["uniform"], out["locality"]
+    out["cross_region_reduction"] = (u["cross_region_B"]
+                                     / max(l["cross_region_B"], 1e-9))
+    return out
+
+
+def committed_gates() -> float:
+    """1.0 iff the committed file carries every n with the acceptance
+    properties (locality strictly cheaper cross-region, reliability 1)."""
+    if not RESULTS.exists():
+        return 0.0
+    rows = {r["n"]: r for r in json.loads(RESULTS.read_text())["rows"]}
+    for n in NS:
+        r = rows.get(n)
+        if r is None:
+            return 0.0
+        if not (r["locality"]["cross_region_B"]
+                < r["uniform"]["cross_region_B"]):
+            return 0.0
+        if r["locality"]["reliability"] != 1.0 \
+                or r["uniform"]["reliability"] != 1.0:
+            return 0.0
+    return 1.0
+
+
+def _fmt(r: dict) -> list:
+    lines = [f"n={r['n']:>9,}  cross-region bytes "
+             f"{r['uniform']['cross_region_B']:.3e} -> "
+             f"{r['locality']['cross_region_B']:.3e} "
+             f"({r['cross_region_reduction']:.1f}x less)  "
+             f"LDT {r['uniform']['ldt_ms']:.0f} -> "
+             f"{r['locality']['ldt_ms']:.0f} ms  "
+             f"rel {r['locality']['reliability']:.3f}"]
+    return lines
+
+
+def main(smoke: bool = False):
+    global LAST_SMOKE
+    if smoke:
+        r = run_pair(NS[0])
+        committed_ldt = None
+        if RESULTS.exists():
+            rows = {x["n"]: x for x in
+                    json.loads(RESULTS.read_text())["rows"]}
+            if NS[0] in rows:
+                committed_ldt = rows[NS[0]]["locality"]["ldt_ms"]
+        drift = (abs(r["locality"]["ldt_ms"] - committed_ldt) / committed_ldt
+                 if committed_ldt else 0.0)
+        LAST_SMOKE = {
+            "locality_ldt_ms": r["locality"]["ldt_ms"],
+            "uniform_ldt_ms": r["uniform"]["ldt_ms"],
+            "locality_ldt_drift": drift,
+            "locality_cross_region_B": r["locality"]["cross_region_B"],
+            "uniform_cross_region_B": r["uniform"]["cross_region_B"],
+            "locality_reliability": r["locality"]["reliability"],
+            "locality_committed_ok": committed_gates(),
+        }
+        return _fmt(r) + [
+            f"drift vs committed 50k row: {drift:.1%}",
+            f"committed gates (all n, locality < uniform, rel 1.0): "
+            f"{'ok' if LAST_SMOKE['locality_committed_ok'] else 'MISSING'}",
+        ]
+    rows = [run_pair(n) for n in NS]
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(
+        {"k": K, "seeds": list(SEEDS), "n_messages": N_MESSAGES,
+         "rtt_s": list(_fabric(NS[0]).rtt_s), "rows": rows},
+        indent=2) + "\n")
+    out = ["-- locality-aware ring vs uniform (host closed form) --"]
+    for r in rows:
+        out += _fmt(r)
+    out.append(f"(json: {RESULTS})")
+    return out

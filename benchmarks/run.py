@@ -26,6 +26,7 @@ SECTION_MODULES = {
     "device_scale": "bench_device",
     "fanout_k_fig6b": "bench_fanout_k",
     "paper_repro": "paper_repro",
+    "locality_scale": "bench_locality",
     "children_micro": "bench_children_micro",
     "collectives": "bench_collectives",
     "kernels": "bench_kernels",
@@ -64,7 +65,9 @@ MAX_REPAIR_REBROADCAST_RATIO = 1.0
 # device-engine bands (device_scale smoke): the counter-RNG device path
 # is statistically pinned, not bit-exact — its seeded mean-LDT drift vs
 # the host DelayBank oracle may not exceed this, and the committed
-# device_scale trajectory (speedup at 1M, completed 10M row) must hold
+# device_scale trajectory (speedup at 1M, completed 10M row) must hold.
+# The locality_scale smoke's drift vs its committed 50k row rides the
+# same *ldt_drift band.
 MAX_DEVICE_LDT_DRIFT = 0.10
 
 
@@ -184,9 +187,20 @@ def _check(sections, metrics) -> list:
             elif key.endswith("committed_ok"):
                 if mval < 1.0:
                     problems.append(
-                        f"{name}: {key} {mval} — committed device_scale "
-                        f"section is missing its acceptance rows (run "
-                        f"`run.py --only device_scale` to refresh)")
+                        f"{name}: {key} {mval} — the committed results "
+                        f"for this section are missing their acceptance "
+                        f"rows (run `run.py --only {name}` to refresh)")
+            elif key.endswith("cross_region_B"):
+                # §12.3 band: the locality ring must strictly beat the
+                # uniform ring on the expensive tier (same smoke run, so
+                # the comparison is baseline-independent)
+                if key.startswith("locality"):
+                    uni = m.get("uniform_cross_region_B")
+                    if uni is not None and mval >= uni:
+                        problems.append(
+                            f"{name}: locality_cross_region_B {mval:.3e} "
+                            f">= uniform {uni:.3e} — the locality ring "
+                            f"stopped reducing cross-region traffic")
             elif key.endswith("redundant_B"):
                 # absolute redundancy bands (baseline-independent):
                 # snow's stable redundant bytes are structurally zero,
@@ -232,7 +246,7 @@ def main(argv=None) -> None:
         # protocol-layer sections only; the jax kernel/roofline benches
         # have their own timings and dominate smoke wall-time
         names = ["scale_n_fig6a", "device_scale", "paper_repro",
-                 "children_micro"]
+                 "locality_scale", "children_micro"]
     else:
         names = list(SECTIONS)
 

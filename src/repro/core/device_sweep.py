@@ -140,24 +140,73 @@ def _stable_stats(seeds, parents, depths, rate_s, straggler_frac, *,
     return jax.vmap(one)(seeds)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "n_messages", "n_fixed"))
+def _stable_stats_hier(seeds, parents, depths, scales, rate_s,
+                       straggler_frac, *, meta, n_messages, n_fixed):
+    """The :func:`_stable_stats` body with a per-node tier-scale multiply
+    fused after the threefry link generation — a separate jitted entry so
+    the flat sweep keeps its compiled program and cache untouched."""
+    n = parents[0].shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    t0 = jnp.arange(n_messages) * rate_s
+    root0 = meta[0][0]
+
+    def one(seed):
+        base = jax.random.key(seed)
+        strag = _straggler_mask(base, ids < n_fixed, straggler_frac)
+        total = None
+        for parent, depth, scale, (root, height, slot) in zip(
+                parents, depths, scales, meta):
+            fwd, link = _fwd_link_planes(base, slot, n_messages, n, strag)
+            link = link * scale[None, :]
+            fp = fwd_at_parent(parent, fwd, root)
+            t = level_sweep_xla(parent, depth, fp, link,
+                                t0.astype(fwd.dtype),
+                                root=root, height=height)
+            total = t if total is None else jnp.fmin(total, t)
+        valid = (ids != root0)[None, :] & ~jnp.isnan(total)
+        sub = total - t0[:, None].astype(total.dtype)
+        ldt = jnp.max(jnp.where(valid, sub, -jnp.inf), axis=1)
+        rel = valid.sum(axis=1) / (n - 1)
+        return ldt.mean(), rel.mean()
+
+    return jax.vmap(one)(seeds)
+
+
 def stable_stats_device(plans: Sequence[TreePlan], seeds: Sequence[int],
                         n_messages: int, rate_s: float = 1.0,
-                        straggler_frac: float = STRAGGLER_FRAC
-                        ) -> Tuple[np.ndarray, np.ndarray]:
+                        straggler_frac: float = STRAGGLER_FRAC,
+                        hier=None) -> Tuple[np.ndarray, np.ndarray]:
     """Per-seed ``(mean LDT, mean reliability)`` of a stable multi-seed
     sweep, all seeds × messages × trees fused into one device dispatch.
     The jit cache key is ``(plan shapes, (root, height, slot) tuple,
     n_messages, seed count)`` — re-running with the same shapes reuses
-    the compilation."""
-    ldt, rel = _stable_stats(
+    the compilation.
+
+    ``hier`` (a :class:`~repro.core.topology.HierarchicalLatency`)
+    multiplies each plan's link plane by its per-node tier factor
+    (``hier.scale_plane``, computed host-side — integer coordinate
+    hashing — and fused into the device program as one broadcast
+    multiply after the threefry link generation)."""
+    args = (
         jnp.asarray(np.asarray(list(seeds), dtype=np.uint32)),
         tuple(jnp.asarray(np.asarray(p.parent, dtype=np.int32))
               for p in plans),
         tuple(jnp.asarray(np.asarray(p.depth, dtype=np.int32))
-              for p in plans),
-        jnp.asarray(float(rate_s)), jnp.asarray(float(straggler_frac)),
-        meta=_plan_meta(plans), n_messages=int(n_messages),
-        n_fixed=int(np.asarray(plans[0].parent).shape[0]))
+              for p in plans))
+    kw = dict(meta=_plan_meta(plans), n_messages=int(n_messages),
+              n_fixed=int(np.asarray(plans[0].parent).shape[0]))
+    if hier is None:
+        ldt, rel = _stable_stats(
+            *args, jnp.asarray(float(rate_s)),
+            jnp.asarray(float(straggler_frac)), **kw)
+    else:
+        scales = tuple(jnp.asarray(hier.scale_plane(p).astype(np.float32))
+                       for p in plans)
+        ldt, rel = _stable_stats_hier(
+            *args, scales, jnp.asarray(float(rate_s)),
+            jnp.asarray(float(straggler_frac)), **kw)
     return np.asarray(ldt), np.asarray(rel)
 
 

@@ -78,6 +78,8 @@ from .messages import Data
 from .planner import (PRIMARY, SECONDARY, TreePlan, depth_levels,
                       plan_broadcast, plan_colored)
 from .sim import LatencyModel, Metrics, Sim, straggler_sample
+from .specs import NetworkSpec, RunSpec, resolve_specs
+from .topology import TIER_NAMES, HierarchicalLatency
 
 #: expected one-way link latency (lognormal mean) — the closed-form
 #: repair pass prices its digest/fetch round trips in these
@@ -216,6 +218,18 @@ class DelayBank:
             return None
         return float(self.link[i, col, s])
 
+    def rows_for(self, members: np.ndarray) -> Optional[np.ndarray]:
+        """Bank row of every entry of a (possibly permuted) member
+        array, or None when ``members`` already IS the bank order — the
+        locality-plan gather.  The None fast path keeps the default
+        (sorted-ring) float program untouched: no gather, no copy."""
+        if members is self.members:
+            return None
+        if members.shape == self.members.shape \
+                and np.array_equal(members, self.members):
+            return None
+        return np.searchsorted(self.members, members)
+
     # -- plane views (closed-form side) -----------------------------------
     def fwd_plane(self, slot: int, n_messages: Optional[int] = None):
         """(M, n) forwarding delays for one tree slot."""
@@ -229,21 +243,26 @@ class DelayBank:
 
 def bank_for_stable(seed: int, n: int, protocol: str, n_messages: int,
                     *, straggler_frac: float = 0.05,
-                    straggler_delay: float = 1.0) -> DelayBank:
+                    straggler_delay: float = 1.0,
+                    latency: Optional[LatencyModel] = None) -> DelayBank:
     """The bank ``run_stable`` shares between engines: same straggler draw
     as ``build_cluster``/``assign_profiles`` (first use of the profile
-    RNG), two tree slots for coloring."""
+    RNG), two tree slots for coloring.  ``latency`` parameterizes the
+    link jitter stream (hierarchical models pass their reference model —
+    identical parameters to the default, so the stream never shifts)."""
     rng = random.Random(seed ^ 0x5EED)
     stragglers = straggler_sample(rng, range(n), straggler_frac)
     return DelayBank.sample(seed, np.arange(n), stragglers, n_messages,
                             n_slots=2 if protocol == "coloring" else 1,
-                            straggler_delay=straggler_delay)
+                            straggler_delay=straggler_delay,
+                            latency=latency)
 
 
 def bank_for_trace(seed: int, trace: ChurnTrace, protocol: str,
                    *, straggler_frac: float = 0.05,
                    straggler_delay: float = 1.0,
-                   extra_messages: int = 0) -> DelayBank:
+                   extra_messages: int = 0,
+                   latency: Optional[LatencyModel] = None) -> DelayBank:
     """One bank covering a whole :class:`ChurnTrace`: every id that is
     ever a member (fixed ∪ joins) gets a delay row, every broadcast a
     column.  The straggler draw replicates ``build_cluster`` /
@@ -260,7 +279,8 @@ def bank_for_trace(seed: int, trace: ChurnTrace, protocol: str,
     return DelayBank.sample(seed, trace.all_ids(), stragglers,
                             len(trace.msg_times) + extra_messages,
                             n_slots=2 if protocol == "coloring" else 1,
-                            straggler_delay=straggler_delay)
+                            straggler_delay=straggler_delay,
+                            latency=latency)
 
 
 # ------------------------------------------------------------------ #
@@ -344,18 +364,22 @@ def _delivery_times_jax(parent, depth, root, fwd, link, t0):
 
 
 def stable_plans(protocol: str, members: np.ndarray, root: NodeId,
-                 k: int) -> Tuple[TreePlan, ...]:
+                 k: int, ring: Optional[np.ndarray] = None
+                 ) -> Tuple[TreePlan, ...]:
     """The plan set one broadcast propagates over: one standard tree for
     snow, the primary/secondary double tree for coloring.  The event
     engine only hands off the secondary root for views larger than two
     (snow_node.broadcast), so degenerate coloring clusters propagate
-    over the primary tree alone."""
+    over the primary tree alone.  ``ring`` plans over an explicit
+    (locality-ordered) permutation of ``members`` instead of the sorted
+    ring — the plan's arrays are then indexed by ring position."""
+    n = int(members.shape[0]) if ring is None else int(ring.shape[0])
     if protocol == "coloring":
-        plans = (plan_colored(members, root, k, PRIMARY),)
-        if int(members.shape[0]) > 2:
-            plans += (plan_colored(members, root, k, SECONDARY),)
+        plans = (plan_colored(members, root, k, PRIMARY, ring=ring),)
+        if n > 2:
+            plans += (plan_colored(members, root, k, SECONDARY, ring=ring),)
         return plans
-    return (plan_broadcast(members, root, k),)
+    return (plan_broadcast(members, root, k, ring=ring),)
 
 
 def plan_bytes(plans: Sequence[TreePlan], payload: int) -> int:
@@ -385,7 +409,9 @@ def broadcast_times(plans: Sequence[TreePlan], bank: DelayBank,
                     n_messages: int, rate_s: float = 1.0,
                     backend: Optional[str] = None,
                     loss: Optional[LossModel] = None,
-                    with_receipts: bool = False):
+                    with_receipts: bool = False,
+                    hier: Optional[HierarchicalLatency] = None,
+                    tier_acc: Optional[np.ndarray] = None):
     """(M, n) absolute first-delivery times for M broadcasts originating
     at ``i * rate_s`` — the elementwise min over the plan set.
 
@@ -395,22 +421,48 @@ def broadcast_times(plans: Sequence[TreePlan], bank: DelayBank,
     adds so the whole subtree goes dark on that tree — before the
     coloring min, exactly like crash blackholing.  ``with_receipts``
     additionally returns the (M, n) per-tree receipt counts (under loss
-    a tree only charges the nodes it actually reaches)."""
+    a tree only charges the nodes it actually reaches).
+
+    ``hier`` activates the DESIGN.md §12 tier model: each plan's link
+    plane is scaled elementwise by its per-tier factor (the exact float
+    multiply ``Network.send`` performs per scalar), the per-tier loss
+    rates (when set) override the flat loss threshold, and ``tier_acc``
+    (a (4,) float64 accumulator) collects per-tier receipt counts.
+    Locality-ordered plans gather the bank planes through
+    :meth:`DelayBank.rows_for`; on the default sorted ring the gather —
+    and every other new branch — is skipped entirely, keeping the flat
+    float program byte-identical."""
     t0 = np.arange(n_messages, dtype=np.float64) * rate_s
     cols = np.arange(n_messages)
     total = None
     receipts = None
+    loss_on = loss is not None and (
+        loss.active or (hier is not None and hier.loss_rates is not None))
     for plan in plans:
         s = _slot(plan.tree)
+        fwd = bank.fwd_plane(s, n_messages)
         link = bank.link_plane(s, n_messages)
-        if loss is not None and loss.active:
-            link = loss.apply_to_links(link, cols, s, bank.members)
-        t = delivery_times(plan, bank.fwd_plane(s, n_messages), link,
-                           t0=t0, backend=backend)
-        if with_receipts:
+        rows = bank.rows_for(plan.members)
+        if rows is not None:
+            fwd = np.ascontiguousarray(fwd[:, rows])
+            link = np.ascontiguousarray(link[:, rows])
+        if hier is not None:
+            link = link * hier.scale_plane(plan)[None, :]
+        if loss_on:
+            rates = None if hier is None else hier.loss_rate_plane(plan)
+            link = loss.apply_to_links(link, cols, s, plan.members,
+                                       rates=rates)
+        t = delivery_times(plan, fwd, link, t0=t0, backend=backend)
+        if with_receipts or tier_acc is not None:
             r = (~np.isnan(t)) & (np.asarray(plan.depth) >= 1)
-            receipts = r.astype(np.int64) if receipts is None \
-                else receipts + r
+            if with_receipts:
+                receipts = r.astype(np.int64) if receipts is None \
+                    else receipts + r
+            if tier_acc is not None:
+                tier_acc += np.bincount(
+                    hier.tier_plane(plan),
+                    weights=r.sum(axis=0).astype(np.float64),
+                    minlength=4)[:4]
         total = t if total is None else np.fmin(total, t)
     return (total, receipts) if with_receipts else total
 
@@ -580,11 +632,18 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
                           control: Optional[ControlParams] = None,
                           loss: Optional[LossModel] = None,
                           repair: Optional[RepairModel] = None,
-                          ) -> VectorCluster:
+                          *, net: Optional[NetworkSpec] = None,
+                          run: Optional[RunSpec] = None) -> VectorCluster:
     """The stable scenario (§5.3) in closed form: no nodes, no events —
     plan once, sample the bank, one level-synchronous sweep for all
     messages.  Metrics rows are bit-exact against
     ``run_stable(..., engine="events")`` on the shared bank.
+
+    ``net=``/``run=`` are the spec API (DESIGN.md §12.4); the loose
+    ``backend``/``control``/``loss``/``repair`` kwargs are the
+    deprecated equivalents.  A hierarchical ``net.latency`` scales every
+    link plane per tier and fills ``metrics.tier_bytes``;
+    ``net.locality="zone"`` plans over the locality ring order.
 
     ``control`` (a :class:`~repro.core.control.ControlParams`) adds the
     §9 closed-form control-plane bytes — SWIM + anti-entropy at their
@@ -597,16 +656,27 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
         f"closed-form engine models snow/coloring, not {protocol!r}"
     from .messages import fresh_mid
 
+    net, run = resolve_specs(net, run, caller="run_stable_vectorized",
+                             backend=backend, control=control,
+                             loss=loss, repair=repair)
+    backend, control = run.backend, run.control
+    loss, repair, hier = net.loss, net.repair, net.hier
     members = np.arange(n)
+    ring = net.ring(members)
     if bank is None:
-        bank = bank_for_stable(seed, n, protocol, n_messages)
+        bank = bank_for_stable(seed, n, protocol, n_messages,
+                               latency=net.latency_model())
     if plans is None:
-        plans = stable_plans(protocol, members, 0, k)
+        plans = stable_plans(protocol, members, 0, k, ring=ring)
+    plan_members = plans[0].members
+    src_index = plans[0].root
     frame = Data(0, 0, None, None, payload).size
-    lossy = loss is not None and loss.active
-    metrics = ArrayMetrics(members)
+    lossy = net.loss_on
+    metrics = ArrayMetrics(plan_members)
+    tier_acc = None if hier is None else np.zeros(4)
     if not lossy:
-        times = broadcast_times(plans, bank, n_messages, rate_s, backend)
+        times = broadcast_times(plans, bank, n_messages, rate_s, backend,
+                                hier=hier, tier_acc=tier_acc)
         nbytes = plan_bytes(plans, payload)
         # one receipt per node per tree that reaches it (uniform stable
         # view: every tree reaches every non-root node) — coloring's
@@ -614,25 +684,28 @@ def run_stable_vectorized(protocol: str, n: int = 500, k: int = 4,
         receipts = sum(np.asarray((np.asarray(p.depth) >= 1),
                                   dtype=np.int64) for p in plans)
         for i in range(n_messages):
-            metrics.record_message(fresh_mid(), i * rate_s, 0, times[i],
-                                   nbytes, receipts=receipts,
+            metrics.record_message(fresh_mid(), i * rate_s, src_index,
+                                   times[i], nbytes, receipts=receipts,
                                    frame_bytes=frame)
     else:
         # under loss, receipts and bytes depend on which edges survived
         times, rec = broadcast_times(plans, bank, n_messages, rate_s,
                                      backend, loss=loss,
-                                     with_receipts=True)
+                                     with_receipts=True, hier=hier,
+                                     tier_acc=tier_acc)
         repaired = None
         if repair is not None:
             times, repaired = _repair_fill(
                 times, np.arange(n_messages, dtype=np.float64) * rate_s,
-                members, None, n, 0, repair)
+                plan_members, None, n, 0, repair)
         for i in range(n_messages):
             metrics.record_message(
-                fresh_mid(), i * rate_s, 0, times[i],
+                fresh_mid(), i * rate_s, src_index, times[i],
                 frame * int(rec[i].sum()), receipts=rec[i],
                 frame_bytes=frame,
                 repaired=None if repaired is None else repaired[i])
+    if tier_acc is not None:
+        metrics.tier_bytes = [float(frame * v) for v in tier_acc]
     if control is not None:
         params = _repair_control_params(control, repair)
         apply_control(metrics,
@@ -653,13 +726,21 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
                  plans: Optional[Tuple[TreePlan, ...]] = None,
                  payload: int = 64,
                  control: Optional[ControlParams] = None,
-                 engine: str = "host",
+                 engine: Optional[str] = None,
                  loss: Optional[LossModel] = None,
-                 repair: Optional[RepairModel] = None) -> List[dict]:
+                 repair: Optional[RepairModel] = None,
+                 *, net: Optional[NetworkSpec] = None,
+                 run: Optional[RunSpec] = None) -> List[dict]:
     """Multi-seed stable-scenario sweep for the scale benchmarks.
 
     The plan set depends only on ``(members, root, k)`` and is reused
     across seeds (pass ``plans`` to reuse one built elsewhere).
+    ``net=``/``run=`` are the spec API (DESIGN.md §12.4); a
+    hierarchical ``net.latency`` scales the link planes per tier and
+    adds per-broadcast tier-byte keys (``intra_rack_B`` ...
+    ``cross_region_B``) to every row, and ``net.locality="zone"`` plans
+    over the locality ring (lossless sweeps only — the loss/repair
+    reductions assume the root sits at ring index 0).
 
     ``engine`` selects the orchestration model:
 
@@ -684,10 +765,17 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
     """
     import time
 
+    net, run = resolve_specs(net, run, caller="stable_sweep",
+                             engine=engine, backend=backend,
+                             control=control, loss=loss, repair=repair)
+    engine = "host" if run.engine == "auto" else run.engine
+    backend, control = run.backend, run.control
+    loss, repair, hier = net.loss, net.repair, net.hier
+    ring = net.ring(np.arange(n))
     plan_s = 0.0
     if plans is None:
         tp = time.time()
-        plans = stable_plans(protocol, np.arange(n), 0, k)
+        plans = stable_plans(protocol, np.arange(n), 0, k, ring=ring)
         plan_s = time.time() - tp
     nbytes = plan_bytes(plans, payload)
     frame = Data(0, 0, None, None, payload).size
@@ -697,29 +785,50 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
         n, duration, _repair_control_params(control, repair)) \
         if control else None
     seeds = list(seeds)
-    lossy = loss is not None and loss.active
+    lossy = net.loss_on
+    tier_B = None
+    if hier is not None:
+        # per-broadcast tier byte split — seed-independent on the
+        # lossless path (every tree reaches every covered node)
+        counts = np.zeros(4)
+        for p in plans:
+            covered = np.asarray(p.depth) >= 1
+            counts += np.bincount(hier.tier_plane(p)[covered],
+                                  minlength=4)[:4]
+        tier_B = {f"{name}_B": float(frame * counts[t])
+                  for t, name in enumerate(TIER_NAMES)}
     if lossy or repair is not None:
+        if plans[0].root != 0:
+            raise NotImplementedError(
+                "locality='zone' loss/repair sweeps: the faulty "
+                "reductions assume the root at ring index 0")
         return _stable_sweep_faulty(
             protocol, n, k, seeds, n_messages, rate_s, backend, plans,
-            payload, engine, loss if lossy else None, repair, nbytes,
-            frame, t0, duration, ctl, plan_s)
+            payload, engine, loss if lossy else None, repair,
+            nbytes, frame, t0, duration, ctl, plan_s, hier=hier)
     if engine == "device":
         from .device_sweep import stable_stats_device
 
         tw = time.time()
         ldt_mean, rel_mean = stable_stats_device(
-            plans, seeds, n_messages, rate_s)
+            plans, seeds, n_messages, rate_s, hier=hier)
         wall = time.time() - tw
         stats = [(float(ldt_mean[i]), float(rel_mean[i]),
                   wall / max(1, len(seeds))) for i in range(len(seeds))]
     else:
         assert engine == "host", f"engine must be host|device, not {engine!r}"
+        ridx = plans[0].root
         stats = []
         for seed in seeds:
             tw = time.time()
-            bank = bank_for_stable(seed, n, protocol, n_messages)
-            times = broadcast_times(plans, bank, n_messages, rate_s, backend)
-            rel = times[:, 1:]      # root (index 0) originates, never receives
+            bank = bank_for_stable(seed, n, protocol, n_messages,
+                                   latency=net.latency_model())
+            times = broadcast_times(plans, bank, n_messages, rate_s, backend,
+                                    hier=hier)
+            # the root originates, never receives (ring index 0 unless a
+            # locality ring placed node 0 elsewhere)
+            rel = times[:, 1:] if ridx == 0 \
+                else times[:, np.arange(times.shape[1]) != ridx]
             ldt = np.nanmax(rel - t0[:, None], axis=1)
             delivered = np.count_nonzero(~np.isnan(rel), axis=1)
             stats.append((float(ldt.mean()),
@@ -738,6 +847,8 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
             "plan_s": plan_s if i == 0 else 0.0,
             "engine": engine,
         }
+        if tier_B is not None:
+            row.update(tier_B)
         if ctl is not None:
             row["control_B"] = {k_: float(v) for k_, v in ctl.items()}
             row["duration_s"] = duration
@@ -747,8 +858,8 @@ def stable_sweep(protocol: str, n: int, k: int, seeds: Sequence[int],
 
 def _stable_sweep_faulty(protocol, n, k, seeds, n_messages, rate_s,
                          backend, plans, payload, engine, loss, repair,
-                         nbytes, frame, t0, duration, ctl,
-                         plan_s) -> List[dict]:
+                         nbytes, frame, t0, duration, ctl, plan_s,
+                         hier=None) -> List[dict]:
     """The §11 loss/repair arm of :func:`stable_sweep` — separated so
     the lossless sweep keeps its exact pre-existing float program.
 
@@ -785,6 +896,10 @@ def _stable_sweep_faulty(protocol, n, k, seeds, n_messages, rate_s,
             raise ValueError(
                 "repair sweeps require engine='host': the repair fill "
                 "needs the full delivery-time plane on the host")
+        if hier is not None:
+            raise ValueError(
+                "hierarchical loss sweeps require engine='host': the "
+                "device loss kernel draws flat-rate masks only")
         from .device_sweep import stable_stats_device_loss
 
         tw = time.time()
@@ -809,10 +924,12 @@ def _stable_sweep_faulty(protocol, n, k, seeds, n_messages, rate_s,
     rows = []
     for i, seed in enumerate(seeds):
         tw = time.time()
-        bank = bank_for_stable(seed, n, protocol, n_messages)
+        bank = bank_for_stable(
+            seed, n, protocol, n_messages,
+            latency=None if hier is None else hier.latency_model())
         times, rec = broadcast_times(plans, bank, n_messages, rate_s,
                                      backend, loss=loss,
-                                     with_receipts=True)
+                                     with_receipts=True, hier=hier)
         repaired = None
         if repair is not None:
             times, repaired = _repair_fill(times, t0, members, None,
@@ -912,7 +1029,9 @@ def compile_trace(protocol: str, trace: ChurnTrace, k: int,
 def _epoch_times(ep: _EpochPlan, bank: DelayBank,
                  backend: Optional[str],
                  loss: Optional[LossModel] = None,
-                 with_receipts: bool = False):
+                 with_receipts: bool = False,
+                 hier: Optional[HierarchicalLatency] = None,
+                 tier_acc: Optional[np.ndarray] = None):
     """(m_e, n_e) first-delivery times of one epoch's broadcasts: the
     stable closed form over the epoch's plan set, restricted to the
     epoch's bank rows and message columns, with crashed subtrees NaN'd
@@ -931,19 +1050,31 @@ def _epoch_times(ep: _EpochPlan, bank: DelayBank,
     cols = np.arange(ep.first, ep.first + ep.count)
     total = None
     receipts = None
+    loss_on = loss is not None and (
+        loss.active or (hier is not None and hier.loss_rates is not None))
     for plan, ok in zip(ep.plans, ep.reach):
         s = _slot(plan.tree)
         fwd = np.ascontiguousarray(bank.fwd[rows, cols[None, :], s].T)
         link = np.ascontiguousarray(bank.link[rows, cols[None, :], s].T)
-        if loss is not None and loss.active:
-            link = loss.apply_to_links(link, cols, s, ep.members)
+        if hier is not None:
+            link = link * hier.scale_plane(plan)[None, :]
+        if loss_on:
+            rates = None if hier is None else hier.loss_rate_plane(plan)
+            link = loss.apply_to_links(link, cols, s, ep.members,
+                                       rates=rates)
         t = delivery_times(plan, fwd, link, t0=ep.times, backend=backend)
         if ok is not None:
             t = np.where(ok, t, np.nan)
-        if with_receipts:
+        if with_receipts or tier_acc is not None:
             r = (~np.isnan(t)) & (np.asarray(plan.depth) >= 1)
-            receipts = r.astype(np.int64) if receipts is None \
-                else receipts + r
+            if with_receipts:
+                receipts = r.astype(np.int64) if receipts is None \
+                    else receipts + r
+            if tier_acc is not None:
+                tier_acc += np.bincount(
+                    hier.tier_plane(plan),
+                    weights=r.sum(axis=0).astype(np.float64),
+                    minlength=4)[:4]
         total = t if total is None else np.fmin(total, t)
     return (total, receipts) if with_receipts else total
 
@@ -955,7 +1086,8 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                          control: Optional[ControlParams] = None,
                          loss: Optional[LossModel] = None,
                          repair: Optional[RepairModel] = None,
-                         ) -> VectorCluster:
+                         *, net: Optional[NetworkSpec] = None,
+                         run: Optional[RunSpec] = None) -> VectorCluster:
     """Replay a :class:`ChurnTrace` in closed form: one re-plan and one
     level-synchronous sweep per epoch, all of an epoch's broadcasts
     batched.  Intended sets follow the paper's methodology — the view at
@@ -982,17 +1114,29 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
 
     assert protocol in ("snow", "coloring"), \
         f"closed-form engine models snow/coloring, not {protocol!r}"
-    backend = _resolve_backend(backend)
+    net, run = resolve_specs(net, run, caller="run_trace_vectorized",
+                             backend=backend, control=control,
+                             loss=loss, repair=repair)
+    if net.locality != "uniform":
+        raise NotImplementedError(
+            "locality='zone' is stable-scenario only: epoch re-planning "
+            "over locality rings is future work (DESIGN.md §12.3)")
+    backend = _resolve_backend(run.backend)
+    control = run.control
+    loss, repair, hier = net.loss, net.repair, net.hier
     if bank is None:
-        bank = bank_for_trace(seed, trace, protocol)
+        bank = bank_for_trace(seed, trace, protocol,
+                              latency=net.latency_model())
     epochs = compile_trace(protocol, trace, k, bank.members, payload)
     metrics = ArrayMetrics(bank.members)
-    lossy = loss is not None and loss.active
+    lossy = net.loss_on
+    tier_acc = None if hier is None else np.zeros(4)
     all_plans: List[TreePlan] = []
     n_missed = 0
     for ep in epochs:
         if not lossy and repair is None:
-            total = _epoch_times(ep, bank, backend)
+            total = _epoch_times(ep, bank, backend, hier=hier,
+                                 tier_acc=tier_acc)
             for j in range(ep.count):
                 metrics.record_message(fresh_mid(), float(ep.times[j]),
                                        ep.src_index, total[j], ep.nbytes,
@@ -1001,7 +1145,8 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                                        frame_bytes=ep.frame)
         else:
             total, rec = _epoch_times(ep, bank, backend, loss=loss,
-                                      with_receipts=True)
+                                      with_receipts=True, hier=hier,
+                                      tier_acc=tier_acc)
             repaired = None
             if repair is not None:
                 m_e = ep.members.shape[0]
@@ -1019,6 +1164,9 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                     frame_bytes=ep.frame,
                     repaired=None if repaired is None else repaired[j])
         all_plans.extend(ep.plans)
+    if tier_acc is not None and epochs:
+        frame = epochs[0].frame
+        metrics.tier_bytes = [float(frame * v) for v in tier_acc]
     if control is not None:
         params = _repair_control_params(control, repair)
         apply_control(metrics, snow_trace_control(trace, params=params))
@@ -1046,13 +1194,14 @@ def run_churn_vectorized(protocol: str, n: int = 500, k: int = 4,
                          backend: Optional[str] = None,
                          trace: Optional[ChurnTrace] = None,
                          loss: Optional[LossModel] = None,
-                         repair: Optional[RepairModel] = None
-                         ) -> VectorCluster:
+                         repair: Optional[RepairModel] = None,
+                         *, net: Optional[NetworkSpec] = None,
+                         run: Optional[RunSpec] = None) -> VectorCluster:
     """§5.4 churn in closed form (paper cadence unless ``trace`` given)."""
     if trace is None:
         trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
     return run_trace_vectorized(protocol, trace, k, seed, payload, backend,
-                                loss=loss, repair=repair)
+                                loss=loss, repair=repair, net=net, run=run)
 
 
 def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
@@ -1063,15 +1212,16 @@ def run_breakdown_vectorized(protocol: str, n: int = 500, k: int = 4,
                              backend: Optional[str] = None,
                              trace: Optional[ChurnTrace] = None,
                              loss: Optional[LossModel] = None,
-                             repair: Optional[RepairModel] = None
-                             ) -> VectorCluster:
+                             repair: Optional[RepairModel] = None,
+                             *, net: Optional[NetworkSpec] = None,
+                             run: Optional[RunSpec] = None) -> VectorCluster:
     """§5.5 breakdown in closed form: silent crashes blackhole subtrees
     until the ``detect_after`` eviction surrogate re-plans them away."""
     if trace is None:
         trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
                                       crash_every, detect_after=detect_after)
     return run_trace_vectorized(protocol, trace, k, seed, payload, backend,
-                                loss=loss, repair=repair)
+                                loss=loss, repair=repair, net=net, run=run)
 
 
 # ------------------------------------------------------------------ #
@@ -1341,9 +1491,11 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
                 payload: int = 64,
                 epochs: Optional[List[_EpochPlan]] = None,
                 control: Optional[ControlParams] = None,
-                engine: str = "host",
+                engine: Optional[str] = None,
                 loss: Optional[LossModel] = None,
-                repair: Optional[RepairModel] = None) -> List[dict]:
+                repair: Optional[RepairModel] = None,
+                *, net: Optional[NetworkSpec] = None,
+                run: Optional[RunSpec] = None) -> List[dict]:
     """Multi-seed churn/breakdown sweep for the scale benchmarks.
 
     Epoch plans depend only on the trace and are compiled once; each
@@ -1379,12 +1531,26 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
     """
     import time
 
-    backend = _resolve_backend(backend)
-    lossy = loss is not None and loss.active
+    net, run = resolve_specs(net, run, caller="trace_sweep",
+                             engine=engine, backend=backend,
+                             control=control, loss=loss, repair=repair)
+    if net.locality != "uniform":
+        raise NotImplementedError(
+            "locality='zone' is stable-scenario only: epoch re-planning "
+            "over locality rings is future work (DESIGN.md §12.3)")
+    engine = "host" if run.engine == "auto" else run.engine
+    backend = _resolve_backend(run.backend)
+    control = run.control
+    loss, repair, hier = net.loss, net.repair, net.hier
+    lossy = net.loss_on
     if (lossy or repair is not None) and engine == "device":
         raise ValueError(
             "loss/repair sweeps require engine='host': the device path's "
             "delay-independent reach shortcut breaks under edge loss")
+    if hier is not None and engine == "device":
+        raise ValueError(
+            "hierarchical trace sweeps require engine='host': the device "
+            "trace kernel generates flat-latency delays only")
     bank_members = trace.all_ids()
     plan_s = 0.0
     if epochs is None:
@@ -1453,7 +1619,8 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
     rows = []
     for i, seed in enumerate(seeds):
         tw = time.time()
-        bank = bank_for_trace(seed, trace, protocol)
+        bank = bank_for_trace(seed, trace, protocol,
+                              latency=net.latency_model())
         ldts: List[np.ndarray] = []
         rels: List[np.ndarray] = []
         rmrs: List[float] = []
@@ -1464,10 +1631,10 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
         for ep, sel in zip(epochs, fixed_sel):
             rec = repaired = None
             if not faulty:
-                total = _epoch_times(ep, bank, backend)
+                total = _epoch_times(ep, bank, backend, hier=hier)
             else:
                 total, rec = _epoch_times(ep, bank, backend, loss=loss,
-                                          with_receipts=True)
+                                          with_receipts=True, hier=hier)
                 alive = np.ones(ep.members.shape[0], dtype=bool) \
                     if ep.crashed_mask is None else ~ep.crashed_mask
                 if repair is not None:

@@ -65,6 +65,7 @@ from .baselines import gossip_sweep, plumtree_sweep
 from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .control import ControlParams, gossip_control
 from .scenarios import run_breakdown, run_churn, run_stable, summarize
+from .specs import NetworkSpec, RunSpec
 
 #: protocols with a closed-form route (any n) vs events-only baselines
 CLOSED_FORM = ("snow", "coloring")
@@ -115,6 +116,10 @@ class ExperimentSpec:
     control: bool = True
     #: hard cap for event-loop cells (per-node views are O(n²) memory)
     events_max_n: int = 2500
+    #: optional network fabric (DESIGN.md §12) applied to every cell —
+    #: None keeps the historical flat uniform fabric and keeps the spec
+    #: fingerprint byte-identical to pre-§12 result files
+    net: Optional[NetworkSpec] = None
 
     def cells(self) -> List[Cell]:
         seen = set()
@@ -133,8 +138,14 @@ class ExperimentSpec:
 
     def asdict(self) -> dict:
         # round-trip through JSON so the fingerprint compares equal to
-        # what a result file loads back (tuples become lists)
-        return json.loads(json.dumps(dataclasses.asdict(self)))
+        # what a result file loads back (tuples become lists); ``net`` is
+        # omitted entirely when None so result files written before the
+        # field existed still fingerprint-match their specs
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "net"}
+        if self.net is not None:
+            d["net"] = self.net.asdict()
+        return json.loads(json.dumps(d))
 
 
 def _trace_for(spec: ExperimentSpec, cell: Cell) -> Optional[ChurnTrace]:
@@ -240,8 +251,12 @@ def _events_cell(spec: ExperimentSpec, cell: Cell,
     per_seed, ctl_acc = [], {}
     for seed in spec.seeds:
         kw = dict(n=cell.n, k=cell.k, n_messages=spec.n_messages,
-                  rate_s=spec.rate_s, seed=seed, payload=cell.payload,
-                  engine="events", control=params)
+                  rate_s=spec.rate_s, seed=seed, payload=cell.payload)
+        if spec.net is None:
+            kw.update(engine="events", control=params)
+        else:
+            kw.update(net=spec.net,
+                      run=RunSpec(engine="events", control=params))
         if cell.scene == "stable":
             c = run_stable(cell.protocol, **kw)
         elif cell.scene == "churn":
@@ -286,9 +301,15 @@ def _closed_form_cell(spec: ExperimentSpec, cell: Cell,
     else:
         from .engine import trace_sweep
 
-        rows = trace_sweep(cell.protocol, trace, cell.k, spec.seeds,
-                           payload=cell.payload, control=params,
-                           engine=sweep_engine)
+        if spec.net is None:
+            rows = trace_sweep(cell.protocol, trace, cell.k, spec.seeds,
+                               payload=cell.payload, control=params,
+                               engine=sweep_engine)
+        else:
+            rows = trace_sweep(cell.protocol, trace, cell.k, spec.seeds,
+                               payload=cell.payload, net=spec.net,
+                               run=RunSpec(engine=sweep_engine,
+                                           control=params))
         used = "device" if sweep_engine == "device" else "vectorized"
     ctl = None
     if spec.control:
@@ -305,16 +326,26 @@ def stable_sweep_rows(spec: ExperimentSpec, cell: Cell,
                       engine: str = "host") -> List[dict]:
     from .engine import stable_sweep
 
+    if spec.net is None:
+        return stable_sweep(cell.protocol, cell.n, cell.k, spec.seeds,
+                            n_messages=spec.n_messages, rate_s=spec.rate_s,
+                            payload=cell.payload, control=params,
+                            engine=engine)
     return stable_sweep(cell.protocol, cell.n, cell.k, spec.seeds,
                         n_messages=spec.n_messages, rate_s=spec.rate_s,
-                        payload=cell.payload, control=params,
-                        engine=engine)
+                        payload=cell.payload, net=spec.net,
+                        run=RunSpec(engine=engine, control=params))
 
 
 def _stale_rows(spec: ExperimentSpec, cell: Cell, trace: ChurnTrace,
                 params: Optional[ControlParams]) -> List[dict]:
     from .engine import compile_trace, run_trace_stale_vectorized
 
+    if spec.net is not None and (spec.net.hier is not None
+                                 or spec.net.locality != "uniform"
+                                 or spec.net.loss is not None):
+        raise NotImplementedError(
+            "stale-view cells model the flat uniform lossless fabric only")
     epochs = compile_trace(cell.protocol, trace, cell.k, trace.all_ids(),
                            cell.payload)
     fixed = set(range(cell.n))

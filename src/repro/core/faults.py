@@ -102,12 +102,16 @@ class LossModel:
     def active(self) -> bool:
         return self.rate > 0.0
 
-    def edge_faults(self, cols: np.ndarray, slot: int,
-                    nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def edge_faults(self, cols: np.ndarray, slot: int, nodes: np.ndarray,
+                    rates=None) -> Tuple[np.ndarray, np.ndarray]:
         """Vectorized draws for a ``(messages, nodes)`` plane.
 
         ``cols`` — (M,) bank column of each message; ``nodes`` — (N,)
-        destination ids.  Returns ``(extra, lost)``: (M, N) float64
+        destination ids.  ``rates`` optionally overrides the flat
+        ``self.rate`` threshold per destination (scalar or (N,) array —
+        the hierarchical per-tier loss plane); the uniforms drawn are
+        identical either way, so flat and tiered runs stay on the same
+        counter-RNG stream.  Returns ``(extra, lost)``: (M, N) float64
         retransmit delay (failures × timeout) and (M, N) bool mask of
         edges dead after ``max_attempts`` losses."""
         h = _stream(self.seed, _LOSS_STREAM)
@@ -119,34 +123,39 @@ class LossModel:
                    + _U64(_C_NODE) * nodes.astype(_U64)[None, None, :]
                    + _U64(_C_ATTEMPT) * a.astype(_U64)[:, None, None])
         u = _uniform01(_splitmix64(ctr))          # (A, M, N)
-        fail = u < self.rate
+        thresh = self.rate if rates is None else np.asarray(rates)
+        fail = u < thresh
         ok = ~fail
         lost = ~ok.any(axis=0)
         failures = np.where(lost, self.max_attempts, np.argmax(ok, axis=0))
         extra = self.timeout_s * failures.astype(np.float64)
         return extra, lost
 
-    def edge_fault(self, col: int, slot: int,
-                   node: Union[int, np.integer]) -> Tuple[float, bool]:
+    def edge_fault(self, col: int, slot: int, node: Union[int, np.integer],
+                   rate=None) -> Tuple[float, bool]:
         """Scalar view of :meth:`edge_faults` for the event loop: the
         retransmit delay and lost flag of one (message, dst) edge.
-        Pure-Python hashing, bit-identical to the vectorized planes
-        (asserted in ``tests/test_repair.py``)."""
+        ``rate`` optionally overrides the flat threshold (the per-tier
+        rate of this edge).  Pure-Python hashing, bit-identical to the
+        vectorized planes (asserted in ``tests/test_repair.py``)."""
+        thresh = self.rate if rate is None else rate
         base = (int(_stream(self.seed, _LOSS_STREAM))
                 + _C_COL * int(col) + _C_SLOT * int(slot)
                 + _C_NODE * int(node)) & _MASK64
         for a in range(self.max_attempts):
             z = _splitmix64_int((base + _C_ATTEMPT * a) & _MASK64)
-            if (z >> 11) * (2.0 ** -53) >= self.rate:
+            if (z >> 11) * (2.0 ** -53) >= thresh:
                 return self.timeout_s * a, False
         return self.timeout_s * self.max_attempts, True
 
     def apply_to_links(self, link: np.ndarray, cols: np.ndarray,
-                       slot: int, nodes: np.ndarray) -> np.ndarray:
+                       slot: int, nodes: np.ndarray,
+                       rates=None) -> np.ndarray:
         """The closed-form transformation: effective link latency with
         retransmit delay added and lost edges NaN'd (NaN then blackholes
-        the subtree through the level sweep's adds)."""
-        extra, lost = self.edge_faults(cols, slot, nodes)
+        the subtree through the level sweep's adds).  ``rates`` — see
+        :meth:`edge_faults`."""
+        extra, lost = self.edge_faults(cols, slot, nodes, rates=rates)
         eff = link + extra
         eff[lost] = np.nan
         return eff

@@ -124,6 +124,15 @@ class MembershipView:
         self._members = sorted(m for m in merged if m not in self._tombstones)
         self._invalidate()
 
+    def locality_members(self, topology) -> "np.ndarray":
+        """The member set in **locality ring order** — sorted by
+        (region, zone, rack, id) under ``topology`` (DESIGN.md §12.3) —
+        for planning trees whose subtree boundaries align with zone
+        boundaries.  The view's own ring stays id-sorted; this is a
+        planning-time permutation, passed to the planner as an explicit
+        ``ring=``."""
+        return topology.locality_order(self.members_array())
+
     # -- ring arithmetic -------------------------------------------------------
     def index_of(self, node: NodeId) -> int:
         i = bisect.bisect_left(self._members, node)

@@ -82,7 +82,9 @@ class TreePlan:
     ordering of the per-hop recursion can be reconstructed.
     """
 
-    members: np.ndarray          #: (n,) sorted node ids
+    members: np.ndarray          #: (n,) node ids in ring order (sorted
+                                 #: by id unless an explicit locality
+                                 #: ring was planned over)
     root: int                    #: ring index of the tree root
     parent: Any                  #: (n,) ring index of parent; -1 for the root
     depth: Any                   #: (n,) hop count from the root
@@ -392,8 +394,20 @@ def _plan(members: np.ndarray, root_idx: int, k: int, backend,
                     slot=slots, k=k, tree=tree)
 
 
-def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId
-             ) -> Tuple[np.ndarray, int]:
+def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId,
+             ring: Optional[np.ndarray] = None) -> Tuple[np.ndarray, int]:
+    if ring is not None:
+        # explicit ring order (locality planning, DESIGN.md §12.3): a
+        # duplicate-free permutation of the view, NOT necessarily
+        # sorted — the root is found by scan, not bisection.  ``_plan``
+        # is pure (start, length) index arithmetic over ring positions,
+        # so every structural invariant (balance, child count) holds for
+        # any permutation.
+        members = np.ascontiguousarray(ring)
+        hits = np.flatnonzero(members == root)
+        if hits.size == 0:
+            raise KeyError(root)
+        return members, int(hits[0])
     if isinstance(view, MembershipView):
         members = view.members_array()
     elif isinstance(view, np.ndarray):
@@ -407,22 +421,30 @@ def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId
 
 
 def plan_broadcast(view: Union[MembershipView, Sequence[NodeId]],
-                   root: NodeId, k: int, backend="numpy") -> TreePlan:
-    """Whole-tree plan of a standard Snow broadcast over a frozen view."""
-    members, root_idx = _resolve(view, root)
+                   root: NodeId, k: int, backend="numpy",
+                   ring: Optional[np.ndarray] = None) -> TreePlan:
+    """Whole-tree plan of a standard Snow broadcast over a frozen view.
+
+    ``ring`` overrides the member order: an explicit permutation (e.g. a
+    locality order from :meth:`repro.core.topology.Topology
+    .locality_order`) that the (start, length) partitioning runs over
+    instead of the sorted ring."""
+    members, root_idx = _resolve(view, root, ring)
     return _plan(members, root_idx, k, backend, tree=None)
 
 
 def plan_colored(view: Union[MembershipView, Sequence[NodeId]],
-                 root: NodeId, k: int, tree: int, backend="numpy") -> TreePlan:
+                 root: NodeId, k: int, tree: int, backend="numpy",
+                 ring: Optional[np.ndarray] = None) -> TreePlan:
     """Whole-tree plan of one Coloring tree (§4.6)."""
-    members, root_idx = _resolve(view, root)
+    members, root_idx = _resolve(view, root, ring)
     return _plan(members, root_idx, k, backend, tree=tree)
 
 
 def plan_two_trees(view: Union[MembershipView, Sequence[NodeId]],
-                   root: NodeId, k: int, backend="numpy"
+                   root: NodeId, k: int, backend="numpy",
+                   ring: Optional[np.ndarray] = None
                    ) -> Tuple[TreePlan, TreePlan]:
     """(primary, secondary) plans of the Coloring double tree."""
-    return (plan_colored(view, root, k, PRIMARY, backend),
-            plan_colored(view, root, k, SECONDARY, backend))
+    return (plan_colored(view, root, k, PRIMARY, backend, ring=ring),
+            plan_colored(view, root, k, SECONDARY, backend, ring=ring))

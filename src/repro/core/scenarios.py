@@ -47,6 +47,7 @@ from .membership import MembershipView
 from .sim import (LatencyModel, Metrics, Network, NodeProfile, Sim,
                   assign_profiles)
 from .snow_node import SnowNode
+from .specs import NetworkSpec, RunSpec, resolve_specs
 
 PROTOCOLS = ("gossip", "plumtree", "snow", "coloring", "flooding")
 
@@ -95,6 +96,7 @@ def build_cluster(
     delay_bank=None,
     loss=None,
     repair=None,
+    delay_model=None,
 ) -> Cluster:
     """``share_view=True`` hands every node the *same* MembershipView
     instance — valid only for membership-static (stable) runs, where it
@@ -111,14 +113,23 @@ def build_cluster(
     :class:`repro.core.faults.RepairModel`) arms the §11 pull-repair
     digest exchange on every Snow node (it rides — and repaces — the
     anti-entropy tick, so it implies the tick even when
-    ``enable_anti_entropy`` is off)."""
+    ``enable_anti_entropy`` is off).
+
+    ``delay_model`` (a :class:`repro.core.topology.DelayModel`) sets the
+    link-latency model: a :class:`~repro.core.topology.HierarchicalLatency`
+    makes :meth:`Network.send` scale every DATA delay by the edge's tier
+    factor (and, with per-tier ``loss_rates``, override the flat loss
+    threshold); the default / :class:`~repro.core.topology.FlatLognormal`
+    keeps the historical flat program bit-for-bit."""
     assert protocol in PROTOCOLS, protocol
     assert not (share_view and (enable_swim or enable_anti_entropy)), \
         "share_view is only sound when no one mutates membership"
     sim = Sim(seed=seed)
     metrics = Metrics()
-    net = Network(sim, metrics, LatencyModel(), delay_bank=delay_bank,
-                  loss=loss)
+    latency = LatencyModel() if delay_model is None \
+        else delay_model.latency_model()
+    net = Network(sim, metrics, latency, delay_bank=delay_bank,
+                  loss=loss, delay_model=delay_model)
     rng = random.Random(seed ^ 0x5EED)
     ids = list(range(n))
     shared = MembershipView.from_sorted(ids) if share_view else None
@@ -175,10 +186,17 @@ def _repair_drain(repair) -> float:
 def run_stable(protocol: str, n: int = 500, k: int = 4,
                n_messages: int = 100, rate_s: float = 1.0,
                seed: int = 0, payload: int = 64,
-               share_view: bool = False, engine: str = "auto",
+               share_view: bool = False, engine: Optional[str] = None,
                backend: Optional[str] = None, control=None,
-               loss=None, repair=None) -> Cluster:
+               loss=None, repair=None, *,
+               net: Optional[NetworkSpec] = None,
+               run: Optional[RunSpec] = None) -> Cluster:
     """§5.3 stable scenario.
+
+    ``net=``/``run=`` are the spec API (DESIGN.md §12.4); the loose
+    ``engine``/``backend``/``control``/``loss``/``repair`` kwargs are the
+    deprecated equivalents.  ``net.locality="zone"`` is closed-form only
+    (the live loop partitions the id-sorted ring).
 
     Engine routing: ``"vectorized"`` evaluates delivery times in closed
     form (snow/coloring only — the stable path is a pure function of
@@ -198,6 +216,11 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
     anti-entropy loops on and accounts their actual frames, which is
     what ``tests/test_control_plane.py`` pins the closed forms against.
     """
+    net, run = resolve_specs(net, run, caller="run_stable", engine=engine,
+                             backend=backend, control=control,
+                             loss=loss, repair=repair)
+    engine, backend, control = run.engine, run.backend, run.control
+    loss, repair = net.loss, net.repair
     closed_form = protocol in ("snow", "coloring")
     if engine == "auto":
         engine = "vectorized" if closed_form else "events"
@@ -205,19 +228,22 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
         from .engine import run_stable_vectorized
 
         return run_stable_vectorized(protocol, n, k, n_messages, rate_s,
-                                     seed, payload, backend=backend,
-                                     control=control, loss=loss,
-                                     repair=repair)
+                                     seed, payload, net=net, run=run)
+    if net.locality != "uniform":
+        raise NotImplementedError(
+            "locality='zone' is closed-form only: the live loop "
+            "partitions the id-sorted ring (DESIGN.md §12.3)")
     bank = None
     if closed_form:
         from .engine import bank_for_stable
 
-        bank = bank_for_stable(seed, n, protocol, n_messages)
+        bank = bank_for_stable(seed, n, protocol, n_messages,
+                               latency=net.latency_model())
     live_control = control is not None and closed_form
     c = build_cluster(protocol, n, k, seed, share_view=share_view,
                       delay_bank=bank, enable_swim=live_control,
                       enable_anti_entropy=live_control,
-                      loss=loss, repair=repair)
+                      loss=loss, repair=repair, delay_model=net.latency)
     src = 0
     for i in range(n_messages):
         c.sim.at(i * rate_s, lambda: c.broadcast_from(src, payload))
@@ -228,11 +254,13 @@ def run_stable(protocol: str, n: int = 500, k: int = 4,
 def run_churn(protocol: str, n: int = 500, k: int = 4,
               n_messages: int = 100, rate_s: float = 1.0,
               seed: int = 0, payload: int = 64,
-              churn_every: int = 10, engine: str = "auto",
+              churn_every: int = 10, engine: Optional[str] = None,
               backend: Optional[str] = None,
               trace: Optional[ChurnTrace] = None,
-              view_model: str = "oracle", control=None,
-              loss=None, repair=None) -> Cluster:
+              view_model: Optional[str] = None, control=None,
+              loss=None, repair=None, *,
+              net: Optional[NetworkSpec] = None,
+              run: Optional[RunSpec] = None) -> Cluster:
     """§5.4: while messages flow, one fresh node joins every
     ``churn_every`` messages and gracefully leaves ``churn_every``
     messages later.  Metrics are evaluated over the fixed n nodes only.
@@ -260,7 +288,12 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
     already broadcasts live MemberUpdates and runs anti-entropy, so its
     ``control_summary()`` is populated regardless — ``control`` there
     additionally switches live SWIM on for snow/coloring."""
-    assert view_model in ("oracle", "stale"), view_model
+    net, run = resolve_specs(net, run, caller="run_churn", engine=engine,
+                             backend=backend, view_model=view_model,
+                             control=control, loss=loss, repair=repair)
+    engine, backend, control = run.engine, run.backend, run.control
+    view_model = run.view_model
+    loss, repair = net.loss, net.repair
     if trace is None:
         trace = paper_churn_trace(n, n_messages, rate_s, churn_every)
     if engine == "auto":
@@ -272,17 +305,24 @@ def run_churn(protocol: str, n: int = 500, k: int = 4,
         if view_model == "stale":
             assert loss is None and repair is None, \
                 "loss/repair run through the oracle vectorized route"
+            assert net.hier is None and net.locality == "uniform", \
+                "the stale-view engine models the flat uniform fabric"
             return run_trace_stale_vectorized(protocol, trace, k, seed,
                                               payload, backend,
                                               control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend, control=control,
-                                    loss=loss, repair=repair)
+                                    net=net,
+                                    run=RunSpec(backend=backend,
+                                                control=control))
+    if net.locality != "uniform":
+        raise NotImplementedError(
+            "locality='zone' is closed-form only: the live loop "
+            "partitions the id-sorted ring (DESIGN.md §12.3)")
     c = build_cluster(protocol, n, k, seed,
                       enable_anti_entropy=(protocol in ("snow", "coloring")),
                       enable_swim=(control is not None
                                    and protocol in ("snow", "coloring")),
-                      loss=loss, repair=repair)
+                      loss=loss, repair=repair, delay_model=net.latency)
     rng = random.Random(seed ^ 0xC0FFEE)
 
     def protocol_join(nid: int) -> None:
@@ -332,10 +372,13 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
                   n_messages: int = 100, rate_s: float = 1.0,
                   seed: int = 0, payload: int = 64,
                   crash_every: int = 10, reliable: bool = False,
-                  engine: str = "auto", backend: Optional[str] = None,
+                  engine: Optional[str] = None,
+                  backend: Optional[str] = None,
                   trace: Optional[ChurnTrace] = None,
-                  view_model: str = "oracle", control=None,
-                  loss=None, repair=None) -> Cluster:
+                  view_model: Optional[str] = None, control=None,
+                  loss=None, repair=None, *,
+                  net: Optional[NetworkSpec] = None,
+                  run: Optional[RunSpec] = None) -> Cluster:
     """§5.5: every ``crash_every`` messages a random fixed node silently
     crashes.  Snow/Coloring run SWIM so crashed nodes are detected and
     evicted within seconds; other nodes' views keep the dead node, which
@@ -351,7 +394,13 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
     (see :func:`run_churn`).  ``control`` adds §9 control accounting to
     the vectorized routes (the events route runs live SWIM here by
     construction, so its control frames are always classified)."""
-    assert view_model in ("oracle", "stale"), view_model
+    net, run = resolve_specs(net, run, caller="run_breakdown",
+                             engine=engine, backend=backend,
+                             view_model=view_model, control=control,
+                             loss=loss, repair=repair)
+    engine, backend, control = run.engine, run.backend, run.control
+    view_model = run.view_model
+    loss, repair = net.loss, net.repair
     if trace is None:
         trace = paper_breakdown_trace(n, n_messages, rate_s, seed,
                                       crash_every)
@@ -364,15 +413,22 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
         if view_model == "stale":
             assert loss is None and repair is None, \
                 "loss/repair run through the oracle vectorized route"
+            assert net.hier is None and net.locality == "uniform", \
+                "the stale-view engine models the flat uniform fabric"
             return run_trace_stale_vectorized(protocol, trace, k, seed,
                                               payload, backend,
                                               control=control)
         return run_trace_vectorized(protocol, trace, k, seed, payload,
-                                    backend, control=control,
-                                    loss=loss, repair=repair)
+                                    net=net,
+                                    run=RunSpec(backend=backend,
+                                                control=control))
+    if net.locality != "uniform":
+        raise NotImplementedError(
+            "locality='zone' is closed-form only: the live loop "
+            "partitions the id-sorted ring (DESIGN.md §12.3)")
     c = build_cluster(protocol, n, k, seed,
                       enable_swim=(protocol in ("snow", "coloring")),
-                      loss=loss, repair=repair)
+                      loss=loss, repair=repair, delay_model=net.latency)
 
     def silent_crash(nid: int) -> None:
         c.net.crash(nid)
@@ -387,7 +443,8 @@ def run_breakdown(protocol: str, n: int = 500, k: int = 4,
 def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
                       seed: int = 0, payload: int = 64,
                       drain_s: float = 20.0,
-                      loss=None, repair=None) -> Cluster:
+                      loss=None, repair=None, *,
+                      net: Optional[NetworkSpec] = None) -> Cluster:
     """Oracle-membership event loop over a :class:`ChurnTrace`: every
     event is applied synchronously to ONE shared view (join inserts,
     leave/evict remove, crash blackholes via the network), so all nodes
@@ -396,14 +453,25 @@ def run_trace_aligned(protocol: str, trace: ChurnTrace, k: int = 4,
     same :func:`~repro.core.engine.bank_for_trace`; on boundary-aligned
     traces (no broadcast in flight at any event time) every
     first-delivery time matches ``run_trace_vectorized`` bit for bit
-    (``tests/test_churn_engine.py``)."""
+    (``tests/test_churn_engine.py``) — including under a hierarchical
+    ``net.latency`` (both sides apply the same per-tier scalar)."""
     assert protocol in ("snow", "coloring"), \
         "the oracle trace loop models snow/coloring"
     from .engine import bank_for_trace
 
-    bank = bank_for_trace(seed, trace, protocol)
+    if net is None:
+        net = NetworkSpec(loss=loss, repair=repair)
+    elif loss is not None or repair is not None:
+        raise TypeError("run_trace_aligned: loss/repair passed alongside "
+                        "net= — move them into the spec")
+    loss, repair = net.loss, net.repair
+    assert net.locality == "uniform", \
+        "the oracle trace loop partitions the id-sorted ring"
+    bank = bank_for_trace(seed, trace, protocol,
+                          latency=net.latency_model())
     c = build_cluster(protocol, trace.n, k, seed, share_view=True,
-                      delay_bank=bank, loss=loss, repair=repair)
+                      delay_bank=bank, loss=loss, repair=repair,
+                      delay_model=net.latency)
     view = c.nodes[trace.src].view      # THE shared view instance
 
     def oracle_join(nid: int) -> None:

@@ -23,6 +23,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from .ids import NodeId
 from .messages import (Ack, Data, Graft, GossipData, IHave, MidDigest,
                        MidFetch, Probe, Prune, RepairData, SyncReq)
@@ -80,8 +82,6 @@ class LatencyModel:
         return v
 
     def _refill(self, rng: random.Random) -> List[float]:
-        import numpy as np
-
         g = np.random.default_rng(rng.getrandbits(64))
         self._buf = (self.median_s
                      * np.exp(g.normal(0.0, self.sigma, self.block))).tolist()
@@ -156,6 +156,11 @@ class Metrics:
         #: mids of member-update (control) broadcasts — classifies their
         #: Reliable-Message ACKs, which carry no update themselves
         self.control_mids: Set[int] = set()
+        #: data-plane bytes received per network tier (DESIGN.md §12):
+        #: [intra_rack, intra_zone, cross_zone, cross_region].  Populated
+        #: only when a hierarchical topology is active; stays all-zero on
+        #: flat runs.
+        self.tier_bytes: List[float] = [0.0, 0.0, 0.0, 0.0]
 
     # -- control plane -------------------------------------------------------
     def note_control_mid(self, mid: int) -> None:
@@ -226,6 +231,17 @@ class Metrics:
             rb[node] = rb.get(node, 0) + nbytes
             nd = self.node_dups.setdefault(mid, {})
             nd[node] = nd.get(node, 0) + 1
+
+    def add_tier_bytes(self, tier: int, nbytes: float) -> None:
+        """Record ``nbytes`` of data-plane traffic delivered over a link
+        of network ``tier`` (0 = intra-rack … 3 = cross-region)."""
+        self.tier_bytes[tier] += nbytes
+
+    def tier_summary(self) -> dict:
+        """Per-tier data-plane byte totals (receipt accounting)."""
+        t = self.tier_bytes
+        return {"intra_rack_B": float(t[0]), "intra_zone_B": float(t[1]),
+                "cross_zone_B": float(t[2]), "cross_region_B": float(t[3])}
 
     # -- aggregation ---------------------------------------------------------
     def per_message(self, subset: Optional[Set[NodeId]] = None) -> List[dict]:
@@ -299,10 +315,23 @@ class Network:
 
     def __init__(self, sim: Sim, metrics: Metrics,
                  latency: Optional[LatencyModel] = None,
-                 delay_bank=None, loss=None):
+                 delay_bank=None, loss=None, delay_model=None):
         self.sim = sim
         self.metrics = metrics
         self.latency = latency or LatencyModel()
+        #: optional hierarchical :class:`repro.core.topology
+        #: .HierarchicalLatency` — when set, every link delay (bank view
+        #: or live sample) is scaled by the per-tier factor of the
+        #: (src, dst) edge, per-tier loss rates override the LossModel's
+        #: flat rate, and delivered data-plane bytes are split per tier.
+        #: Flat models pass ``None`` here; the flat code path is
+        #: byte-identical to before the topology layer existed.
+        self.delay_model = (delay_model
+                            if delay_model is not None
+                            and getattr(delay_model, "hierarchical", False)
+                            else None)
+        self._tier_loss = (self.delay_model is not None
+                           and self.delay_model.loss_rates is not None)
         #: optional :class:`repro.core.engine.DelayBank` — when set, link
         #: latencies for covered broadcast frames come from the pre-sampled
         #: per-(dst, message, tree) arrays instead of the live RNG, making
@@ -349,10 +378,11 @@ class Network:
         if dst not in self.nodes:
             return
         extra, lost, attempts = 0.0, False, 1
-        if self.loss is not None and self.loss.active \
+        if self.loss is not None \
+                and (self.loss.active or self._tier_loss) \
                 and isinstance(msg, (Data, GossipData)) \
                 and getattr(msg, "update", None) is None:
-            extra, lost = self._loss_fault(dst, msg)
+            extra, lost = self._loss_fault(src, dst, msg)
             # failed attempts each paid a timeout; a surviving frame
             # adds its one successful transmission on top
             attempts = round(extra / self.loss.timeout_s) + (0 if lost else 1)
@@ -371,16 +401,27 @@ class Network:
             delay = self.delay_bank.link_for(dst, msg)
         if delay is None:
             delay = self.latency.sample(self.sim.rng)
+        if self.delay_model is not None:
+            delay = delay * self.delay_model.link_scale(src, dst)
         self.sim.after(extra + delay, lambda: self._deliver(src, dst, msg))
 
-    def _loss_fault(self, dst: NodeId, msg) -> Tuple[float, bool]:
+    def _loss_fault(self, src: NodeId, dst: NodeId,
+                    msg) -> Tuple[float, bool]:
         """(retransmit delay, permanently lost) for one DATA send.
 
         First-epoch frames draw from the counter RNG keyed by (message
         column, tree slot, dst) — the exact draws the closed-form loss
         masks evaluate as planes.  Reliable-retry frames (epoch > 0, not
         modeled in closed form) draw fresh Bernoulli trials from the sim
-        RNG so a rebroadcast can heal an edge the first epoch lost."""
+        RNG so a rebroadcast can heal an edge the first epoch lost.
+
+        With a hierarchical topology the edge's per-tier loss rate
+        overrides the LossModel's flat rate — same counter-RNG draws,
+        different threshold, exactly like the closed form's per-tier
+        ``rates`` plane."""
+        rate = None
+        if self._tier_loss:
+            rate = self.delay_model.loss_rate(src, dst)
         if getattr(msg, "epoch", 0) == 0:
             if self.delay_bank is not None:
                 col = self.delay_bank.column(msg.mid)
@@ -390,10 +431,11 @@ class Network:
             if col is not None:
                 tree = getattr(msg, "tree", None)
                 return self.loss.edge_fault(col, 1 if tree == 1 else 0,
-                                            dst)
+                                            dst, rate=rate)
+        live_rate = self.loss.rate if rate is None else rate
         failures = 0
         while failures < self.loss.max_attempts \
-                and self.sim.rng.random() < self.loss.rate:
+                and self.sim.rng.random() < live_rate:
             failures += 1
         return (self.loss.timeout_s * failures,
                 failures >= self.loss.max_attempts)
@@ -401,6 +443,13 @@ class Network:
     def _deliver(self, src: NodeId, dst: NodeId, msg) -> None:
         if not self.alive(dst):
             return
+        if self.delay_model is not None \
+                and isinstance(msg, (Data, GossipData)) \
+                and getattr(msg, "update", None) is None:
+            # receipt-side per-tier byte split — same frame set the
+            # closed-form engines count via their receipt masks
+            self.metrics.add_tier_bytes(
+                self.delay_model.tier(src, dst), msg.size)
         self.nodes[dst].on_message(src, msg)
 
 

@@ -1,0 +1,194 @@
+"""Unified run configuration: NetworkSpec + RunSpec (DESIGN.md §12.4).
+
+The runner signatures had sprawled to a dozen ad-hoc kwargs
+(``engine=, backend=, view_model=, control=, loss=, repair=, ...``);
+adding the hierarchical topology would have made it thirteen.  This
+module consolidates them into two frozen dataclasses:
+
+* :class:`NetworkSpec` — **what the network is**: the delay model
+  (:class:`~repro.core.topology.FlatLognormal` or
+  :class:`~repro.core.topology.HierarchicalLatency`), loss, repair, the
+  coordinate topology and the ring-order policy (``locality``).
+* :class:`RunSpec` — **how to run it**: engine selection, array backend,
+  membership view model, control-plane accounting.
+
+Runners accept ``net=`` / ``run=``; the old kwargs keep working through
+:func:`resolve_specs`, which builds the equivalent specs and emits a
+``DeprecationWarning``.  Mixing both styles in one call is an error —
+silently preferring one would make the other a lie.
+
+**Backend precedence** (previously unspecified, now contractual and
+tested): an explicit ``backend=`` kwarg or ``RunSpec.backend`` always
+wins; the ``REPRO_ENGINE_BACKEND`` environment variable fills the
+default only when the spec/kwarg is ``None``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import asdict, dataclass, field, is_dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .faults import LossModel, RepairModel
+from .topology import (DelayModel, FlatLognormal, HierarchicalLatency,
+                       Topology)
+
+__all__ = ["NetworkSpec", "RunSpec", "resolve_specs"]
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """Frozen description of the simulated network fabric.
+
+    ``latency`` — the :class:`~repro.core.topology.DelayModel`; the
+    default :class:`FlatLognormal` is bit-inert (runs exactly the
+    pre-spec float program).  ``topology`` — coordinate assignment for
+    locality planning; defaults to the latency model's own topology when
+    that model is hierarchical.  ``locality`` — ring order used to build
+    broadcast trees: ``"uniform"`` (sorted by id, the historical order)
+    or ``"zone"`` (sorted by (region, zone, rack, id) so subtree
+    boundaries align with zone boundaries).
+    """
+
+    latency: DelayModel = field(default_factory=FlatLognormal)
+    loss: Optional[LossModel] = None
+    repair: Optional[RepairModel] = None
+    topology: Optional[Topology] = None
+    locality: str = "uniform"
+
+    def __post_init__(self):
+        if self.locality not in ("uniform", "zone"):
+            raise ValueError(f"locality must be 'uniform' or 'zone', "
+                             f"got {self.locality!r}")
+        hier = self.hier
+        if (self.topology is not None and hier is not None
+                and self.topology != hier.topology):
+            raise ValueError("NetworkSpec.topology conflicts with the "
+                             "hierarchical latency model's topology")
+        if self.locality == "zone" and self.effective_topology is None:
+            raise ValueError("locality='zone' needs a topology (set "
+                             "NetworkSpec.topology or use a "
+                             "HierarchicalLatency model)")
+        if hier is not None and hier.loss_rates is not None \
+                and self.loss is None:
+            raise ValueError("per-tier loss_rates need a carrier "
+                             "LossModel (it supplies the retransmit "
+                             "timeout, attempt budget and RNG seed); "
+                             "pass NetworkSpec(loss=LossModel(...))")
+
+    # -- derived views -------------------------------------------------------
+    @property
+    def hier(self) -> Optional[HierarchicalLatency]:
+        """The latency model iff it is hierarchical, else None — the
+        single gate every tier-aware branch checks."""
+        return self.latency if self.latency.hierarchical else None
+
+    @property
+    def effective_topology(self) -> Optional[Topology]:
+        if self.topology is not None:
+            return self.topology
+        hier = self.hier
+        return hier.topology if hier is not None else None
+
+    def latency_model(self):
+        return self.latency.latency_model()
+
+    @property
+    def loss_on(self) -> bool:
+        """Whether any loss machinery is active — the flat rate or the
+        hierarchical per-tier rates."""
+        if self.loss is None:
+            return False
+        hier = self.hier
+        return self.loss.active or (hier is not None
+                                    and hier.loss_rates is not None)
+
+    def ring(self, members) -> Optional[np.ndarray]:
+        """The planning ring order for a sorted member array: a
+        locality-ordered permutation, or None for the uniform (sorted)
+        order — callers skip the gather entirely on None."""
+        if self.locality == "uniform":
+            return None
+        return self.effective_topology.locality_order(members)
+
+    def asdict(self) -> dict:
+        """JSON-able structural fingerprint (experiment spec files)."""
+        def enc(v):
+            if v is None:
+                return None
+            d = asdict(v) if is_dataclass(v) else dict(v)
+            d["__class__"] = type(v).__name__
+            return d
+        return {"latency": enc(self.latency), "loss": enc(self.loss),
+                "repair": enc(self.repair), "topology": enc(self.topology),
+                "locality": self.locality}
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """Frozen description of how to execute a scenario.
+
+    ``engine`` — ``"auto"`` (runner picks), ``"events"``,
+    ``"vectorized"``, or for the sweeps ``"host"`` / ``"device"``
+    (sweeps treat ``"auto"`` as ``"host"``).  ``backend`` — array
+    backend for the closed form (``"numpy"`` / ``"jax"``); ``None``
+    defers to ``REPRO_ENGINE_BACKEND`` (explicit value always wins over
+    the environment).  ``view_model`` — ``"oracle"`` or ``"stale"``.
+    ``control`` — :class:`~repro.core.control.ControlParams` enabling
+    closed-form control-plane accounting.
+    """
+
+    engine: str = "auto"
+    backend: Optional[str] = None
+    view_model: str = "oracle"
+    control: Optional[object] = None
+
+    def __post_init__(self):
+        if self.view_model not in ("oracle", "stale"):
+            raise ValueError(f"view_model must be 'oracle' or 'stale', "
+                             f"got {self.view_model!r}")
+
+    def asdict(self) -> dict:
+        return {"engine": self.engine, "backend": self.backend,
+                "view_model": self.view_model,
+                "control": (asdict(self.control)
+                            if is_dataclass(self.control)
+                            and self.control is not None else None)}
+
+
+def resolve_specs(net: Optional[NetworkSpec], run: Optional[RunSpec], *,
+                  caller: str, engine: Optional[str] = None,
+                  backend: Optional[str] = None,
+                  view_model: Optional[str] = None,
+                  control=None, loss: Optional[LossModel] = None,
+                  repair: Optional[RepairModel] = None,
+                  ) -> Tuple[NetworkSpec, RunSpec]:
+    """Normalize a runner call to ``(NetworkSpec, RunSpec)``.
+
+    Spec arguments win; explicitly-passed legacy kwargs build the
+    equivalent specs and emit a ``DeprecationWarning`` (one release of
+    grace — the kwarg-built run is bit-identical to the spec-built one,
+    asserted in ``tests/test_specs.py``).  Mixing ``net=``/``run=`` with
+    legacy kwargs raises: the caller's intent would be ambiguous.
+    """
+    legacy = {k: v for k, v in (("engine", engine), ("backend", backend),
+                                ("view_model", view_model),
+                                ("control", control), ("loss", loss),
+                                ("repair", repair)) if v is not None}
+    if net is not None or run is not None:
+        if legacy:
+            raise TypeError(
+                f"{caller}: legacy kwarg(s) {sorted(legacy)} passed "
+                f"alongside net=/run= — move them into the spec")
+        return net or NetworkSpec(), run or RunSpec()
+    if legacy:
+        warnings.warn(
+            f"{caller}: kwarg(s) {sorted(legacy)} are deprecated; build "
+            f"a NetworkSpec/RunSpec and pass net=/run= (see DESIGN.md "
+            f"§12.4 migration table)", DeprecationWarning, stacklevel=3)
+    return (NetworkSpec(loss=loss, repair=repair),
+            RunSpec(engine="auto" if engine is None else engine,
+                    backend=backend,
+                    view_model="oracle" if view_model is None else view_model,
+                    control=control))

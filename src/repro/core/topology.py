@@ -1,0 +1,271 @@
+"""Hierarchical cloud topology: (region, zone, rack) coordinates and the
+tiered latency / loss model (DESIGN.md §12).
+
+The paper's target environment is a cloud — racks inside zones inside
+regions, with link cost dominated by the *lowest common tier* of the two
+endpoints.  This module supplies:
+
+* :class:`Topology` — a seeded, **purely arithmetic** assignment of every
+  node id to a ``(region, zone, rack)`` coordinate.  Each id hashes
+  independently into a rack (splitmix64 avalanche of ``id`` under a
+  seeded salt): cloud schedulers scatter instances, so id adjacency
+  carries no placement information — which is exactly why the id-sorted
+  ring crosses expensive links everywhere and a locality reorder pays.
+  Because coordinates are a pure function of the id, they are stable
+  under churn and cost integer arithmetic on the device path.
+
+* :class:`DelayModel` — the protocol both engines consume.  Two
+  implementations:
+
+  - :class:`FlatLognormal`: the historical single-distribution model.
+    It is the default and **bit-inert** — every seed stream and float
+    program is unchanged from before this module existed.
+  - :class:`HierarchicalLatency`: per-tier base delay + shared lognormal
+    jitter, optional per-tier loss rates.
+
+**Bit-exactness contract.**  The hierarchical link delay is
+``bank_sample * (rtt_s[tier] / ref_median)`` where ``bank_sample`` is the
+*unchanged* flat lognormal draw (the DelayBank seed stream is untouched).
+The event loop applies the scale as a scalar multiply per send
+(:meth:`HierarchicalLatency.link_scale`), the closed form as an
+elementwise plane multiply (:meth:`HierarchicalLatency.scale_plane`) —
+the same IEEE-754 operation on the same doubles, so the two engines stay
+bit-exact.  Per-tier loss feeds the existing counter-RNG
+:class:`~repro.core.faults.LossModel` draws with a per-edge ``rate``
+override: same uniforms, different threshold, scalar-vs-plane identical.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import cached_property
+from typing import ClassVar, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from .faults import _C_NODE, _MASK64, _splitmix64, _splitmix64_int
+from .sim import LatencyModel
+
+#: tier indices of an edge: lowest common ancestor of the two endpoints
+TIER_RACK, TIER_ZONE, TIER_REGION, TIER_GLOBAL = 0, 1, 2, 3
+#: reporting names, in tier order (``tier_summary()`` key = name + "_B")
+TIER_NAMES = ("intra_rack", "intra_zone", "cross_zone", "cross_region")
+
+#: jitter reference median — the historical flat model's median.  The
+#: DelayBank keeps sampling this exact distribution; hierarchical models
+#: rescale at consumption time so the bank seed stream never changes.
+_REF_MEDIAN_S = LatencyModel.median_s
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Seeded (region, zone, rack) coordinate assignment for node ids.
+
+    Every id hashes independently into one of
+    ``regions * zones_per_region * racks_per_zone`` racks — a splitmix64
+    avalanche of the id under a seeded salt, so placement is uniform,
+    deterministic, and uncorrelated with id order (the cloud scheduler
+    model).  ``n`` is the cluster-size hint (validation and spec
+    fingerprints only — churn joiners with ids ≥ n hash like any other).
+
+    Zone and rack indices are *global* (a rack index encodes its zone and
+    region), which makes the edge tier a three-comparison integer
+    formula — cheap enough to fuse into the device delay generation.
+    """
+
+    n: int
+    regions: int = 3
+    zones_per_region: int = 4
+    racks_per_zone: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError("Topology.n must be >= 1")
+        if min(self.regions, self.zones_per_region, self.racks_per_zone) < 1:
+            raise ValueError("Topology tier widths must be >= 1")
+
+    @property
+    def total_zones(self) -> int:
+        return self.regions * self.zones_per_region
+
+    @property
+    def total_racks(self) -> int:
+        return self.total_zones * self.racks_per_zone
+
+    @cached_property
+    def _salt(self) -> int:
+        """Seeded placement salt — folds the topology seed into every
+        id's rack hash."""
+        return _splitmix64_int((self.seed ^ 0x70D0) & _MASK64)
+
+    # -- scalar path (event loop) -------------------------------------------
+    def rack_of(self, node: int) -> int:
+        h = _splitmix64_int((self._salt + _C_NODE * int(node)) & _MASK64)
+        return h % self.total_racks
+
+    def coord(self, node: int) -> Tuple[int, int, int]:
+        """(region, zone, rack) of one id — zone/rack globally indexed."""
+        rack = self.rack_of(node)
+        zone = rack // self.racks_per_zone
+        return zone // self.zones_per_region, zone, rack
+
+    def tier(self, src: int, dst: int) -> int:
+        """Edge tier = lowest common tier of the endpoints: 0 same rack,
+        1 same zone, 2 same region, 3 cross-region."""
+        reg_u, zon_u, rck_u = self.coord(src)
+        reg_v, zon_v, rck_v = self.coord(dst)
+        return ((reg_u != reg_v) + (zon_u != zon_v) + (rck_u != rck_v))
+
+    # -- vectorized path (closed form / device) -----------------------------
+    def coords(self, ids) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(region, zone, rack) int64 arrays for an id array — the exact
+        vector twin of :meth:`coord`."""
+        ids = np.asarray(ids, dtype=np.int64)
+        with np.errstate(over="ignore"):
+            h = _splitmix64(np.uint64(self._salt)
+                            + np.uint64(_C_NODE) * ids.astype(np.uint64))
+        rack = (h % np.uint64(self.total_racks)).astype(np.int64)
+        zone = rack // self.racks_per_zone
+        return zone // self.zones_per_region, zone, rack
+
+    def tiers(self, src_ids, dst_ids) -> np.ndarray:
+        reg_u, zon_u, rck_u = self.coords(src_ids)
+        reg_v, zon_v, rck_v = self.coords(dst_ids)
+        return ((reg_u != reg_v).astype(np.int64)
+                + (zon_u != zon_v) + (rck_u != rck_v))
+
+    def locality_order(self, members) -> np.ndarray:
+        """``members`` reordered by (region, zone, rack, id) — the
+        ``locality="zone"`` ring order.  A plain permutation: the planner
+        partitions it with the same (start, length) index arithmetic as
+        the sorted ring, so the balance invariant is untouched."""
+        members = np.asarray(members)
+        reg, zon, rck = self.coords(members)
+        return members[np.lexsort((members, rck, zon, reg))]
+
+
+@runtime_checkable
+class DelayModel(Protocol):
+    """What the runners need from a latency model.
+
+    ``latency_model()`` yields the :class:`~repro.core.sim.LatencyModel`
+    whose (median, sigma) parameterize both the event loop's live sampler
+    and the DelayBank's pre-sampled stream.  ``hierarchical`` gates the
+    tier machinery: when True the model additionally provides
+    ``link_scale`` / ``tier`` (scalar, event loop), ``scale_plane`` /
+    ``tier_plane`` / ``loss_rate_plane`` (per-plan arrays, closed form)
+    and ``scale_table`` (the device-RNG hook — a per-tier factor table
+    fused into the threefry delay generation)."""
+
+    hierarchical: bool
+
+    def latency_model(self) -> LatencyModel: ...
+
+
+@dataclass(frozen=True)
+class FlatLognormal:
+    """The historical model: one i.i.d. lognormal for every link.
+
+    Default and bit-inert — runners detect ``hierarchical=False`` and
+    skip every topology branch, leaving the float program and all seed
+    streams exactly as they were."""
+
+    median_s: float = _REF_MEDIAN_S
+    sigma: float = 0.35
+
+    hierarchical: ClassVar[bool] = False
+    loss_rates: ClassVar[None] = None
+
+    def latency_model(self) -> LatencyModel:
+        return LatencyModel(median_s=self.median_s, sigma=self.sigma)
+
+
+@dataclass(frozen=True)
+class HierarchicalLatency:
+    """Tiered cloud latency: per-tier base delay × shared lognormal jitter.
+
+    ``rtt_s[t]`` is the median one-way delay of a tier-``t`` link
+    (rack ≪ zone ≪ region ≪ cross-region); the effective link delay is
+    ``rtt_s[tier] * exp(N(0, sigma))``.  ``loss_rates``, when given, is a
+    per-tier Bernoulli frame-loss probability that overrides the carrier
+    :class:`~repro.core.faults.LossModel`'s flat rate (the LossModel
+    still supplies the retransmit timeout / attempt budget and the
+    counter-RNG seed).
+    """
+
+    topology: Topology
+    rtt_s: Tuple[float, float, float, float] = (0.0001, 0.0004,
+                                                0.0020, 0.0300)
+    sigma: float = 0.35
+    loss_rates: Optional[Tuple[float, float, float, float]] = None
+
+    hierarchical: ClassVar[bool] = True
+
+    def __post_init__(self):
+        if len(self.rtt_s) != 4 or any(r <= 0 for r in self.rtt_s):
+            raise ValueError("rtt_s must be 4 positive per-tier delays")
+        if any(a > b for a, b in zip(self.rtt_s, self.rtt_s[1:])):
+            raise ValueError("rtt_s must be non-decreasing "
+                             "(rack <= zone <= region <= cross-region)")
+        if self.loss_rates is not None:
+            if len(self.loss_rates) != 4 \
+                    or any(not 0.0 <= r < 1.0 for r in self.loss_rates):
+                raise ValueError("loss_rates must be 4 probabilities")
+
+    def latency_model(self) -> LatencyModel:
+        """Parameters of the *sampled* (pre-scale) jitter stream — the
+        reference median, so the DelayBank stream matches the flat model
+        bit-for-bit and tiering is purely a consumption-time scale."""
+        return LatencyModel(median_s=_REF_MEDIAN_S, sigma=self.sigma)
+
+    # -- scalar hooks (event loop) ------------------------------------------
+    @cached_property
+    def scale_table(self) -> Tuple[float, float, float, float]:
+        """Per-tier link multiplier — also the device-RNG hook (the
+        device path folds ``scale_table[tier]`` into its threefry link
+        generation)."""
+        return tuple(r / _REF_MEDIAN_S for r in self.rtt_s)
+
+    def tier(self, src: int, dst: int) -> int:
+        return self.topology.tier(src, dst)
+
+    def link_scale(self, src: int, dst: int) -> float:
+        return self.scale_table[self.topology.tier(src, dst)]
+
+    def loss_rate(self, src: int, dst: int) -> Optional[float]:
+        if self.loss_rates is None:
+            return None
+        return self.loss_rates[self.topology.tier(src, dst)]
+
+    # -- plane hooks (closed-form / device engines) -------------------------
+    def tier_plane(self, plan) -> np.ndarray:
+        """Tier of every node's inbound tree edge (parent → node), by
+        ring index; the root (no inbound edge) reports tier 0."""
+        members = np.asarray(plan.members)
+        parent = np.asarray(plan.parent)
+        src = members[np.where(parent < 0, plan.root, parent)]
+        tiers = self.topology.tiers(src, members)
+        tiers[plan.root] = 0
+        return tiers
+
+    def scale_plane(self, plan) -> np.ndarray:
+        """Per-node link multiplier for a plan's link plane — the plane
+        twin of :meth:`link_scale` (root slot is 1.0, never consumed)."""
+        scale = np.asarray(self.scale_table, dtype=np.float64)[
+            self.tier_plane(plan)]
+        scale[plan.root] = 1.0
+        return scale
+
+    def loss_rate_plane(self, plan) -> Optional[np.ndarray]:
+        """Per-node loss rate of the inbound edge, or None when per-tier
+        loss is off — feeds ``LossModel.apply_to_links(rates=...)``."""
+        if self.loss_rates is None:
+            return None
+        return np.asarray(self.loss_rates, dtype=np.float64)[
+            self.tier_plane(plan)]
+
+    def mean_scale(self) -> float:
+        """Expected link multiplier under a uniformly random edge —
+        only used for closed-form control-plane estimates."""
+        return float(np.mean(self.scale_table))

@@ -1,0 +1,189 @@
+"""Event loop vs closed form under the hierarchical cloud fabric (§12).
+
+The flat-model differential contract (``test_engine.py`` /
+``test_churn_engine.py``) must survive the tier machinery unchanged:
+with a :class:`~repro.core.topology.HierarchicalLatency` in the
+``NetworkSpec`` the two engines still agree on every first-delivery time
+**exactly** — the tier scale is the same IEEE-754 multiply on the same
+bank doubles — and on the per-tier byte split to the byte.  Per-tier
+loss reuses the counter-RNG uniforms with a per-edge threshold, so the
+lossy differential is bit-exact too.  The device engine is pinned
+statistically (single-precision fused RNG), and the locality ring is
+checked for its actual point: fewer cross-region bytes, same delivery
+guarantee.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.churn import aligned_churn_trace
+from repro.core.engine import (run_trace_vectorized, stable_sweep,
+                               trace_sweep)
+from repro.core.faults import LossModel
+from repro.core.scenarios import run_stable, run_trace_aligned
+from repro.core.specs import NetworkSpec, RunSpec
+from repro.core.topology import TIER_NAMES, HierarchicalLatency, Topology
+
+
+def _net(n, seed=1, loss_rates=None, loss=None, locality="uniform"):
+    return NetworkSpec(
+        latency=HierarchicalLatency(Topology(n, seed=seed),
+                                    loss_rates=loss_rates),
+        loss=loss, locality=locality)
+
+
+def _paired_mids(ev, vec):
+    return list(zip(sorted(ev.metrics.start), sorted(vec.metrics.start)))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_stable_engines_bit_exact_under_hier(protocol, n):
+    seed = 3 if n == 5000 else 7
+    net = _net(n)
+    ev = run_stable(protocol, n=n, k=4, n_messages=3, seed=seed,
+                    share_view=True, net=net, run=RunSpec(engine="events"))
+    vec = run_stable(protocol, n=n, k=4, n_messages=3, seed=seed, net=net,
+                     run=RunSpec(engine="vectorized", backend="numpy"))
+    for mid_e, mid_v in _paired_mids(ev, vec):
+        fd = ev.metrics.first_delivery[mid_e]
+        tv = vec.metrics.times_for(mid_v)
+        assert len(fd) == n - 1
+        for node, t in fd.items():
+            assert t == tv[node], (protocol, n, node)
+    assert ev.metrics.tier_summary() == vec.metrics.tier_summary()
+    assert sum(ev.metrics.tier_summary().values()) > 0
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_churn_engines_bit_exact_under_hier(protocol, n):
+    seed = 3 if n == 5000 else 7
+    net = _net(n)
+    trace = aligned_churn_trace(n, n_messages=4)
+    ev = run_trace_aligned(protocol, trace, k=4, seed=seed, net=net)
+    vec = run_trace_vectorized(protocol, trace, k=4, seed=seed, net=net,
+                               run=RunSpec(backend="numpy"))
+    for mid_e, mid_v in _paired_mids(ev, vec):
+        fd = ev.metrics.first_delivery[mid_e]
+        tv = vec.metrics.times_for(mid_v)
+        mem = vec.metrics.members_for(mid_v)
+        idx = {int(m): i for i, m in enumerate(mem)}
+        for node, t in fd.items():
+            assert t == tv[idx[node]], (protocol, n, mid_e, node)
+        src = int(mem[vec.metrics.src_index[mid_v]])
+        delivered_vec = {int(mem[i]) for i in np.nonzero(~np.isnan(tv))[0]
+                         if int(mem[i]) != src}
+        assert delivered_vec == set(fd), (protocol, n, mid_e)
+    assert ev.metrics.tier_summary() == vec.metrics.tier_summary()
+
+
+def test_stable_engines_bit_exact_under_tier_loss():
+    """Per-tier loss: same counter-RNG uniforms, per-edge threshold —
+    the engines must agree on the delivered set and every time."""
+    n = 300
+    net = _net(n, loss_rates=(0.0, 0.02, 0.05, 0.25),
+               loss=LossModel(rate=0.0, seed=5))
+    assert net.loss_on
+    kw = dict(n=n, k=4, n_messages=4, seed=9)
+    ev = run_stable("snow", **kw, share_view=True, net=net,
+                    run=RunSpec(engine="events"))
+    vec = run_stable("snow", **kw, net=net,
+                     run=RunSpec(engine="vectorized", backend="numpy"))
+    dropped = 0
+    for mid_e, mid_v in _paired_mids(ev, vec):
+        fd = ev.metrics.first_delivery[mid_e]
+        tv = vec.metrics.times_for(mid_v)
+        for node, t in fd.items():
+            assert t == tv[node], node
+        delivered_vec = {i for i in np.nonzero(~np.isnan(tv))[0] if i != 0}
+        assert delivered_vec == set(fd), mid_e
+        dropped += (n - 1) - len(fd)
+    assert dropped > 0, "25% cross-region loss never dropped a frame"
+
+
+def test_tier_split_accounts_every_data_byte():
+    n = 500
+    net = _net(n)
+    c = run_stable("snow", n=n, k=4, n_messages=3, seed=1, net=net,
+                   run=RunSpec(engine="vectorized", backend="numpy"))
+    split = c.metrics.tier_summary()
+    assert set(split) == {f"{t}_B" for t in TIER_NAMES}
+    data_b = sum(r["payload_bytes"] + r["redundant_bytes"]
+                 for r in c.metrics.per_message())
+    assert math.isclose(sum(split.values()), data_b, rel_tol=1e-12)
+
+
+def test_flat_runs_report_no_tier_split():
+    c = run_stable("snow", n=100, k=4, n_messages=2, seed=0,
+                   net=NetworkSpec(), run=RunSpec(engine="vectorized",
+                                                  backend="numpy"))
+    assert all(v == 0.0 for v in c.metrics.tier_summary().values())
+
+
+# -- locality ring: the point of the whole exercise ---------------------------
+
+def test_locality_cuts_cross_region_bytes():
+    n, k, seeds = 5000, 4, (0, 1)
+    hier = HierarchicalLatency(Topology(n, seed=0))
+    uni = stable_sweep("snow", n, k, seeds, n_messages=4,
+                       net=NetworkSpec(latency=hier),
+                       run=RunSpec(engine="host", backend="numpy"))
+    loc = stable_sweep("snow", n, k, seeds, n_messages=4,
+                       net=NetworkSpec(latency=hier, locality="zone"),
+                       run=RunSpec(engine="host", backend="numpy"))
+    for u, l in zip(uni, loc):
+        assert u["reliability"] == l["reliability"] == 1.0
+        assert l["cross_region_B"] < u["cross_region_B"]
+        assert l["intra_rack_B"] + l["intra_zone_B"] > \
+            u["intra_rack_B"] + u["intra_zone_B"]
+        # same total data volume — locality only moves it across tiers
+        assert math.isclose(
+            sum(l[f"{t}_B"] for t in TIER_NAMES),
+            sum(u[f"{t}_B"] for t in TIER_NAMES), rel_tol=1e-12)
+
+
+def test_locality_unsupported_routes_raise():
+    n = 60
+    net = _net(n, locality="zone")
+    with pytest.raises(NotImplementedError):
+        run_stable("snow", n=n, k=4, n_messages=2, seed=0, net=net,
+                   run=RunSpec(engine="events"))
+    trace = aligned_churn_trace(n, n_messages=2)
+    with pytest.raises(NotImplementedError):
+        run_trace_vectorized("snow", trace, k=4, seed=0, net=net)
+    with pytest.raises(NotImplementedError):
+        trace_sweep("snow", trace, 4, [0], net=net)
+
+
+# -- device engine ------------------------------------------------------------
+
+def test_device_hier_pinned_to_host():
+    pytest.importorskip("jax")
+    n, k, seeds = 3000, 4, tuple(range(8))
+    net = _net(n)
+    host = stable_sweep("snow", n, k, seeds, n_messages=4, net=net,
+                        run=RunSpec(engine="host", backend="numpy"))
+    dev = stable_sweep("snow", n, k, seeds, n_messages=4, net=net,
+                       run=RunSpec(engine="device"))
+    ldt_h = float(np.mean([r["ldt"] for r in host]))
+    ldt_d = float(np.mean([r["ldt"] for r in dev]))
+    assert all(r["reliability"] == 1.0 for r in dev)
+    assert abs(ldt_d - ldt_h) / ldt_h < 0.15
+    # the tier scale must actually bite: same seeds draw the same fwd /
+    # straggler program, links only get slower (scale ≥ 1), so every
+    # seed's hier LDT must strictly exceed its flat LDT
+    flat = stable_sweep("snow", n, k, seeds, n_messages=4,
+                        net=NetworkSpec(), run=RunSpec(engine="device"))
+    for d, f in zip(dev, flat):
+        assert d["ldt"] > f["ldt"]
+
+
+def test_device_tier_loss_unsupported():
+    pytest.importorskip("jax")
+    net = _net(100, loss_rates=(0.0, 0.0, 0.0, 0.1),
+               loss=LossModel(rate=0.0, seed=0))
+    with pytest.raises(ValueError):
+        stable_sweep("snow", 100, 4, [0], n_messages=2, net=net,
+                     run=RunSpec(engine="device"))

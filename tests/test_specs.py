@@ -1,0 +1,180 @@
+"""NetworkSpec / RunSpec unified-configuration API (DESIGN.md §12.4).
+
+The contract under test:
+
+* the default specs are **bit-inert** — ``net=NetworkSpec()`` runs the
+  exact float program of the pre-spec kwargs;
+* every legacy kwarg keeps working through the shim, produces a
+  bit-identical run, and emits a ``DeprecationWarning``;
+* mixing ``net=``/``run=`` with legacy kwargs raises ``TypeError``;
+* backend precedence: explicit ``backend=``/``RunSpec.backend`` beats
+  ``REPRO_ENGINE_BACKEND``; the environment fills only ``None``.
+"""
+import contextlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (_resolve_backend, default_backend,
+                               run_stable_vectorized, stable_sweep)
+from repro.core.experiments import ExperimentSpec
+from repro.core.faults import LossModel, RepairModel
+from repro.core.scenarios import run_stable, summarize
+from repro.core.specs import NetworkSpec, RunSpec, resolve_specs
+from repro.core.topology import (FlatLognormal, HierarchicalLatency,
+                                 Topology)
+
+
+@contextlib.contextmanager
+def _no_deprecation():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield
+
+
+# -- bit-inert defaults -------------------------------------------------------
+
+def test_default_spec_is_bit_inert():
+    kw = dict(n=300, k=4, n_messages=4, seed=5)
+    with _no_deprecation():
+        legacy = run_stable_vectorized("snow", **kw)
+        # default RunSpec: backend=None so both calls follow
+        # REPRO_ENGINE_BACKEND — bit-inert on either CI leg
+        spec = run_stable_vectorized("snow", **kw, net=NetworkSpec(),
+                                     run=RunSpec())
+    for mid_a, mid_b in zip(sorted(legacy.metrics.start),
+                            sorted(spec.metrics.start)):
+        assert np.array_equal(legacy.metrics.times_for(mid_a),
+                              spec.metrics.times_for(mid_b))
+    assert summarize(legacy) == summarize(spec)
+
+
+def test_flat_lognormal_is_default_latency():
+    net = NetworkSpec()
+    assert isinstance(net.latency, FlatLognormal)
+    assert net.hier is None and net.effective_topology is None
+    assert net.ring(np.arange(10)) is None
+    assert not net.loss_on
+
+
+# -- legacy kwargs: equivalent, warned, un-mixable -----------------------------
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+def test_kwargs_and_specs_bit_identical(protocol):
+    kw = dict(n=250, k=4, n_messages=4, seed=2)
+    loss = LossModel(rate=0.05, seed=1)
+    repair = RepairModel()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = run_stable(protocol, **kw, engine="vectorized",
+                            backend="numpy", loss=loss, repair=repair)
+    with _no_deprecation():
+        spec = run_stable(protocol, **kw,
+                          net=NetworkSpec(loss=loss, repair=repair),
+                          run=RunSpec(engine="vectorized", backend="numpy"))
+    for mid_a, mid_b in zip(sorted(legacy.metrics.start),
+                            sorted(spec.metrics.start)):
+        ta = legacy.metrics.times_for(mid_a)
+        tb = spec.metrics.times_for(mid_b)
+        assert (np.isnan(ta) == np.isnan(tb)).all()
+        assert np.array_equal(ta[~np.isnan(ta)], tb[~np.isnan(tb)])
+    assert summarize(legacy) == summarize(spec)
+
+
+def test_default_call_does_not_warn():
+    with _no_deprecation():
+        run_stable("snow", n=60, k=4, n_messages=2, seed=0)
+
+
+def test_mixing_styles_raises():
+    with pytest.raises(TypeError, match="legacy kwarg"):
+        run_stable("snow", n=50, net=NetworkSpec(), engine="vectorized")
+    with pytest.raises(TypeError, match="legacy kwarg"):
+        stable_sweep("snow", 50, 4, [0], net=NetworkSpec(),
+                     loss=LossModel(rate=0.1, seed=0))
+
+
+def test_resolve_specs_maps_legacy_kwargs():
+    loss = LossModel(rate=0.1, seed=3)
+    with pytest.warns(DeprecationWarning):
+        net, run = resolve_specs(None, None, caller="t", engine="events",
+                                 backend="numpy", view_model="stale",
+                                 loss=loss)
+    assert net.loss is loss and net.repair is None
+    assert (run.engine, run.backend, run.view_model) == \
+        ("events", "numpy", "stale")
+    with _no_deprecation():
+        net, run = resolve_specs(None, None, caller="t")
+    assert net == NetworkSpec() and run == RunSpec()
+
+
+# -- spec validation ----------------------------------------------------------
+
+def test_network_spec_validation():
+    top = Topology(100)
+    with pytest.raises(ValueError, match="locality"):
+        NetworkSpec(locality="rack")
+    with pytest.raises(ValueError, match="needs a topology"):
+        NetworkSpec(locality="zone")
+    with pytest.raises(ValueError, match="conflicts"):
+        NetworkSpec(latency=HierarchicalLatency(top),
+                    topology=Topology(100, seed=9))
+    with pytest.raises(ValueError, match="carrier"):
+        NetworkSpec(latency=HierarchicalLatency(
+            top, loss_rates=(0.0, 0.0, 0.0, 0.1)))
+    # locality via a bare topology (flat latency) is allowed
+    net = NetworkSpec(topology=top, locality="zone")
+    ring = net.ring(np.arange(100))
+    assert sorted(ring.tolist()) == list(range(100))
+    with pytest.raises(ValueError, match="view_model"):
+        RunSpec(view_model="psychic")
+
+
+def test_loss_on_gates():
+    loss = LossModel(rate=0.0, seed=0)
+    top = Topology(50)
+    assert not NetworkSpec(loss=loss).loss_on        # flat rate 0: inert
+    assert NetworkSpec(loss=LossModel(rate=0.1, seed=0)).loss_on
+    assert NetworkSpec(
+        latency=HierarchicalLatency(top, loss_rates=(0, 0, 0, 0.2)),
+        loss=loss).loss_on                           # per-tier rates alone
+
+
+# -- backend precedence -------------------------------------------------------
+
+def test_backend_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_ENGINE_BACKEND", raising=False)
+    assert default_backend() == "numpy"
+    assert _resolve_backend(None) == "numpy"
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "jax")
+    assert default_backend() == "jax"
+    assert _resolve_backend(None) == "jax"       # env fills None...
+    assert _resolve_backend("numpy") == "numpy"  # ...explicit always wins
+
+
+def test_run_spec_backend_beats_env(monkeypatch):
+    """An explicit RunSpec.backend must produce the numpy float64
+    program even under REPRO_ENGINE_BACKEND=jax."""
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "jax")
+    kw = dict(n=80, k=4, n_messages=2, seed=1)
+    forced = run_stable_vectorized("snow", **kw, run=RunSpec(backend="numpy"))
+    monkeypatch.delenv("REPRO_ENGINE_BACKEND")
+    plain = run_stable_vectorized("snow", **kw)
+    for mid_a, mid_b in zip(sorted(forced.metrics.start),
+                            sorted(plain.metrics.start)):
+        assert np.array_equal(forced.metrics.times_for(mid_a),
+                              plain.metrics.times_for(mid_b))
+
+
+# -- ExperimentSpec integration ----------------------------------------------
+
+def test_experiment_spec_fingerprint_compat():
+    """Result files written before the ``net`` field existed must still
+    fingerprint-match: ``asdict`` omits the field entirely when None."""
+    legacy = ExperimentSpec(name="t", ns=(50,), seeds=(0,))
+    assert "net" not in legacy.asdict()
+    net = NetworkSpec(latency=HierarchicalLatency(Topology(50)),
+                      locality="zone")
+    d = ExperimentSpec(name="t", ns=(50,), seeds=(0,), net=net).asdict()
+    assert d["net"]["latency"]["__class__"] == "HierarchicalLatency"
+    assert d["net"]["locality"] == "zone"

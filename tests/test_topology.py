@@ -1,0 +1,192 @@
+"""Hierarchical cloud topology model (DESIGN.md §12).
+
+Covers the coordinate assignment (scalar/vector twin equality, seeding,
+churn-stability), the tier formula, the locality ring order, the
+:class:`~repro.core.topology.HierarchicalLatency` scalar-vs-plane hooks,
+and the planner property tests: ``locality="zone"`` rings preserve the
+balance invariant (leaf-depth spread ≤ 1) and the fan-out bound
+(child count ≤ k) on randomized coordinate assignments.
+"""
+import random
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.coloring import PRIMARY, SECONDARY
+from repro.core.membership import MembershipView
+from repro.core.planner import plan_broadcast, plan_colored, plan_two_trees
+from repro.core.sim import LatencyModel
+from repro.core.topology import (TIER_NAMES, DelayModel, FlatLognormal,
+                                 HierarchicalLatency, Topology,
+                                 _REF_MEDIAN_S)
+
+
+# -- coordinate assignment ----------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 17])
+def test_coords_scalar_vector_twins(seed):
+    """The vectorized ``coords`` must equal the scalar ``coord`` id for
+    id — including churn joiner ids far beyond n."""
+    top = Topology(200, regions=3, zones_per_region=4, racks_per_zone=8,
+                   seed=seed)
+    ids = np.array([0, 1, 7, 199, 200, 5000, 10 ** 9])
+    reg, zon, rck = top.coords(ids)
+    for j, i in enumerate(ids):
+        assert top.coord(int(i)) == (reg[j], zon[j], rck[j])
+        assert top.rack_of(int(i)) == rck[j]
+        assert 0 <= rck[j] < top.total_racks
+        assert zon[j] == rck[j] // top.racks_per_zone
+        assert reg[j] == zon[j] // top.zones_per_region
+
+
+def test_placement_seeded_and_deterministic():
+    a = Topology(1000, seed=0)
+    b = Topology(1000, seed=0)
+    c = Topology(1000, seed=1)
+    ids = np.arange(1000)
+    assert np.array_equal(a.coords(ids)[2], b.coords(ids)[2])
+    assert not np.array_equal(a.coords(ids)[2], c.coords(ids)[2])
+    # placement is a pure function of the id: n is only a hint, so a
+    # joiner's coordinate never depends on cluster size
+    assert Topology(10, seed=0).coord(123456) == a.coord(123456)
+
+
+def test_placement_scatters_ids():
+    """Adjacent ids must not land in the same rack systematically — the
+    cloud-scheduler model the locality reorder exists to beat."""
+    top = Topology(2000, seed=0)
+    _, _, rck = top.coords(np.arange(2000))
+    same = float(np.mean(rck[1:] == rck[:-1]))
+    assert same < 0.05    # ~1/total_racks ≈ 0.0104 expected
+    # and every rack is populated at this density
+    assert len(np.unique(rck)) == top.total_racks
+
+
+def test_tier_formula():
+    top = Topology(500, seed=3)
+    ids = np.arange(500)
+    t = top.tiers(ids[:-1], ids[1:])
+    assert t.min() >= 0 and t.max() <= 3
+    # symmetry and self-tier
+    assert np.array_equal(t, top.tiers(ids[1:], ids[:-1]))
+    assert np.all(top.tiers(ids, ids) == 0)
+    for u, v in [(0, 1), (3, 499), (7, 7)]:
+        assert top.tier(u, v) == top.tiers([u], [v])[0]
+    assert len(TIER_NAMES) == 4
+
+
+def test_locality_order_is_sorted_permutation():
+    top = Topology(777, seed=5)
+    members = np.arange(777)
+    ring = top.locality_order(members)
+    assert sorted(ring.tolist()) == members.tolist()
+    reg, zon, rck = top.coords(ring)
+    key = list(zip(reg.tolist(), zon.tolist(), rck.tolist(), ring.tolist()))
+    assert key == sorted(key)
+    # a view's helper returns the same permutation
+    view = MembershipView(range(777))
+    assert np.array_equal(view.locality_members(top), ring)
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        Topology(0)
+    with pytest.raises(ValueError):
+        Topology(10, regions=0)
+    top = Topology(10)
+    with pytest.raises(ValueError):
+        HierarchicalLatency(top, rtt_s=(1.0, 2.0, 3.0))        # not 4
+    with pytest.raises(ValueError):
+        HierarchicalLatency(top, rtt_s=(0.01, 0.005, 0.1, 1.0))  # decreasing
+    with pytest.raises(ValueError):
+        HierarchicalLatency(top, loss_rates=(0.5, 0.5, 0.5, 1.5))
+
+
+# -- DelayModel hooks ---------------------------------------------------------
+
+def test_flat_model_is_reference_latency():
+    flat = FlatLognormal()
+    assert isinstance(flat, DelayModel) and not flat.hierarchical
+    lat = flat.latency_model()
+    assert lat.median_s == LatencyModel.median_s == _REF_MEDIAN_S
+    assert lat.sigma == LatencyModel.sigma
+
+
+def test_hier_bank_stream_is_reference_stream():
+    """The sampled jitter stream keeps the flat reference median — the
+    tiering is purely a consumption-time scale (bit-exactness contract)."""
+    hier = HierarchicalLatency(Topology(100), sigma=0.35)
+    assert isinstance(hier, DelayModel) and hier.hierarchical
+    lat = hier.latency_model()
+    assert lat.median_s == _REF_MEDIAN_S
+    assert hier.scale_table == tuple(r / _REF_MEDIAN_S for r in hier.rtt_s)
+
+
+def test_scale_and_tier_planes_match_scalars():
+    n, k = 257, 4
+    hier = HierarchicalLatency(Topology(n, seed=9),
+                               loss_rates=(0.0, 0.01, 0.02, 0.1))
+    for plan in plan_two_trees(range(n), 13, k):
+        tiers = hier.tier_plane(plan)
+        scale = hier.scale_plane(plan)
+        rates = hier.loss_rate_plane(plan)
+        members = np.asarray(plan.members)
+        parent = np.asarray(plan.parent)
+        assert tiers[plan.root] == 0 and scale[plan.root] == 1.0
+        for i in range(n):
+            if i == plan.root or parent[i] < 0:
+                continue
+            src, dst = int(members[parent[i]]), int(members[i])
+            assert tiers[i] == hier.tier(src, dst)
+            assert scale[i] == hier.link_scale(src, dst)
+            assert rates[i] == hier.loss_rate(src, dst)
+    assert HierarchicalLatency(Topology(n)).loss_rate_plane(plan) is None
+
+
+# -- planner property tests: locality rings preserve the invariants ----------
+
+def _check_plan_invariants(plan, n, k, ctx):
+    parent = np.asarray(plan.parent)
+    depth = np.asarray(plan.depth)
+    assert (depth >= 0).all(), ctx                   # everyone covered
+    assert int((parent < 0).sum()) == 1, ctx         # exactly one root
+    counts = Counter(parent[parent >= 0].tolist())
+    assert max(counts.values()) <= k, (*ctx, max(counts.values()))
+    internal = set(counts)
+    leaf_d = [int(depth[i]) for i in range(n) if i not in internal]
+    assert max(leaf_d) - min(leaf_d) <= 1, (*ctx, min(leaf_d), max(leaf_d))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_locality_ring_preserves_balance(seed):
+    rng = random.Random(seed)
+    for _ in range(12):
+        n = rng.randint(5, 600)
+        k = rng.choice([2, 4, 8])
+        top = Topology(n, regions=rng.randint(1, 4),
+                       zones_per_region=rng.randint(1, 5),
+                       racks_per_zone=rng.randint(1, 9),
+                       seed=rng.randint(0, 10 ** 6))
+        members = np.arange(n)
+        ring = top.locality_order(members)
+        root = rng.randrange(n)
+        plan = plan_broadcast(members, root, k, ring=ring)
+        assert sorted(np.asarray(plan.members).tolist()) == members.tolist()
+        _check_plan_invariants(plan, n, k, ("snow", n, k, seed))
+        for tree in (PRIMARY, SECONDARY):
+            plan = plan_colored(members, root, k, tree, ring=ring)
+            _check_plan_invariants(plan, n, k, ("colored", tree, n, k, seed))
+
+
+def test_locality_ring_matches_uniform_shape():
+    """The locality ring is a pure permutation: the (start, length)
+    index arithmetic sees the same ring size, so tree height equals the
+    uniform plan rooted at the same ring index."""
+    n, k = 1024, 4
+    top = Topology(n, seed=4)
+    ring = top.locality_order(np.arange(n))
+    root = int(ring[17])
+    loc = plan_broadcast(np.arange(n), root, k, ring=ring)
+    uni = plan_broadcast(np.arange(n), 17, k)
+    assert loc.height == uni.height
