@@ -27,6 +27,7 @@ SECTION_MODULES = {
     "fanout_k_fig6b": "bench_fanout_k",
     "paper_repro": "paper_repro",
     "locality_scale": "bench_locality",
+    "replan_scale": "bench_replan",
     "children_micro": "bench_children_micro",
     "collectives": "bench_collectives",
     "kernels": "bench_kernels",
@@ -44,6 +45,8 @@ LDT_REL_TOL = 0.35        # seeded smoke LDT may drift only this much
 MIN_VEC_SPEEDUP = 5.0     # closed-form engine must stay clearly ahead
 MIN_CHURN_VEC_SPEEDUP = 3.0   # epoch-segmented churn engine floor (the
                               # smoke n is small; full bench shows 20x+)
+MIN_REPLAN_SPEEDUP = 10.0     # delta vs full re-plan per 1-event epoch
+                              # at n=1M (DESIGN.md §13; measured ~17x)
 # §5.4 redundancy bands: snow must never send a redundant byte in the
 # stable scenario (structural disjointness), gossip must keep its
 # duplicate floor (k-1 of every k forwards are redundant: ~3 x 108 B)
@@ -153,7 +156,8 @@ def _check(sections, metrics) -> list:
                 # absolute floor — fires even when the baseline predates
                 # the metric, so a collapsed engine can't hide behind a
                 # stale smoke_baseline.json
-                floor = (MIN_CHURN_VEC_SPEEDUP if "churn" in key
+                floor = (MIN_REPLAN_SPEEDUP if "replan" in key
+                         else MIN_CHURN_VEC_SPEEDUP if "churn" in key
                          else MIN_VEC_SPEEDUP)
                 if mval < floor:
                     problems.append(f"{name}: {key} "
@@ -246,7 +250,7 @@ def main(argv=None) -> None:
         # protocol-layer sections only; the jax kernel/roofline benches
         # have their own timings and dominate smoke wall-time
         names = ["scale_n_fig6a", "device_scale", "paper_repro",
-                 "locality_scale", "children_micro"]
+                 "locality_scale", "replan_scale", "children_micro"]
     else:
         names = list(SECTIONS)
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict
 
-from .topology import broadcast_schedule, two_tree_schedules
+from .topology import (broadcast_schedule, schedule_delta, schedule_for_plan,
+                       two_tree_schedules)
 
 
 @dataclass(frozen=True)
@@ -58,6 +59,25 @@ def two_tree_broadcast_time(nbytes: int, p: int, k: int, tier: Tier) -> float:
     tp, ts = two_tree_schedules(p, 0, k)
     rounds = max(len(tp), len(ts))
     return rounds * (tier.alpha_s + (nbytes / 2) / tier.beta_Bps)
+
+
+def plan_broadcast_time(plan, nbytes: int, tier: Tier,
+                        prev_plan=None, prev_rounds=None) -> float:
+    """α-β broadcast time of an **arbitrary** :class:`TreePlan` — the
+    elastic runtime's entry point: the fleet's current carve plans a
+    snow tree over whatever hosts survive, and the cost model prices it
+    without assuming a dense ``range(axis_size)`` ring.
+
+    Schedule compilation is memoized on the plan fingerprint
+    (:func:`~repro.collectives.topology.schedule_for_plan`); passing the
+    previous epoch's ``(prev_plan, prev_rounds)`` routes through
+    :func:`~repro.collectives.topology.schedule_delta` so only changed
+    rounds recompile across an epoch transition."""
+    if prev_plan is not None and prev_rounds is not None:
+        rounds = schedule_delta(plan, prev_plan, prev_rounds)
+    else:
+        rounds = schedule_for_plan(plan)
+    return len(rounds) * (tier.alpha_s + nbytes / tier.beta_Bps)
 
 
 def best_broadcast(nbytes: int, p: int, k: int, tier: Tier) -> Dict:

@@ -17,13 +17,17 @@ bisection bandwidth, the paper's SplitStream-style option.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.coloring import PRIMARY, SECONDARY
 from repro.core.planner import TreePlan, plan_broadcast, plan_two_trees
 from repro.core.tree import Trace
 
 Round = List[Tuple[int, int]]
+Rounds = Tuple[Tuple[Tuple[int, int], ...], ...]
 
 
 def _schedule_from_children(root: int, children: Dict[int, List[int]]
@@ -74,12 +78,133 @@ def _schedule_from_plan(p: TreePlan) -> List[Round]:
     return _schedule_from_children(p.root, p.children_lists())
 
 
+# ------------------------------------------------------------------ #
+# Closed-form round compilation + fingerprint-keyed memoization        #
+# ------------------------------------------------------------------ #
+def _recv_rounds(p: TreePlan) -> np.ndarray:
+    """(n,) closed-form receive round of every node, vectorized.
+
+    The greedy compiler (:func:`_schedule_from_children`) admits a
+    closed form: an available parent sends one pending child per round
+    in emission (slot) order, starting the round after it received, and
+    is never delayed — so ``recv(v) = recv(parent(v)) + 1 + sib(v)``
+    with ``recv(root) = -1``, where ``sib`` is the child's rank among
+    its siblings.  One lexsort for sibling ranks plus one pass over the
+    plan's cached depth levels; no per-round Python loop.  Pinned
+    edge-for-edge against the greedy in tests/test_collectives.py.
+    """
+    parent = np.asarray(p.parent)
+    depth = np.asarray(p.depth)
+    slot = np.asarray(p.slot)
+    reached = np.nonzero((depth >= 1) & (parent >= 0))[0]
+    r = np.full(parent.shape[0], -1, dtype=np.int64)
+    if reached.size == 0:
+        return r
+    order = reached[np.lexsort((slot[reached], parent[reached]))]
+    par_o = parent[order]
+    newgrp = np.empty(order.shape[0], dtype=bool)
+    newgrp[0] = True
+    newgrp[1:] = par_o[1:] != par_o[:-1]
+    first = np.nonzero(newgrp)[0]
+    sib = np.arange(order.shape[0]) - first[np.cumsum(newgrp) - 1]
+    sibling = np.zeros(parent.shape[0], dtype=np.int64)
+    sibling[order] = sib
+    for lvl in p.levels:
+        r[lvl] = r[parent[lvl]] + 1 + sibling[lvl]
+    return r
+
+
+def _rounds_closed_form(p: TreePlan,
+                        recv: Optional[np.ndarray] = None) -> Rounds:
+    """ppermute rounds from the closed-form receive rounds: round ``i``
+    is every edge ``(parent(v), v)`` with ``recv(v) == i``, sorted by
+    source (each source sends at most once per round, so source order is
+    total) — exactly the greedy compiler's output."""
+    parent = np.asarray(p.parent)
+    depth = np.asarray(p.depth)
+    reached = np.nonzero((depth >= 1) & (parent >= 0))[0]
+    if reached.size == 0:
+        return ()
+    r = _recv_rounds(p) if recv is None else recv
+    eorder = reached[np.lexsort((parent[reached], r[reached]))]
+    rr = r[eorder]
+    n_rounds = int(rr[-1]) + 1
+    bounds = np.searchsorted(rr, np.arange(n_rounds + 1))
+    src, dst = parent[eorder].tolist(), eorder.tolist()
+    return tuple(
+        tuple(zip(src[bounds[i]:bounds[i + 1]], dst[bounds[i]:bounds[i + 1]]))
+        for i in range(n_rounds))
+
+
+#: fingerprint → compiled rounds; epochs sharing plan structure (crash
+#: boundaries reuse plan objects, delta chains share fingerprints on
+#: no-op transitions) skip schedule compilation entirely
+_PLAN_SCHEDULES: "OrderedDict[str, Rounds]" = OrderedDict()
+_PLAN_SCHEDULES_MAX = 128
+
+
+def schedule_for_plan(p: TreePlan) -> Rounds:
+    """Compiled ppermute rounds of an arbitrary :class:`TreePlan`,
+    memoized on :attr:`TreePlan.fingerprint` (LRU, 128 entries) — the
+    satellite memoization of ISSUE 9: repeated epochs whose plans are
+    structurally shared compile their schedule once."""
+    key = p.fingerprint
+    sched = _PLAN_SCHEDULES.get(key)
+    if sched is None:
+        sched = _rounds_closed_form(p)
+        _PLAN_SCHEDULES[key] = sched
+        if len(_PLAN_SCHEDULES) > _PLAN_SCHEDULES_MAX:
+            _PLAN_SCHEDULES.popitem(last=False)
+    else:
+        _PLAN_SCHEDULES.move_to_end(key)
+    return sched
+
+
+def schedule_delta(plan: TreePlan, prev_plan: TreePlan,
+                   prev_rounds: Rounds) -> Rounds:
+    """Recompile only the rounds whose edges changed.
+
+    For a same-size plan pair (crash-only boundaries, net-zero
+    evict+join boundaries, a re-rooted device axis), a round is
+    unchanged iff every node it delivers keeps its receive round and its
+    parent — then the edge segment and its source ordering are identical
+    and the previous round **tuple object** is reused outright (the
+    Python tuple construction is the expensive part; the vectorized
+    comparison is three array ops).  Size-changed plans recompile in
+    full — ring indices shift, so edge identity does not survive.
+    """
+    if plan is prev_plan:
+        return prev_rounds
+    if len(plan) != len(prev_plan):
+        return schedule_for_plan(plan)
+    r_new = _recv_rounds(plan)
+    r_prev = _recv_rounds(prev_plan)
+    same = (r_new == r_prev) & (np.asarray(plan.parent)
+                                == np.asarray(prev_plan.parent))
+    new_rounds = _rounds_closed_form(plan, recv=r_new)
+    n_r = len(new_rounds)
+    # a new round is reusable iff none of its nodes changed and the
+    # previous round delivered the same number of nodes (subset + equal
+    # count ⇒ equal set)
+    bad = np.bincount(r_new[(r_new >= 0) & ~same], minlength=n_r)
+    cnt_new = np.bincount(r_new[r_new >= 0], minlength=n_r)
+    cnt_prev = np.bincount(r_prev[r_prev >= 0], minlength=n_r)
+    out = []
+    for i, rnd in enumerate(new_rounds):
+        if i < len(prev_rounds) and bad[i] == 0 \
+                and cnt_prev[i] == cnt_new[i]:
+            out.append(prev_rounds[i])
+        else:
+            out.append(rnd)
+    return tuple(out)
+
+
 @functools.lru_cache(maxsize=256)
 def broadcast_schedule(axis_size: int, root: int = 0, k: int = 2
                        ) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
     """Standard Snow tree → tuple of ppermute rounds (hashable/cacheable)."""
     p = plan_broadcast(range(axis_size), root, k)
-    return tuple(tuple(rnd) for rnd in _schedule_from_plan(p))
+    return schedule_for_plan(p)
 
 
 @functools.lru_cache(maxsize=256)
@@ -96,8 +221,7 @@ def reduce_schedule(axis_size: int, root: int = 0, k: int = 2
 def two_tree_schedules(axis_size: int, root: int = 0, k: int = 2):
     """(primary, secondary) schedules of the Coloring double tree."""
     p, s = plan_two_trees(range(axis_size), root, k)
-    return (tuple(tuple(r) for r in _schedule_from_plan(p)),
-            tuple(tuple(r) for r in _schedule_from_plan(s)))
+    return schedule_for_plan(p), schedule_for_plan(s)
 
 
 def schedule_depth(axis_size: int, k: int, root: int = 0) -> int:

@@ -419,6 +419,41 @@ def flash_crowd_trace(n: int, n_messages: int = 30, rate_s: float = 1.0,
                       msg_times=tuple(i * rate_s for i in range(n_messages)))
 
 
+def single_churn_trace(n: int, n_epochs: int = 8, rate_s: float = 1.0,
+                       kind: str = "alternate") -> ChurnTrace:
+    """Exactly one membership event per epoch boundary — the
+    delta-replanning workload (DESIGN.md §13, ``benchmarks/
+    bench_replan.py``): every boundary dirties a single root-to-leaf
+    spine, the regime where :func:`~repro.core.planner.plan_delta`
+    shines.  One broadcast per epoch, ``n_epochs + 1`` epochs total.
+
+    ``kind``: ``"join"`` — a fresh transient joins each boundary (the
+    fleet grows by one per epoch); ``"leave"`` — the highest fixed
+    non-source id leaves each boundary (shrinks by one); ``"alternate"``
+    — a transient joins, then leaves at the next boundary (size
+    oscillates n ↔ n+1, the steady-state cloud pattern of instance
+    replacement at the top of the id space)."""
+    assert kind in ("join", "leave", "alternate"), kind
+    events: List[ChurnEvent] = []
+    next_id = n
+    for i in range(n_epochs):
+        t = (i + 1) * rate_s - 0.5 * rate_s
+        if kind == "join":
+            events.append(ChurnEvent(t, "join", next_id))
+            next_id += 1
+        elif kind == "leave":
+            events.append(ChurnEvent(t, "leave", n - 1 - i))
+        elif i % 2 == 0:
+            events.append(ChurnEvent(t, "join", next_id))
+        else:
+            events.append(ChurnEvent(t, "leave", next_id))
+            next_id += 1
+    if kind == "leave":
+        assert n_epochs < n - 1, "leave trace would drain the fleet"
+    return ChurnTrace(n=n, events=tuple(events),
+                      msg_times=tuple(i * rate_s for i in range(n_epochs + 1)))
+
+
 def rolling_restart_trace(n: int, n_messages: int = 30, rate_s: float = 1.0,
                           batch: int = 1, downtime_s: float = 2.0,
                           src: NodeId = 0) -> ChurnTrace:

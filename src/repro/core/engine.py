@@ -76,7 +76,7 @@ from .faults import LossModel, RepairModel
 from .ids import NodeId
 from .messages import Data
 from .planner import (PRIMARY, SECONDARY, TreePlan, depth_levels,
-                      plan_broadcast, plan_colored)
+                      plan_broadcast, plan_colored, plan_delta_chain)
 from .sim import LatencyModel, Metrics, Sim, straggler_sample
 from .specs import NetworkSpec, RunSpec, resolve_specs
 from .topology import TIER_NAMES, HierarchicalLatency
@@ -990,20 +990,77 @@ class _EpochPlan:
         return int(self.times.shape[0])
 
 
+#: boundaries with more effective membership events than this re-plan
+#: from scratch — folding E deltas costs E block-copy passes, a full
+#: re-plan one expansion, so the crossover sits at a handful of events
+_DELTA_MAX_EVENTS = 16
+
+
+def _rows_delta(rows: np.ndarray, bank_members: np.ndarray,
+                ev) -> np.ndarray:
+    """Incrementally maintain an epoch's member→bank-row map through one
+    membership event — the O(n) memcpy companion of
+    :func:`~repro.core.planner.plan_delta` (``rows`` is ascending
+    because members and the bank are both id-sorted, so the edit point
+    is a binary search, not a full ``searchsorted`` over the view)."""
+    if ev.kind == "crash":
+        return rows
+    b = int(np.searchsorted(bank_members, ev.node))
+    p = int(np.searchsorted(rows, b))
+    if ev.kind == "join":
+        return np.insert(rows, p, b)
+    return np.delete(rows, p)
+
+
 def compile_trace(protocol: str, trace: ChurnTrace, k: int,
                   bank_members: np.ndarray,
-                  payload: int = 64) -> List[_EpochPlan]:
+                  payload: int = 64,
+                  replan: str = "delta") -> List[_EpochPlan]:
     """Segment ``trace`` into epochs and plan each one — everything that
     depends on the trace but NOT on the delay seed, so multi-seed sweeps
-    (``trace_sweep``) pay for planning once."""
+    (``trace_sweep``) pay for planning once.
+
+    ``replan="delta"`` (default) derives epoch ``e+1``'s plan set from
+    epoch ``e``'s via :func:`~repro.core.planner.plan_delta` — the dirty
+    spine is recomputed, every unchanged subtree is block-transferred,
+    and crash-only boundaries reuse the previous plan objects outright
+    (so their cached ``levels``/``fingerprint`` survive the boundary).
+    Bit-identical to ``replan="full"`` (a from-scratch
+    :func:`stable_plans` per epoch) by the planner's delta contract;
+    boundaries with more than ``_DELTA_MAX_EVENTS`` membership events,
+    shrunken degenerate views, or fold/segmentation disagreements fall
+    back to the full path per epoch."""
     size = Data(0, 0, None, None, payload).size
+    if replan not in ("delta", "full"):
+        raise ValueError(f"replan must be 'delta' or 'full', got {replan!r}")
+    trans = dict(trace.transitions()) if replan == "delta" else {}
+    prev: Optional[_EpochPlan] = None
     out: List[_EpochPlan] = []
     for ep in trace.epochs():
         members = ep.members
         assert int(np.searchsorted(members, trace.src)) < members.shape[0] \
             and members[np.searchsorted(members, trace.src)] == trace.src, \
             "the broadcast source left or was evicted mid-trace"
-        plans = stable_plans(protocol, members, trace.src, k)
+        plans = rows = None
+        evs = trans.get(ep.first)
+        n_memb = 0 if evs is None else sum(e.kind != "crash" for e in evs)
+        if prev is not None and evs is not None \
+                and n_memb <= _DELTA_MAX_EVENTS \
+                and members.shape[0] > 2 and prev.members.shape[0] > 2:
+            try:
+                plans = plan_delta_chain(prev.plans, evs)
+            except ValueError:     # e.g. the root leaving mid-fold
+                plans = None
+            if plans is not None \
+                    and np.array_equal(plans[0].members, members):
+                rows = prev.rows
+                for e in evs:
+                    rows = _rows_delta(rows, bank_members, e)
+            else:                  # fold/segmentation disagreement
+                plans = None
+        if plans is None:
+            plans = stable_plans(protocol, members, trace.src, k)
+            rows = np.searchsorted(bank_members, members)
         cmask = np.isin(members, ep.crashed) if ep.crashed.size else None
         reach: List[Optional[np.ndarray]] = []
         receipts = np.zeros(members.shape[0], dtype=np.int64)
@@ -1017,12 +1074,12 @@ def compile_trace(protocol: str, trace: ChurnTrace, k: int,
                 reach.append(ok)
                 receipts += ok & covered
         out.append(_EpochPlan(
-            members=members,
-            rows=np.searchsorted(bank_members, members),
+            members=members, rows=rows,
             first=ep.first, times=ep.times, plans=plans,
             reach=tuple(reach), nbytes=size * int(receipts.sum()),
             src_index=int(np.searchsorted(members, trace.src)),
             receipts=receipts, frame=size, crashed_mask=cmask))
+        prev = out[-1]
     return out
 
 
@@ -1127,7 +1184,8 @@ def run_trace_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
     if bank is None:
         bank = bank_for_trace(seed, trace, protocol,
                               latency=net.latency_model())
-    epochs = compile_trace(protocol, trace, k, bank.members, payload)
+    epochs = compile_trace(protocol, trace, k, bank.members, payload,
+                           replan=run.replan)
     metrics = ArrayMetrics(bank.members)
     lossy = net.loss_on
     tier_acc = None if hier is None else np.zeros(4)
@@ -1316,8 +1374,8 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
                                backend: Optional[str] = None,
                                bank: Optional[DelayBank] = None,
                                epochs: Optional[List[_EpochPlan]] = None,
-                               control: Optional[ControlParams] = None
-                               ) -> VectorCluster:
+                               control: Optional[ControlParams] = None,
+                               replan: str = "delta") -> VectorCluster:
     """Replay a :class:`ChurnTrace` with **divergent views** in closed
     form — the model behind the paper's §5.4 redundancy claim.
 
@@ -1360,7 +1418,8 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
         bank = bank_for_trace(seed, trace, protocol,
                               extra_messages=len(trans))
     eplans = epochs if epochs is not None else \
-        compile_trace(protocol, trace, k, bank.members, payload)
+        compile_trace(protocol, trace, k, bank.members, payload,
+                      replan=replan)
     raw = trace.epochs()
     metrics = ArrayMetrics(bank.members)
     src_row = int(np.searchsorted(bank.members, trace.src))
@@ -1396,14 +1455,19 @@ def run_trace_stale_vectorized(protocol: str, trace: ChurnTrace, k: int = 4,
         t_e, kind, subject = origin
         prev = eplans[i - 1]
         if kind == "join":
-            aroot, amembers = subject, ep.members
+            aroot, amembers, arows = subject, ep.members, ep.rows
         elif kind == "leave":
-            aroot, amembers = subject, prev.members
+            aroot, amembers, arows = subject, prev.members, prev.rows
         else:                                   # evict: detector surrogate
-            aroot, amembers = trace.src, ep.members
+            aroot, amembers, arows = trace.src, ep.members, ep.rows
         # -- adoption sweep: the MemberUpdate broadcast itself ----------
-        aplan = plan_broadcast(amembers, aroot, k)
-        arows = np.searchsorted(bank.members, amembers)
+        # an evict announcement is a standard tree over the epoch's view
+        # rooted at the detector — structurally the epoch's own snow
+        # plan, so reuse it (delta chains keep its levels cache warm)
+        if kind == "evict" and ep.plans[0].tree is None:
+            aplan = ep.plans[0]
+        else:
+            aplan = plan_broadcast(amembers, aroot, k)
         a_t = delivery_times(
             aplan, bank.fwd[arows, update_col, 0],
             bank.link[arows, update_col, 0], t0=t_e, backend=backend)
@@ -1555,7 +1619,8 @@ def trace_sweep(protocol: str, trace: ChurnTrace, k: int,
     plan_s = 0.0
     if epochs is None:
         tp = time.time()
-        epochs = compile_trace(protocol, trace, k, bank_members, payload)
+        epochs = compile_trace(protocol, trace, k, bank_members, payload,
+                               replan=run.replan)
         plan_s = time.time() - tp
     ctl = snow_trace_control(
         trace, params=_repair_control_params(control, repair)) \

@@ -346,8 +346,11 @@ def _stale_rows(spec: ExperimentSpec, cell: Cell, trace: ChurnTrace,
                                  or spec.net.loss is not None):
         raise NotImplementedError(
             "stale-view cells model the flat uniform lossless fabric only")
+    # epoch plans are delta-chained (epoch e+1 derives from epoch e —
+    # bit-identical to full re-plans, see planner.plan_delta) and
+    # compiled once across all seeds
     epochs = compile_trace(cell.protocol, trace, cell.k, trace.all_ids(),
-                           cell.payload)
+                           cell.payload, replan="delta")
     fixed = set(range(cell.n))
     rows = []
     for seed in spec.seeds:

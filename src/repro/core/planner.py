@@ -25,6 +25,7 @@ host; each level's math is pure array ops.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -93,6 +94,8 @@ class TreePlan:
     slot: Any                    #: (n,) emission order among siblings
     k: int
     tree: Optional[int] = None   #: None=standard, 0=primary, 1=secondary
+    delta: Optional["PlanDelta"] = None  #: provenance when derived by
+                                 #: :func:`plan_delta`; None for full plans
 
     def __len__(self) -> int:
         return int(self.members.shape[0])
@@ -112,6 +115,22 @@ class TreePlan:
         plan instance, shared by every sweep over it (``cached_property``
         writes straight to ``__dict__``, bypassing the frozen guard)."""
         return depth_levels(np.asarray(self.depth))
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Structural content hash of (n, root, k, tree, parent, depth,
+        slot) — two plans with equal fingerprints compile to identical
+        ppermute schedules, so the collectives layer memoizes schedule
+        compilation on it (repeated epochs sharing plan objects or plan
+        structure skip the rebuild).  Cached per instance."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.asarray(
+            [self.n, self.root, self.k,
+             -1 if self.tree is None else self.tree],
+            dtype=np.int64).tobytes())
+        for a in (self.parent, self.depth, self.slot):
+            h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+        return h.hexdigest()
 
     @property
     def leaf_mask(self):
@@ -272,11 +291,14 @@ def _emit_leaf_run(xp, rec, n, depth, node, start, length, slot0):
             depth, idx, xp.ones_like(idx), (slot0[:, None] + T)[valid])
 
 
-def _expand(xp, n, k, frontier, depth, rec, want=None, i0=None):
+def _expand(xp, n, k, frontier, depth, rec, want=None, i0=None,
+            with_slots=False):
     """One synchronous level: expand every frontier region at once.
 
     ``frontier`` is ``(node, Ls, Ll, Rs, Rl)`` — each region as its two
-    index-space sides around the owning node.  Returns the next frontier.
+    index-space sides around the owning node.  Returns the next frontier
+    (with ``with_slots``, also the recursing children's slot values —
+    the delta planner pairs old/new children of one task by slot).
     """
     node, Ls, Ll, Rs, Rl = frontier
     kprime = k // 2
@@ -298,7 +320,8 @@ def _expand(xp, n, k, frontier, depth, rec, want=None, i0=None):
     smask = m > k
     if not bool(smask.any()):
         empty = node[:0]
-        return (empty, empty, empty, empty, empty)
+        fr = (empty, empty, empty, empty, empty)
+        return (fr, empty) if with_slots else fr
     snode, sLs, sLl, sRs, sRl = (a[smask] for a in (node, Ls, Ll, Rs, Rl))
     # both sides in one batched call: right rows fan out with slot base 0,
     # left rows with base k (not k', so no-on-color leaf runs can never
@@ -320,15 +343,17 @@ def _expand(xp, n, k, frontier, depth, rec, want=None, i0=None):
                            slot_base[allleaf, 0])
     cidx = (cstart + selfoff)[valid] % n
     cstart_v, clen_v, selfoff_v = cstart[valid], clen[valid], selfoff[valid]
+    slot_v = slot[valid]
     rec.add(xp, cidx,
             xp.broadcast_to(pnode[:, None], valid.shape)[valid],
-            depth + 1, cstart_v % n, clen_v, slot[valid])
+            depth + 1, cstart_v % n, clen_v, slot_v)
     recurse = clen_v > 1
     node2 = cidx[recurse]
     start2 = cstart_v[recurse] % n
     off2 = selfoff_v[recurse]
     len2 = clen_v[recurse]
-    return (node2, start2, off2, start2 + off2 + 1, len2 - off2 - 1)
+    fr = (node2, start2, off2, start2 + off2 + 1, len2 - off2 - 1)
+    return (fr, slot_v[recurse]) if with_slots else fr
 
 
 def _plan(members: np.ndarray, root_idx: int, k: int, backend,
@@ -392,6 +417,264 @@ def _plan(members: np.ndarray, root_idx: int, k: int, backend,
     return TreePlan(members=members, root=root_idx, parent=parent,
                     depth=depths, region_start=rstart, region_len=rlen,
                     slot=slots, k=k, tree=tree)
+
+
+# ------------------------------------------------------------------ #
+# Incremental delta re-planning (DESIGN.md §13)                        #
+# ------------------------------------------------------------------ #
+#: below this size a full re-plan is cheaper than the descent (and the
+#: degenerate bootstrap branches need no delta expression)
+_DELTA_MIN_N = 16
+
+
+@dataclass(frozen=True)
+class PlanDelta:
+    """Provenance of a plan derived by :func:`plan_delta`.
+
+    ``shared`` lists the structurally-shared subtree blocks as
+    ``(new_start, prev_start, length)`` ring-index spans: the new plan's
+    rows in ``[new_start, new_start+length)`` were block-transferred
+    from the previous plan's ``[prev_start, prev_start+length)`` rows
+    (parent/region_start shifted by ``new_start - prev_start``), not
+    recomputed.  ``recomputed`` counts the freshly expanded node records
+    — the dirty spine, O(k log n) for a single join/leave.
+
+    The record intentionally holds **no reference** to the previous
+    plan (an epoch chain would otherwise pin every plan of the trace in
+    memory); pass it to :meth:`shared_view` explicitly.
+    """
+
+    kind: str                            #: "join" | "leave" | "evict"
+    node: int                            #: the member id added/removed
+    pos: int                             #: ring index inserted at/removed from
+    shared: Tuple[Tuple[int, int, int], ...]  #: (new_start, prev_start, len)
+    recomputed: int                      #: freshly recomputed node records
+
+    @property
+    def shared_nodes(self) -> int:
+        return sum(ln for _, _, ln in self.shared)
+
+    def shared_view(self, prev: "TreePlan", fld: str, i: int) -> np.ndarray:
+        """A true numpy **view** (no copy) into ``prev``'s ``fld`` array
+        for shared span ``i`` — the copy-on-write contract: unchanged
+        subtrees are read straight out of the previous epoch's buffers,
+        written at most once into the new plan's."""
+        _, ps, ln = self.shared[i]
+        return np.asarray(getattr(prev, fld))[ps:ps + ln]
+
+
+def _event_fields(event) -> Tuple[str, int]:
+    if isinstance(event, tuple):
+        kind, node = event
+    else:
+        kind, node = event.kind, event.node
+    return kind, int(node)
+
+
+def plan_delta(prev: TreePlan, event) -> TreePlan:
+    """Derive the next epoch's plan from ``prev`` and one membership
+    event — bit-identical to a from-scratch :func:`_plan` over the new
+    member array, in O(k log n) recomputed records plus block transfers.
+
+    ``event`` is anything with ``.kind``/``.node`` (a
+    :class:`repro.core.churn.ChurnEvent`) or a ``(kind, node)`` tuple;
+    kinds follow the trace semantics — ``join`` inserts the id,
+    ``leave``/``evict`` remove it, ``crash`` changes no view and
+    returns ``prev`` itself (identity sharing).
+
+    Why this is cheap: regions are ``(start, length)`` index arithmetic,
+    so the subtree below a node is a pure function of its region's
+    length, its self-offset and (for colored trees) its color phase —
+    member ids never enter.  A join/leave shifts ring indices by at most
+    one and changes region lengths only along the root-to-leaf spine
+    that absorbs the extra/missing slot, so every off-spine subtree of
+    the new plan equals an old subtree translated by ``Δ ∈ {-1, 0, 1}``
+    and can be block-transferred instead of re-expanded.  Colored trees
+    additionally require the translation to preserve color parity
+    (``Δ`` even) — odd-shifted colored subtrees are recomputed, which is
+    why end-of-ring churn (cloud transients, ids allocated upward) keeps
+    both trees cheap while mid-ring churn degrades only the coloring
+    case.  ``prev`` must be a sorted-ring plan (no locality
+    permutation); the root may not be the leaver."""
+    kind, node = _event_fields(event)
+    if kind == "crash":
+        return prev
+    members = np.asarray(prev.members)
+    n_old = int(members.shape[0])
+    root_id = int(members[prev.root])
+    p = int(np.searchsorted(members, node))
+    present = p < n_old and int(members[p]) == node
+    if kind == "join":
+        if present:
+            return prev
+        new_members = np.insert(members, p, node)
+        i0n = prev.root + (1 if p <= prev.root else 0)
+    elif kind in ("leave", "evict"):
+        if not present:
+            return prev
+        if node == root_id:
+            raise ValueError(
+                "plan_delta: the tree root cannot leave its own plan")
+        new_members = np.delete(members, p)
+        i0n = prev.root - (1 if p < prev.root else 0)
+    else:
+        raise ValueError(f"unknown membership event kind {kind!r}")
+    n_new = int(new_members.shape[0])
+    if not isinstance(prev.parent, np.ndarray):
+        # device-resident plan (jax backend): no incremental path yet
+        return _plan(new_members, i0n, prev.k, "jax", prev.tree)
+    if min(n_old, n_new) < _DELTA_MIN_N:
+        return _plan(new_members, i0n, prev.k, "numpy", prev.tree)
+    return _delta_numpy(prev, kind, node, p, new_members, i0n)
+
+
+def _delta_numpy(prev: TreePlan, kind: str, node: int, p: int,
+                 new_members: np.ndarray, i0n: int) -> TreePlan:
+    n_o, n_n = int(prev.members.shape[0]), int(new_members.shape[0])
+    i0o, k, tree = prev.root, prev.k, prev.tree
+    want = None if tree is None else (0 if tree == PRIMARY else 1)
+
+    # every row is written exactly once (root + shared blocks + record
+    # scatter partition the ring, inductively — a uniform frozen view
+    # reaches every node), so skip _plan's fill-with-unreached init
+    out_parent = np.empty(n_n, dtype=np.int64)
+    out_depth = np.empty(n_n, dtype=np.int64)
+    out_rstart = np.empty(n_n, dtype=np.int64)
+    out_rlen = np.empty(n_n, dtype=np.int64)
+    out_slot = np.empty(n_n, dtype=np.int64)
+    pp, pd = np.asarray(prev.parent), np.asarray(prev.depth)
+    prs, prl = np.asarray(prev.region_start), np.asarray(prev.region_len)
+    psl = np.asarray(prev.slot)
+
+    rec = _Records()        # freshly recomputed records (the dirty spine)
+    trash = _Records()      # old-side re-expansions, discarded
+    shared: List[Tuple[int, int, int]] = []
+    one = lambda v: np.asarray([v])  # noqa: E731
+
+    def boot(n: int, i0: int) -> Tuple[Tuple[int, int, int, int, int], int]:
+        """The bootstrap task of :func:`_plan`, as python scalars."""
+        if tree == SECONDARY:
+            return ((i0 - 1) % n, (i0 + 1) % n, n - 2, i0, 0), 1
+        nprime = (n - 1) // 2
+        return (i0, (i0 + 1 + nprime) % n, (n - 1) - nprime,
+                (i0 + 1) % n, nprime), 0
+
+    def sharable(nst: int, ost: int, ln: int) -> bool:
+        """May the old rows at ``(ost, ln)`` stand in for the new subtree
+        at ``(nst, ln)``?  Identical expansion arithmetic needs: no ring
+        wrap in either index space, and for colored trees the same color
+        phase — seam beyond the region on both sides and matching start
+        parity relative to the root (the predicate is hereditary: child
+        regions keep the same translation)."""
+        if nst + ln > n_n or ost + ln > n_o:
+            return False
+        if want is None:
+            return True
+        d0o = (ost - i0o) % n_o
+        d0n = (nst - i0n) % n_n
+        if n_o - d0o < ln or n_n - d0n < ln:
+            return False
+        return (d0o & 1) == (d0n & 1)
+
+    def copy_block(nst: int, ost: int, ln: int) -> None:
+        sn, so = slice(nst, nst + ln), slice(ost, ost + ln)
+        d = nst - ost
+        out_depth[sn] = pd[so]
+        out_rlen[sn] = prl[so]
+        out_slot[sn] = psl[so]
+        if d:
+            np.add(pp[so], d, out=out_parent[sn])
+            np.add(prs[so], d, out=out_rstart[sn])
+        else:
+            out_parent[sn] = pp[so]
+            out_rstart[sn] = prs[so]
+        # the block owner's parent lies OUTSIDE the block and is stale
+        # after the shift; the final record scatter overwrites its row
+        # with the freshly emitted child record
+        shared.append((nst, ost, ln))
+
+    def arrs(t):
+        return tuple(one(v) for v in t)
+
+    def expand_full(task, depth: int) -> None:
+        """Unpaired path: from-scratch expansion of one subtree, exactly
+        :func:`_plan`'s frontier loop rooted at ``task``."""
+        frontier = arrs(task)
+        d = depth
+        for _ in range(_MAX_LEVELS):
+            if int(frontier[0].shape[0]) == 0:
+                return
+            frontier = _expand(np, n_n, k, frontier, d, rec,
+                               want=want, i0=i0n)
+            d += 1
+        raise RuntimeError("planner did not converge")  # pragma: no cover
+
+    ntask, nd = boot(n_n, i0n)
+    otask, _ = boot(n_o, i0o)
+    if tree == SECONDARY:
+        # replicate _plan's explicit secondary-root record
+        rec.add(np, one(ntask[0]), one(i0n), 1, one((i0n + 1) % n_n),
+                one(n_n - 1), one(0))
+
+    pairs = [(ntask, otask, nd)]
+    while pairs:
+        nt, ot, d = pairs.pop()
+        if nt[2] + nt[4] <= k or ot[2] + ot[4] <= k:
+            # direct delivery on either side: the regions differ by one
+            # member, so the new side is at most k+1 rows — recompute
+            expand_full(nt, d)
+            continue
+        nf, nslots = _expand(np, n_n, k, arrs(nt), d, rec,
+                             want=want, i0=i0n, with_slots=True)
+        of, oslots = _expand(np, n_o, k, arrs(ot), d, trash,
+                             want=want, i0=i0o, with_slots=True)
+        omap = {int(s): j for j, s in enumerate(oslots)}
+        for j in range(int(nf[0].shape[0])):
+            ct = tuple(int(a[j]) for a in nf)     # (node, Ls, Ll, Rs, Rl)
+            ln = ct[2] + 1 + ct[4]
+            oj = omap.get(int(nslots[j]))
+            if oj is None:
+                expand_full(ct, d + 1)
+                continue
+            otc = tuple(int(a[oj]) for a in of)
+            oln = otc[2] + 1 + otc[4]
+            if oln == ln and otc[2] == ct[2] and sharable(ct[1], otc[1], ln):
+                copy_block(ct[1], otc[1], ln)
+            else:
+                pairs.append((ct, otc, d + 1))
+
+    # the root row (mirrors _plan's explicit scatter)
+    out_parent[i0n] = -1
+    out_depth[i0n] = 0
+    out_rstart[i0n] = i0n
+    out_rlen[i0n] = n_n
+    out_slot[i0n] = 0
+    recomputed = 0
+    if rec.idx:
+        idx = np.concatenate(rec.idx)
+        out_parent[idx] = np.concatenate(rec.parent)
+        out_depth[idx] = np.concatenate(rec.depth)
+        out_rstart[idx] = np.concatenate(rec.start)
+        out_rlen[idx] = np.concatenate(rec.length)
+        out_slot[idx] = np.concatenate(rec.slot)
+        recomputed = int(idx.shape[0])
+    return TreePlan(members=new_members, root=i0n, parent=out_parent,
+                    depth=out_depth, region_start=out_rstart,
+                    region_len=out_rlen, slot=out_slot, k=k, tree=tree,
+                    delta=PlanDelta(kind=kind, node=node, pos=p,
+                                    shared=tuple(shared),
+                                    recomputed=recomputed))
+
+
+def plan_delta_chain(prev_plans: Sequence[TreePlan],
+                     events: Sequence) -> Tuple[TreePlan, ...]:
+    """Fold a boundary's membership events through every plan of an
+    epoch's plan set (snow: one standard tree; coloring: primary +
+    secondary) — the engine-facing delta step."""
+    plans = tuple(prev_plans)
+    for ev in events:
+        plans = tuple(plan_delta(pl, ev) for pl in plans)
+    return plans
 
 
 def _resolve(view: Union[MembershipView, Sequence[NodeId]], root: NodeId,

@@ -136,25 +136,36 @@ class RunSpec:
     defers to ``REPRO_ENGINE_BACKEND`` (explicit value always wins over
     the environment).  ``view_model`` — ``"oracle"`` or ``"stale"``.
     ``control`` — :class:`~repro.core.control.ControlParams` enabling
-    closed-form control-plane accounting.
+    closed-form control-plane accounting.  ``replan`` — epoch re-plan
+    strategy for trace engines: ``"delta"`` (derive epoch ``e+1``'s
+    plans from epoch ``e``'s via
+    :func:`~repro.core.planner.plan_delta`, the default) or ``"full"``
+    (from-scratch :func:`~repro.core.engine.stable_plans` per epoch);
+    the two are bit-identical, ``"full"`` exists as the differential
+    oracle and escape hatch.
     """
 
     engine: str = "auto"
     backend: Optional[str] = None
     view_model: str = "oracle"
     control: Optional[object] = None
+    replan: str = "delta"
 
     def __post_init__(self):
         if self.view_model not in ("oracle", "stale"):
             raise ValueError(f"view_model must be 'oracle' or 'stale', "
                              f"got {self.view_model!r}")
+        if self.replan not in ("delta", "full"):
+            raise ValueError(f"replan must be 'delta' or 'full', "
+                             f"got {self.replan!r}")
 
     def asdict(self) -> dict:
         return {"engine": self.engine, "backend": self.backend,
                 "view_model": self.view_model,
                 "control": (asdict(self.control)
                             if is_dataclass(self.control)
-                            and self.control is not None else None)}
+                            and self.control is not None else None),
+                "replan": self.replan}
 
 
 def resolve_specs(net: Optional[NetworkSpec], run: Optional[RunSpec], *,

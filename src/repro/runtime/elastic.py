@@ -36,22 +36,36 @@ from repro.core.snow_node import SnowNode
 
 @dataclasses.dataclass
 class MeshPlan:
-    """Data-axis carve for the currently-usable hosts."""
+    """Data-axis carve for the currently-usable hosts.
+
+    ``prev_data_parallel`` is the data axis of the carve this one
+    superseded (``None`` for the first carve of a fleet), so
+    :attr:`changed` answers the only question the trainer asks: *does
+    this transition force a checkpoint-restore?*  Host-count churn that
+    lands inside the spare pool (e.g. 11 → 10 hosts over a dp=8 axis)
+    keeps the mesh intact and must NOT restart the trainer.
+    """
     n_hosts: int
     data_parallel: int            # usable hosts (largest power of two)
     spares: int
+    prev_data_parallel: Optional[int] = None
 
     @property
     def changed(self) -> bool:
-        return True
+        """True iff the data-parallel axis differs from the previous
+        carve's — the re-carve/checkpoint-restore trigger."""
+        return self.data_parallel != self.prev_data_parallel
 
 
-def carve(n_hosts: int) -> MeshPlan:
+def carve(n_hosts: int, prev: Optional[MeshPlan] = None) -> MeshPlan:
     """Largest power-of-two data-parallel group; the rest are hot spares
     (they keep serving membership + anti-entropy and absorb the next
-    failure without a re-carve)."""
+    failure without a re-carve).  ``prev`` threads the superseded carve
+    so the new plan knows whether it actually changes the mesh."""
     dp = 1 << max(0, (n_hosts).bit_length() - 1)
-    return MeshPlan(n_hosts=n_hosts, data_parallel=dp, spares=n_hosts - dp)
+    return MeshPlan(n_hosts=n_hosts, data_parallel=dp, spares=n_hosts - dp,
+                    prev_data_parallel=None if prev is None
+                    else prev.data_parallel)
 
 
 class ElasticController:
@@ -68,6 +82,7 @@ class ElasticController:
         self._durations: Dict[int, List[float]] = {}
         self._next_id = n_hosts
         self.events: List[str] = []
+        self._last_plan: Optional[MeshPlan] = None
 
     # -- time ------------------------------------------------------------ #
     def advance(self, seconds: float) -> None:
@@ -79,7 +94,59 @@ class ElasticController:
         return [m for m in node.view if self.cluster.net.alive(m)]
 
     def plan(self) -> MeshPlan:
-        return carve(len(self.active_hosts()))
+        """Carve for the current live host count, remembering the
+        previous carve so ``plan().changed`` is False across no-op
+        transitions (churn absorbed by the spare pool)."""
+        p = carve(len(self.active_hosts()), prev=self._last_plan)
+        self._last_plan = p
+        return p
+
+    # -- dissemination over the snow tree ---------------------------------- #
+    def disseminate(self, payload_B: int, *, reliable: bool = True,
+                    coloring: bool = False, settle_s: float = 30.0,
+                    origin: Optional[int] = None) -> Dict[str, float]:
+        """Fan a re-carve / checkpoint announcement out over the snow
+        tree itself — the protocol as load-bearing control plane: the
+        host that detects a mesh transition broadcasts the new carve
+        (or the checkpoint manifest) with one Snow broadcast instead of
+        a coordinator loop, and the §4.4 Reliable Message machinery
+        reports when every surviving host has acked it.
+
+        Runs the live event loop for up to ``settle_s`` simulated
+        seconds; returns ``delivered`` (hosts holding the payload,
+        including the origin), ``reach`` (fraction of live hosts),
+        ``converged_s`` (root-side all-acked wall clock, NaN when
+        ``reliable=False`` or not yet converged) and ``mid``."""
+        hosts = self.active_hosts()
+        if origin is None:
+            origin = hosts[0]
+        node: SnowNode = self.cluster.nodes[origin]
+        t0 = self.cluster.sim.now
+        mid = node.broadcast(payload=payload_B, reliable=reliable,
+                             coloring=coloring)
+        self.advance(settle_s)
+        live = [h for h in hosts if self.cluster.net.alive(h)]
+        got = sum(1 for h in live
+                  if mid in self.cluster.nodes[h].delivered)
+        conv = node.converged.get(mid)
+        self.events.append(f"disseminate:{mid}")
+        return {"mid": mid, "delivered": got,
+                "reach": got / max(1, len(live)),
+                "converged_s": math.nan if conv is None else conv - t0}
+
+    def recarve(self, payload_B: int = 1024,
+                settle_s: float = 30.0) -> Dict[str, float]:
+        """One mesh transition end to end: compute the new carve and, if
+        it changes the data axis, announce it over the snow tree.  No-op
+        transitions (``changed == False``) send nothing — the
+        :attr:`MeshPlan.changed` fix is what makes this cheap."""
+        p = self.plan()
+        out: Dict[str, float] = {
+            "n_hosts": p.n_hosts, "data_parallel": p.data_parallel,
+            "spares": p.spares, "changed": p.changed}
+        if p.changed:
+            out.update(self.disseminate(payload_B, settle_s=settle_s))
+        return out
 
     def join_host(self) -> int:
         hid = self._next_id

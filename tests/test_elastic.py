@@ -1,4 +1,6 @@
 """Elastic controller: Snow membership drives the mesh plan."""
+import math
+
 from repro.runtime.elastic import ElasticController, carve
 
 
@@ -34,6 +36,58 @@ def test_crash_is_evicted_by_swim():
     ec.advance(10.0)     # SWIM probe + indirect + evict broadcast
     assert 3 not in ec.active_hosts()
     assert ec.plan().data_parallel == 4  # 7 hosts -> dp 4 + 3 spares
+
+
+def test_meshplan_changed_tracks_previous_carve():
+    """Regression: ``changed`` used to be unconditionally True.  Churn
+    absorbed by the spare pool (11 -> 10 hosts over a dp=8 axis) must
+    NOT report a mesh change; an axis change must."""
+    p1 = carve(11)
+    assert p1.changed                       # first carve of a fleet
+    p2 = carve(10, prev=p1)
+    assert p2.data_parallel == 8 and not p2.changed
+    p3 = carve(7, prev=p2)
+    assert p3.data_parallel == 4 and p3.changed
+    p4 = carve(14, prev=p3)
+    assert p4.data_parallel == 8 and p4.changed
+
+
+def test_controller_plan_threads_previous_carve():
+    ec = ElasticController(11, seed=6)
+    ec.advance(1.0)
+    assert ec.plan().changed                # first plan
+    assert not ec.plan().changed            # no transition since
+    ec.leave_host(9, graceful=True)
+    ec.advance(8.0)
+    assert not ec.plan().changed            # 10 hosts, dp still 8
+    for h in (10, 8, 7):
+        ec.leave_host(h, graceful=True)
+    ec.advance(8.0)
+    assert ec.plan().changed                # 7 hosts -> dp 4
+
+
+def test_disseminate_reaches_all_live_hosts():
+    ec = ElasticController(9, seed=7)
+    ec.advance(1.0)
+    out = ec.disseminate(1024, settle_s=30.0)
+    assert out["delivered"] == 9 and out["reach"] == 1.0
+    assert out["converged_s"] > 0 and not math.isnan(out["converged_s"])
+
+
+def test_recarve_announces_only_on_axis_change():
+    ec = ElasticController(9, seed=8)
+    ec.advance(1.0)
+    first = ec.recarve(settle_s=30.0)
+    assert first["changed"] and first["reach"] == 1.0
+    ec.leave_host(8, graceful=True)         # 9 -> 8 hosts, dp stays 8
+    ec.advance(8.0)
+    noop = ec.recarve(settle_s=30.0)
+    assert not noop["changed"] and "reach" not in noop
+    ec.leave_host(7, graceful=True)         # 8 -> 7 hosts, dp 8 -> 4
+    ec.advance(8.0)
+    shrink = ec.recarve(settle_s=30.0)
+    assert shrink["changed"] and shrink["data_parallel"] == 4
+    assert shrink["reach"] == 1.0
 
 
 def test_straggler_flips_collective_policy():

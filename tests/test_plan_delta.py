@@ -1,0 +1,255 @@
+"""Incremental delta re-planning (DESIGN.md §13).
+
+Contracts under test:
+
+* **bit-exactness** — `compile_trace(replan="delta")` equals
+  `replan="full"` on every epoch of every `ChurnTrace` family, in all
+  five plan arrays plus members/rows/reach/receipts, for the standard
+  tree and both Coloring trees; engine metrics are therefore unchanged
+  (asserted through `run_trace_vectorized` summaries too);
+* **structural sharing** — `PlanDelta.shared_view` hands back true
+  numpy views of the previous plan's arrays; crash events return the
+  previous plan object itself;
+* **invariants** — leaf-depth spread ≤ 1 survives arbitrary delta
+  chains on the standard tree;
+* **collectives** — the closed-form ppermute round compiler equals the
+  greedy matcher edge-for-edge, `schedule_for_plan` memoizes on the
+  plan fingerprint, and `schedule_delta` reuses unchanged round tuple
+  objects across a 1-event transition.
+"""
+import numpy as np
+import pytest
+
+from repro.core.churn import (aligned_breakdown_trace, aligned_churn_trace,
+                              burst_churn_trace, correlated_failure_trace,
+                              flash_crowd_trace, paper_breakdown_trace,
+                              paper_churn_trace, rolling_restart_trace,
+                              single_churn_trace)
+from repro.core.engine import compile_trace, run_trace_vectorized
+from repro.core.planner import (plan_broadcast, plan_colored, plan_delta,
+                                plan_delta_chain, plan_two_trees)
+from repro.core.specs import RunSpec
+from repro.collectives.topology import (_schedule_from_plan, schedule_delta,
+                                        schedule_for_plan)
+
+PLAN_FIELDS = ("parent", "depth", "region_start", "region_len", "slot")
+
+
+def _assert_plans_equal(a, b, ctx):
+    assert a.root == b.root, ctx
+    assert a.tree == b.tree, ctx
+    assert np.array_equal(np.asarray(a.members), np.asarray(b.members)), ctx
+    for f in PLAN_FIELDS:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), (*ctx, f)
+
+
+def _assert_compiled_equal(protocol, trace, ctx):
+    bank = trace.all_ids()
+    full = compile_trace(protocol, trace, 4, bank, replan="full")
+    delta = compile_trace(protocol, trace, 4, bank, replan="delta")
+    assert len(full) == len(delta), ctx
+    for i, (ef, ed) in enumerate(zip(full, delta)):
+        assert np.array_equal(ef.members, ed.members), (*ctx, i)
+        assert np.array_equal(ef.rows, ed.rows), (*ctx, i)
+        assert np.array_equal(ef.receipts, ed.receipts), (*ctx, i)
+        assert (ef.nbytes, ef.src_index, ef.frame) == \
+               (ed.nbytes, ed.src_index, ed.frame), (*ctx, i)
+        for pf, pd in zip(ef.plans, ed.plans):
+            _assert_plans_equal(pf, pd, (*ctx, i))
+        for rf, rd in zip(ef.reach, ed.reach):
+            if rf is None or rd is None:
+                assert rf is None and rd is None, (*ctx, i)
+            else:
+                assert np.array_equal(rf, rd), (*ctx, i)
+
+
+TRACE_FAMILIES = {
+    "paper_churn": lambda n: paper_churn_trace(n, n_messages=8),
+    "paper_breakdown": lambda n: paper_breakdown_trace(n, n_messages=8),
+    "aligned_churn": lambda n: aligned_churn_trace(n, n_messages=4),
+    "aligned_breakdown": lambda n: aligned_breakdown_trace(n, n_messages=4),
+    "burst": lambda n: burst_churn_trace(n, n_messages=10),
+    "correlated": lambda n: correlated_failure_trace(n, n_messages=8),
+    "flash_crowd": lambda n: flash_crowd_trace(n, n_messages=10),
+    "rolling_restart": lambda n: rolling_restart_trace(n, n_messages=10),
+    "single_churn": lambda n: single_churn_trace(n, n_epochs=8),
+}
+
+
+@pytest.mark.parametrize("family", sorted(TRACE_FAMILIES))
+@pytest.mark.parametrize("n", [50, 500])
+def test_delta_chains_bit_identical(family, n):
+    trace = TRACE_FAMILIES[family](n)
+    for protocol in ("snow", "coloring"):
+        _assert_compiled_equal(protocol, trace, (family, protocol, n))
+
+
+@pytest.mark.parametrize("family", ["single_churn", "rolling_restart",
+                                    "paper_churn"])
+def test_delta_chains_bit_identical_large(family):
+    trace = TRACE_FAMILIES[family](5000)
+    for protocol in ("snow", "coloring"):
+        _assert_compiled_equal(protocol, trace, (family, protocol, 5000))
+
+
+@pytest.mark.parametrize("protocol", ["snow", "coloring"])
+def test_engine_metrics_unchanged_by_delta(protocol):
+    trace = paper_churn_trace(300, n_messages=10)
+    out = {}
+    for mode in ("delta", "full"):
+        res = run_trace_vectorized(protocol, trace, k=4, seed=11,
+                                   run=RunSpec(backend="numpy",
+                                               replan=mode))
+        out[mode] = res.metrics.summary()
+    assert out["delta"] == out["full"]
+
+
+# ------------------------------------------------------------------ #
+# Structural sharing                                                  #
+# ------------------------------------------------------------------ #
+def test_shared_blocks_are_true_views():
+    members = np.arange(0, 4000, 2)
+    prev = plan_broadcast(members, 0, 4)
+    new = plan_delta(prev, ("join", 1001))
+    assert new.delta is not None and len(new.delta.shared) > 0
+    # blocks + recomputed records + the root row cover every output row
+    # (block-owner rows are corrected by the later record scatter, so
+    # the two sets overlap slightly — a cover, not a partition)
+    assert new.delta.shared_nodes + new.delta.recomputed >= len(new) - 1
+    assert new.delta.shared_nodes < len(new)
+    for i, (ns, ps, ln) in enumerate(new.delta.shared):
+        for f in ("depth", "region_len", "slot"):
+            view = new.delta.shared_view(prev, f, i)
+            assert np.shares_memory(view, np.asarray(getattr(prev, f)))
+            assert view.shape == (ln,)
+            assert np.array_equal(view,
+                                  np.asarray(getattr(new, f))[ns:ns + ln])
+
+
+def test_crash_returns_previous_plan_object():
+    prev = plan_broadcast(np.arange(100), 0, 4)
+    assert plan_delta(prev, ("crash", 42)) is prev
+
+
+def test_noop_events_return_previous_plan_object():
+    prev = plan_broadcast(np.arange(100), 0, 4)
+    assert plan_delta(prev, ("join", 42)) is prev      # already a member
+    assert plan_delta(prev, ("leave", 500)) is prev    # not a member
+
+
+def test_root_leave_raises():
+    prev = plan_broadcast(np.arange(100), 7, 4)
+    with pytest.raises(ValueError):
+        plan_delta(prev, ("leave", 7))
+
+
+@pytest.mark.parametrize("tree", [0, 1])
+def test_colored_delta_matches_full(tree):
+    members = np.arange(0, 1500, 3)
+    prev = plan_colored(members, 0, 4, tree)
+    for ev in (("join", 1000), ("leave", 300), ("join", 5000)):
+        new = plan_delta(prev, ev)
+        node = ev[1]
+        ref_members = (np.delete(members, np.searchsorted(members, node))
+                       if ev[0] == "leave"
+                       else np.insert(members,
+                                      np.searchsorted(members, node), node))
+        _assert_plans_equal(new, plan_colored(ref_members, 0, 4, tree),
+                            ("colored", tree, ev))
+
+
+def test_balance_invariant_under_delta_chains():
+    """Leaf-depth spread ≤ 1 (§3) survives arbitrary chains — it must,
+    since the arrays equal a fresh plan's, but assert it directly."""
+    rng = np.random.default_rng(5)
+    plans = (plan_broadcast(np.arange(0, 600, 2), 0, 4),)
+    members = np.arange(0, 600, 2)
+    for _ in range(40):
+        if members.size > 30 and rng.random() < 0.5:
+            node = int(rng.choice(members[members != 0]))
+            ev = ("leave", node)
+            members = np.delete(members, np.searchsorted(members, node))
+        else:
+            node = int(rng.integers(1, 5000))
+            if node in members:
+                continue
+            ev = ("join", node)
+            members = np.insert(members, np.searchsorted(members, node),
+                                node)
+        plans = plan_delta_chain(plans, [ev])
+        p = plans[0]
+        assert np.array_equal(np.asarray(p.members), members)
+        parent = np.asarray(p.parent)
+        depth = np.asarray(p.depth)
+        is_leaf = np.ones(len(p), dtype=bool)
+        is_leaf[parent[parent >= 0]] = False
+        spread = depth[is_leaf].max() - depth[is_leaf].min()
+        assert spread <= 1, spread
+
+
+# ------------------------------------------------------------------ #
+# Collectives: closed-form rounds, memoization, delta recompile       #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_closed_form_rounds_match_greedy(k):
+    for n in (2, 3, 7, 50, 333, 1000):
+        for root in (0, 1, n // 2, n - 1):
+            p = plan_broadcast(np.arange(n), root, k)
+            greedy = tuple(tuple(r) for r in _schedule_from_plan(p))
+            assert schedule_for_plan(p) == greedy, (n, root, k)
+    for n in (5, 64, 257):
+        for tp in plan_two_trees(np.arange(n), 0, k):
+            greedy = tuple(tuple(r) for r in _schedule_from_plan(tp))
+            assert schedule_for_plan(tp) == greedy, (n, k, tp.tree)
+
+
+def test_schedule_memoized_on_fingerprint():
+    p1 = plan_broadcast(np.arange(640), 3, 4)
+    p2 = plan_broadcast(np.arange(640), 3, 4)
+    assert p1 is not p2 and p1.fingerprint == p2.fingerprint
+    assert schedule_for_plan(p1) is schedule_for_plan(p2)
+
+
+def test_schedule_delta_reuses_round_objects():
+    prev = plan_broadcast(np.arange(4096), 0, 4)
+    prev_rounds = schedule_for_plan(prev)
+    # same plan object -> same rounds object
+    assert schedule_delta(prev, prev, prev_rounds) is prev_rounds
+    # same-n transition at the top of the ring (instance replacement:
+    # the last member leaves, a higher id joins in its place) — only
+    # the dirty spine's rounds recompile, the rest reuse the previous
+    # round tuple objects outright
+    new = plan_delta_chain((prev,), [("leave", 4095), ("join", 5000)])[0]
+    rounds = schedule_delta(new, prev, prev_rounds)
+    fresh = tuple(tuple(r) for r in _schedule_from_plan(new))
+    assert rounds == fresh
+    reused = sum(1 for r in rounds if any(r is pr for pr in prev_rounds))
+    assert reused > len(rounds) // 2, (reused, len(rounds))
+    # a size-changing transition falls back to a correct full compile
+    grown = plan_delta(prev, ("join", 6000))
+    assert schedule_delta(grown, prev, prev_rounds) == \
+        tuple(tuple(r) for r in _schedule_from_plan(grown))
+
+
+# ------------------------------------------------------------------ #
+# Satellite: trace + spec plumbing                                    #
+# ------------------------------------------------------------------ #
+def test_single_churn_trace_shapes():
+    tr = single_churn_trace(40, n_epochs=6, kind="alternate")
+    assert len(tr.events) == 6 and len(tr.msg_times) == 7
+    eps = tr.epochs()
+    assert len(eps) == 7
+    sizes = [len(e.members) for e in eps]
+    assert sizes == [40, 41, 40, 41, 40, 41, 40]
+    tr = single_churn_trace(40, n_epochs=6, kind="join")
+    assert [len(e.members) for e in tr.epochs()] == list(range(40, 47))
+    tr = single_churn_trace(40, n_epochs=6, kind="leave")
+    assert [len(e.members) for e in tr.epochs()] == list(range(40, 33, -1))
+
+
+def test_runspec_replan_validation():
+    assert RunSpec().replan == "delta"
+    assert RunSpec(replan="full").replan == "full"
+    with pytest.raises(ValueError):
+        RunSpec(replan="bogus")
