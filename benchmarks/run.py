@@ -28,6 +28,7 @@ SECTION_MODULES = {
     "paper_repro": "paper_repro",
     "locality_scale": "bench_locality",
     "replan_scale": "bench_replan",
+    "workload_scale": "bench_workload",
     "children_micro": "bench_children_micro",
     "collectives": "bench_collectives",
     "kernels": "bench_kernels",
@@ -72,6 +73,10 @@ MAX_REPAIR_REBROADCAST_RATIO = 1.0
 # The locality_scale smoke's drift vs its committed 50k row rides the
 # same *ldt_drift band.
 MAX_DEVICE_LDT_DRIFT = 0.10
+# §14 workload bands (workload_scale smoke): the saturation knee —
+# the largest offered utilization ρ whose within-deadline delivered
+# fraction still holds ≥ 0.99 — may never creep below this floor
+MIN_SATURATION_RHO = 0.7
 
 
 def _calibrate() -> float:
@@ -188,6 +193,14 @@ def _check(sections, metrics) -> list:
                         f"{name}: {key} {mval:.1%} > "
                         f"{MAX_DEVICE_LDT_DRIFT:.0%} — device engine "
                         f"diverged from the host oracle")
+            elif key.endswith("saturation_rho"):
+                # absolute floor: egress queueing may shape tails but
+                # must not pull the saturation knee into the band
+                if mval < MIN_SATURATION_RHO - 1e-9:
+                    problems.append(
+                        f"{name}: {key} {mval} < {MIN_SATURATION_RHO} "
+                        f"— the offered-vs-delivered knee crept below "
+                        f"the floor")
             elif key.endswith("committed_ok"):
                 if mval < 1.0:
                     problems.append(
@@ -250,7 +263,8 @@ def main(argv=None) -> None:
         # protocol-layer sections only; the jax kernel/roofline benches
         # have their own timings and dominate smoke wall-time
         names = ["scale_n_fig6a", "device_scale", "paper_repro",
-                 "locality_scale", "replan_scale", "children_micro"]
+                 "locality_scale", "replan_scale", "workload_scale",
+                 "children_micro"]
     else:
         names = list(SECTIONS)
 

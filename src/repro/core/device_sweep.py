@@ -431,3 +431,54 @@ def trace_ldt_device(epochs, trace, seeds: Sequence[int]) -> np.ndarray:
         q=q, height=height, maxp=maxp, n_slots=n_slots,
         m_total=len(trace.msg_times))
     return np.asarray(out)
+
+
+# ------------------------------------------------------------------ #
+# Workload engine: per-publisher group sweep with a queue plane        #
+# ------------------------------------------------------------------ #
+@functools.partial(jax.jit, static_argnames=("meta",))
+def _workload_times(seed, gidx, parent, depth, qadd, t0, straggler_frac,
+                    *, meta):
+    """One publisher-group: regenerate the group's delay planes from
+    counters keyed by ``(seed → group)``, fuse the host-computed §14.2
+    queue plane into the link plane (the device twin of the host path's
+    ``link + q``), and run one level sweep with the group's publish
+    times as ``t0`` — a separate jitted entry so the stable/trace
+    programs keep their compiled caches untouched."""
+    root, height, slot = meta
+    n = parent.shape[0]
+    m = t0.shape[0]
+    base = jax.random.fold_in(jax.random.key(seed), gidx)
+    strag = _straggler_mask(base, jnp.ones((n,), dtype=bool),
+                            straggler_frac)
+    fwd, link = _fwd_link_planes(base, slot, m, n, strag)
+    link = link + qadd
+    fp = fwd_at_parent(parent, fwd, root)
+    return level_sweep_xla(parent, depth, fp, link, t0.astype(fwd.dtype),
+                           root=root, height=height)
+
+
+def workload_times_device(plan, seed: int, group_index: int, t0,
+                          qadd=None,
+                          straggler_frac: float = STRAGGLER_FRAC
+                          ) -> np.ndarray:
+    """(m, n) absolute delivery times for one workload publisher-group
+    over ``plan`` — the bank-free device arm of
+    :func:`repro.core.workload.run_workload_vectorized`.  Threefry
+    draws replace the host bank (no (n, M) arrays in memory at n = 1M),
+    so rows pin statistically against the host oracle, never bit-equal
+    — exactly like the stable device sweep.  ``qadd`` is the
+    host-computed (m, n) queue plane (``None`` = uncapped)."""
+    parr = np.asarray(plan.parent, dtype=np.int32)
+    darr = np.asarray(plan.depth, dtype=np.int32)
+    n = int(parr.shape[0])
+    m = int(np.asarray(t0).shape[0])
+    q = np.zeros((m, n), dtype=np.float32) if qadd is None \
+        else np.asarray(qadd, dtype=np.float32)
+    meta = (int(plan.root), int(darr.max()), _plan_slot(plan))
+    out = _workload_times(
+        jnp.asarray(np.uint32(seed)), jnp.asarray(np.int32(group_index)),
+        jnp.asarray(parr), jnp.asarray(darr), jnp.asarray(q),
+        jnp.asarray(np.asarray(t0, dtype=np.float32)),
+        jnp.asarray(float(straggler_frac)), meta=meta)
+    return np.asarray(out)

@@ -514,13 +514,20 @@ class ArrayMetrics(Metrics):
         #: per-message (n,) bool — nodes delivered by the §11 pull-repair
         #: pass (they hold a time but no DATA receipt)
         self.repaired: Dict[int, np.ndarray] = {}
+        #: per-message (n,) bool — the metered (topic-multicast) subset
+        #: of the member array; absent ⇒ every member is intended.  The
+        #: array analogue of the event engine's ``begin(..., intended)``
+        #: sets (DESIGN.md §14): dissemination still covers the full
+        #: membership, only the metrics denominator narrows.
+        self.msg_intended: Dict[int, np.ndarray] = {}
 
     def record_message(self, mid: int, t0: float, src_index: int,
                        times: np.ndarray, nbytes: int,
                        members: Optional[np.ndarray] = None,
                        receipts: Optional[np.ndarray] = None,
                        frame_bytes: Optional[int] = None,
-                       repaired: Optional[np.ndarray] = None) -> None:
+                       repaired: Optional[np.ndarray] = None,
+                       intended: Optional[np.ndarray] = None) -> None:
         self.start[mid] = t0
         self.src_index[mid] = src_index
         self.times[mid] = times
@@ -533,6 +540,8 @@ class ArrayMetrics(Metrics):
             self.frame_bytes[mid] = frame_bytes
         if repaired is not None:
             self.repaired[mid] = repaired
+        if intended is not None:
+            self.msg_intended[mid] = intended
 
     def times_for(self, mid: int) -> np.ndarray:
         return self.times[mid]
@@ -558,6 +567,9 @@ class ArrayMetrics(Metrics):
                     sel = np.isin(mem, sub)
                     sel_cache[id(mem)] = sel
                 mask = sel.copy()
+            imask = self.msg_intended.get(mid)
+            if imask is not None:
+                mask &= imask
             mask[self.src_index[mid]] = False        # intended excludes src
             n_int = int(mask.sum())
             if n_int == 0:
@@ -600,6 +612,45 @@ class ArrayMetrics(Metrics):
                 "duplicates": dups,
             })
         return rows
+
+    def _intended_masks(self, subset):
+        """Yield ``(mid, t0, mask)`` — the metered population per
+        message, shared by the tail/saturation reductions."""
+        sub = None
+        if subset is not None:
+            sub = np.fromiter(subset, dtype=self.members.dtype,
+                              count=len(subset))
+        sel_cache: Dict[int, np.ndarray] = {}
+        for mid, t0 in sorted(self.start.items()):
+            mem = self.msg_members.get(mid, self.members)
+            if sub is None:
+                mask = np.ones(mem.shape[0], dtype=bool)
+            else:
+                sel = sel_cache.get(id(mem))
+                if sel is None:
+                    sel = np.isin(mem, sub)
+                    sel_cache[id(mem)] = sel
+                mask = sel.copy()
+            imask = self.msg_intended.get(mid)
+            if imask is not None:
+                mask &= imask
+            mask[self.src_index[mid]] = False
+            yield mid, t0, mask
+
+    def delivery_latencies(self, subset=None) -> np.ndarray:
+        vals = []
+        for mid, t0, mask in self._intended_masks(subset):
+            tt = np.asarray(self.times[mid], dtype=np.float64)[mask]
+            vals.append(tt[~np.isnan(tt)] - t0)
+        return np.concatenate(vals) if vals else np.empty(0)
+
+    def delivered_within(self, deadline_s: float, subset=None) -> float:
+        num = den = 0
+        for mid, t0, mask in self._intended_masks(subset):
+            tt = np.asarray(self.times[mid], dtype=np.float64)[mask]
+            den += int(mask.sum())
+            num += int(np.count_nonzero(tt - t0 <= deadline_s))
+        return num / den if den else 0.0
 
 
 @dataclass

@@ -65,7 +65,7 @@ from .baselines import gossip_sweep, plumtree_sweep
 from .churn import ChurnTrace, paper_breakdown_trace, paper_churn_trace
 from .control import ControlParams, gossip_control
 from .scenarios import run_breakdown, run_churn, run_stable, summarize
-from .specs import NetworkSpec, RunSpec
+from .specs import NetworkSpec, RunSpec, WorkloadSpec
 
 #: protocols with a closed-form route (any n) vs events-only baselines
 CLOSED_FORM = ("snow", "coloring")
@@ -120,6 +120,12 @@ class ExperimentSpec:
     #: None keeps the historical flat uniform fabric and keeps the spec
     #: fingerprint byte-identical to pre-§12 result files
     net: Optional[NetworkSpec] = None
+    #: optional offered-traffic model (DESIGN.md §14): snow cells route
+    #: through the workload engines (concurrent publishers, topic
+    #: multicast, egress queueing) instead of the fixed-cadence
+    #: broadcast schedule; None keeps the historical schedule and the
+    #: pre-§14 spec fingerprint
+    workload: Optional[WorkloadSpec] = None
 
     def cells(self) -> List[Cell]:
         seen = set()
@@ -138,13 +144,17 @@ class ExperimentSpec:
 
     def asdict(self) -> dict:
         # round-trip through JSON so the fingerprint compares equal to
-        # what a result file loads back (tuples become lists); ``net`` is
-        # omitted entirely when None so result files written before the
-        # field existed still fingerprint-match their specs
+        # what a result file loads back (tuples become lists); ``net``
+        # and ``workload`` are omitted entirely when None so result
+        # files written before the fields existed still
+        # fingerprint-match their specs
         d = {f.name: getattr(self, f.name)
-             for f in dataclasses.fields(self) if f.name != "net"}
+             for f in dataclasses.fields(self)
+             if f.name not in ("net", "workload")}
         if self.net is not None:
             d["net"] = self.net.asdict()
+        if self.workload is not None:
+            d["workload"] = self.workload.asdict()
         return json.loads(json.dumps(d))
 
 
@@ -400,10 +410,57 @@ def route(spec: ExperimentSpec, cell: Cell) -> str:
     return "events"
 
 
+def _workload_cell(spec: ExperimentSpec, cell: Cell) -> dict:
+    """Route one cell through the workload engines (DESIGN.md §14).
+
+    The workload model replaces the fixed-cadence broadcast schedule
+    with generated traffic (concurrent publishers, topic multicast,
+    optional egress caps), so it only exists for the snow protocol:
+    ``engine="events"`` runs the queueing-aware event loop (capped at
+    ``events_max_n``), anything else the vectorized level sweep with
+    M/G/1 waiting folded in (``"device"`` selects the fused device
+    sweep).  Tail quantiles and the delivered-within-deadline fraction
+    ride along seed-averaged next to the usual LDT/RMR columns."""
+    from .workload import workload_sweep
+
+    wl = spec.workload
+    if cell.protocol != "snow":
+        return {"cell": dataclasses.asdict(cell),
+                "skipped": f"no workload engine for {cell.protocol}"}
+    if cell.engine == "events":
+        if cell.n > spec.events_max_n:
+            return {"cell": dataclasses.asdict(cell),
+                    "skipped": f"event-loop cell at n={cell.n} exceeds "
+                               f"events_max_n={spec.events_max_n}"}
+        rows = workload_sweep(cell.n, cell.k, spec.seeds, wl,
+                              engine="events")
+        used = "events"
+    else:
+        rows = workload_sweep(cell.n, cell.k, spec.seeds, wl,
+                              engine="vectorized",
+                              device=(cell.engine == "device"))
+        used = "device" if cell.engine == "device" else "vectorized"
+    row = _reduce(cell, spec, used, rows, None, wl.horizon_s)
+    row["n_messages"] = _mean([r["n_messages"] for r in rows])
+    row["offered_hz"] = _mean([r["offered_hz"] for r in rows])
+    for key in sorted(rows[0]):
+        if key.endswith("_ldt") or key.endswith("_delivery"):
+            row[key + "_ms"] = _mean([r[key] for r in rows]) * 1000.0
+    if wl.deadline_s is not None:
+        row["delivered_frac"] = _mean([r["delivered_frac"] for r in rows])
+    return row
+
+
 def run_cell(spec: ExperimentSpec, cell: Cell) -> dict:
     """Execute one grid cell end to end via :func:`route`; returns the
     reduced row, or a ``{"skipped": reason}`` row for cells no engine
     can serve — explicit, so reports show the hole."""
+    if spec.workload is not None:
+        if spec.scenes != ("stable",):
+            raise ValueError("workload specs drive their own (possibly "
+                             "churn-coupled) traffic; use scenes="
+                             "('stable',)")
+        return _workload_cell(spec, cell)
     trace = _trace_for(spec, cell)
     duration = _duration_s(spec, trace)
     r = route(spec, cell)

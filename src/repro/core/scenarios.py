@@ -97,6 +97,7 @@ def build_cluster(
     loss=None,
     repair=None,
     delay_model=None,
+    egress_bytes_per_s=None,
 ) -> Cluster:
     """``share_view=True`` hands every node the *same* MembershipView
     instance — valid only for membership-static (stable) runs, where it
@@ -120,7 +121,12 @@ def build_cluster(
     makes :meth:`Network.send` scale every DATA delay by the edge's tier
     factor (and, with per-tier ``loss_rates``, override the flat loss
     threshold); the default / :class:`~repro.core.topology.FlatLognormal`
-    keeps the historical flat program bit-for-bit."""
+    keeps the historical flat program bit-for-bit.
+
+    ``egress_bytes_per_s`` caps every node's outbound bandwidth: DATA
+    sends serialize on a per-node egress queue in
+    :meth:`Network.send` — the queueing-aware load regime of
+    :mod:`repro.core.workload` (DESIGN.md §14)."""
     assert protocol in PROTOCOLS, protocol
     assert not (share_view and (enable_swim or enable_anti_entropy)), \
         "share_view is only sound when no one mutates membership"
@@ -129,7 +135,8 @@ def build_cluster(
     latency = LatencyModel() if delay_model is None \
         else delay_model.latency_model()
     net = Network(sim, metrics, latency, delay_bank=delay_bank,
-                  loss=loss, delay_model=delay_model)
+                  loss=loss, delay_model=delay_model,
+                  egress_bytes_per_s=egress_bytes_per_s)
     rng = random.Random(seed ^ 0x5EED)
     ids = list(range(n))
     shared = MembershipView.from_sorted(ids) if share_view else None

@@ -289,6 +289,61 @@ class Metrics:
             })
         return rows
 
+    # -- tail / saturation reductions (DESIGN.md §14) ------------------------
+    def ldt_quantiles(self, qs: Sequence[float] = (0.5, 0.99, 0.999),
+                      subset: Optional[Set[NodeId]] = None) -> np.ndarray:
+        """(len(qs),) float64 quantiles over the per-message LDTs —
+        a host-side ``numpy.quantile`` over ``per_message`` rows, so the
+        reduction is identical on every engine backend."""
+        rows = self.per_message(subset)
+        vals = np.asarray([r["ldt"] for r in rows
+                           if not math.isnan(r["ldt"])], dtype=np.float64)
+        if vals.size == 0:
+            return np.full(len(tuple(qs)), np.nan)
+        return np.quantile(vals, np.asarray(qs, dtype=np.float64))
+
+    def delivery_latencies(self,
+                           subset: Optional[Set[NodeId]] = None
+                           ) -> np.ndarray:
+        """Pooled per-(message, intended node) delivery latencies —
+        the population behind the p999 delivery tail."""
+        if subset is not None and not isinstance(subset, frozenset):
+            subset = frozenset(subset)
+        vals: List[float] = []
+        for mid, t0 in sorted(self.start.items()):
+            intended = self.intended[mid]
+            if subset is not None:
+                intended = intended & subset
+            fd = self.first_delivery.get(mid, {})
+            vals.extend(fd[n] - t0 for n in intended if n in fd)
+        return np.asarray(vals, dtype=np.float64)
+
+    def delivery_quantiles(self, qs: Sequence[float] = (0.5, 0.99, 0.999),
+                           subset: Optional[Set[NodeId]] = None
+                           ) -> np.ndarray:
+        vals = self.delivery_latencies(subset)
+        if vals.size == 0:
+            return np.full(len(tuple(qs)), np.nan)
+        return np.quantile(vals, np.asarray(qs, dtype=np.float64))
+
+    def delivered_within(self, deadline_s: float,
+                         subset: Optional[Set[NodeId]] = None) -> float:
+        """Fraction of intended (message, node) pairs delivered within
+        ``deadline_s`` — offered vs delivered load; the saturation knee
+        is where this falls off the ≈1.0 plateau."""
+        if subset is not None and not isinstance(subset, frozenset):
+            subset = frozenset(subset)
+        num = den = 0
+        for mid, t0 in sorted(self.start.items()):
+            intended = self.intended[mid]
+            if subset is not None:
+                intended = intended & subset
+            fd = self.first_delivery.get(mid, {})
+            den += len(intended)
+            num += sum(1 for n in intended
+                       if n in fd and fd[n] - t0 <= deadline_s)
+        return num / den if den else 0.0
+
     def summary(self, subset: Optional[Set[NodeId]] = None) -> dict:
         rows = self.per_message(subset)
         if not rows:
@@ -315,7 +370,8 @@ class Network:
 
     def __init__(self, sim: Sim, metrics: Metrics,
                  latency: Optional[LatencyModel] = None,
-                 delay_bank=None, loss=None, delay_model=None):
+                 delay_bank=None, loss=None, delay_model=None,
+                 egress_bytes_per_s: Optional[float] = None):
         self.sim = sim
         self.metrics = metrics
         self.latency = latency or LatencyModel()
@@ -344,6 +400,14 @@ class Network:
         #: message-id → loss column when no bank assigns columns (live
         #: baseline runs): first-send order, same as the bank's rule
         self._loss_cols: Dict[int, int] = {}
+        #: optional per-node egress bandwidth cap (bytes/s, DESIGN §14):
+        #: first-epoch broadcast DATA sends serialize on the sender's
+        #: egress queue — child ``j`` of a batch departs ``(j+1)·size/B``
+        #: after the forwarding instant, plus any backlog still draining
+        #: from earlier messages.  ``None`` keeps the historical
+        #: infinite-bandwidth program byte-identical.
+        self.egress_bytes_per_s = egress_bytes_per_s
+        self._egress_busy: Dict[NodeId, float] = {}
         self.nodes: Dict[NodeId, "NodeBase"] = {}
         self.crashed: Set[NodeId] = set()
         self.departed: Set[NodeId] = set()
@@ -403,6 +467,15 @@ class Network:
             delay = self.latency.sample(self.sim.rng)
         if self.delay_model is not None:
             delay = delay * self.delay_model.link_scale(src, dst)
+        if self.egress_bytes_per_s is not None and isinstance(msg, Data) \
+                and msg.update is None:
+            # serialize on src's egress: the frame departs when the link
+            # frees up and has fully left the NIC (busy + size/B)
+            depart = max(self.sim.now,
+                         self._egress_busy.get(src, 0.0)) \
+                + msg.size / self.egress_bytes_per_s
+            self._egress_busy[src] = depart
+            extra += depart - self.sim.now
         self.sim.after(extra + delay, lambda: self._deliver(src, dst, msg))
 
     def _loss_fault(self, src: NodeId, dst: NodeId,

@@ -34,7 +34,7 @@ from .faults import LossModel, RepairModel
 from .topology import (DelayModel, FlatLognormal, HierarchicalLatency,
                        Topology)
 
-__all__ = ["NetworkSpec", "RunSpec", "resolve_specs"]
+__all__ = ["NetworkSpec", "RunSpec", "WorkloadSpec", "resolve_specs"]
 
 
 @dataclass(frozen=True)
@@ -123,6 +123,60 @@ class NetworkSpec:
         return {"latency": enc(self.latency), "loss": enc(self.loss),
                 "repair": enc(self.repair), "topology": enc(self.topology),
                 "locality": self.locality}
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Frozen description of the offered traffic (DESIGN.md §14) —
+    routed through the experiment grid like :class:`NetworkSpec`; the
+    generators that materialize it live in :mod:`repro.core.workload`.
+
+    ``kind`` — arrival process: ``"poisson"`` (homogeneous),
+    ``"diurnal"`` (thinned under a sinusoidal envelope) or
+    ``"flash_crowd"`` (hot-topic burst riding the transient-crowd churn
+    wave).  ``rate_hz`` is the mean (peak, for diurnal) message rate
+    over ``horizon_s``.  ``n_topics``/``sub_frac`` arm topic-based
+    multicast (0 topics = every message is a full broadcast);
+    ``egress_bytes_per_s`` caps per-node egress bandwidth (``None`` =
+    uncapped, the bit-exact regime); ``deadline_s`` defines the
+    delivered-within-deadline fraction behind the saturation knee.
+    """
+
+    kind: str = "poisson"
+    rate_hz: float = 10.0
+    horizon_s: float = 10.0
+    n_publishers: int = 8
+    n_topics: int = 0
+    sub_frac: float = 0.25
+    payload: int = 64
+    egress_bytes_per_s: Optional[float] = None
+    diurnal_depth: float = 0.8
+    diurnal_period_s: Optional[float] = None
+    hot_boost: float = 4.0
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in ("poisson", "diurnal", "flash_crowd"):
+            raise ValueError(f"kind must be 'poisson', 'diurnal' or "
+                             f"'flash_crowd', got {self.kind!r}")
+        if self.rate_hz <= 0 or self.horizon_s <= 0:
+            raise ValueError("rate_hz and horizon_s must be positive")
+        if self.n_publishers < 1:
+            raise ValueError("need at least one publisher")
+        if self.n_topics > 0 and not 0.0 < self.sub_frac <= 1.0:
+            raise ValueError("sub_frac must be in (0, 1]")
+        if not 0.0 <= self.diurnal_depth <= 1.0:
+            raise ValueError("diurnal_depth must be in [0, 1]")
+        if self.egress_bytes_per_s is not None \
+                and self.egress_bytes_per_s <= 0:
+            raise ValueError("egress_bytes_per_s must be positive")
+        if self.hot_boost < 1.0:
+            raise ValueError("hot_boost must be >= 1")
+
+    def asdict(self) -> dict:
+        d = asdict(self)
+        d["__class__"] = type(self).__name__
+        return d
 
 
 @dataclass(frozen=True)

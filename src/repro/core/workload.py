@@ -1,0 +1,696 @@
+"""Traffic-at-scale workload engine (DESIGN.md §14).
+
+Everything before this module broadcasts a handful of messages from one
+root.  The ROADMAP north-star is *serving traffic*: many concurrent
+publishers, topic-based multicast over member subsets, diurnal load
+curves and hot-topic flash crowds — and the tail latency that queueing
+at saturated egress links adds on top of the forwarding delays.
+
+The module provides
+
+* :class:`WorkloadTrace` — a seedable message schedule (publisher,
+  topic, instantaneous offered rate per message) optionally coupled to
+  a :class:`~repro.core.churn.ChurnTrace` membership schedule, consumed
+  by BOTH engines;
+* generators: :func:`poisson_workload`, :func:`diurnal_workload`
+  (thinned Poisson under a sinusoidal envelope) and
+  :func:`flash_crowd_workload` (hot-topic burst coupled to the
+  ``churn.flash_crowd_trace`` membership wave);
+* :func:`run_workload_events` — the event loop with a per-node egress
+  queue (``Network(egress_bytes_per_s=...)``): sends serialize, so a
+  node forwarding to ``c`` children pays ``(j+1)·S`` on child ``j``
+  plus any backlog from earlier messages still draining;
+* :func:`run_workload_vectorized` — the closed form: per-publisher
+  plans per epoch over the shared :class:`~repro.core.engine.DelayBank`
+  (bit-exact against the event loop when uncapped) plus an M/G/1-style
+  per-hop waiting-time term layered onto the level sweep when capped
+  (statistical pin, see §14.3);
+* saturation / tail helpers (:func:`workload_sweep`, the
+  ``ldt_quantiles`` / ``delivery_quantiles`` / ``delivered_within``
+  reductions live on :class:`~repro.core.sim.Metrics`).
+
+Queueing closed form (§14.2).  With an egress cap of ``B`` bytes/s a
+frame of size ``F`` serializes for ``S = F/B`` seconds.  A node ``u``
+forwarding one message to ``c_u`` children emits a batch of service
+time ``c_u·S``; under global message rate ``λ`` its egress utilization
+is ``ρ_u = λ·S·c̄_u`` where ``c̄_u`` averages ``u``'s child count over
+the per-publisher trees weighted by each publisher's message share.
+The mean backlog wait is the M/G/1 Pollaczek–Khinchine term
+
+    ``W_u = λ · E[B_u²] / (2·(1 − ρ_u))``,
+    ``E[B_u²] = S² · Σ_p share_p · (c_u^p)²``
+
+(ρ clamped at :data:`RHO_CLAMP`; past saturation an explicit backlog
+term ``max(0, ρ_u − 1) · elapsed`` grows linearly over the run).  The
+per-hop addition for child ``v`` at sibling rank ``r`` is then
+``q[v] = W[parent[v]] + (r+1)·S``, folded into the link plane before
+the level sweep.  The ``(r+1)·S`` serialization part is *exact* (the
+event loop emits siblings in the same plan order); only ``W`` is a
+mean-value approximation — hence bit-exact uncapped, statistically
+pinned capped (15 % mean / 25 % p99, ``tests/test_workload.py``).
+
+Publishers may *crash* mid-trace (their later messages reach nobody —
+both engines still emit the metrics row, see the silent-drop regression
+in ``tests/test_workload.py``); they must never ``leave``/``evict``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .churn import ChurnTrace, flash_crowd_trace
+from .engine import (ArrayMetrics, DelayBank, _resolve_backend, _slot,
+                     bank_for_trace, delivery_times, reach_mask, stable_plans)
+from .messages import Data
+from .planner import TreePlan
+from .scenarios import Cluster, _schedule_trace, build_cluster
+from .sim import NodeProfile
+from .snow_node import SnowNode
+from .specs import WorkloadSpec
+
+__all__ = [
+    "RHO_CLAMP", "TopicModel", "WorkloadTrace", "WorkloadRun",
+    "poisson_workload", "diurnal_workload", "diurnal_rate",
+    "flash_crowd_workload", "build_trace", "frame_size", "sibling_rank",
+    "EgressQueueModel", "queue_model_for_epoch", "queue_plane",
+    "run_workload_events", "run_workload_vectorized", "workload_sweep",
+]
+
+#: M/G/1 utilization clamp — the closed form stays finite through the
+#: knee; past 1.0 the explicit backlog term models the divergence
+RHO_CLAMP = 0.98
+
+# generator stream tags (second SeedSequence word, like the bank's 0xDE1A)
+_TAG_POISSON, _TAG_DIURNAL, _TAG_FLASH = 0x10AD, 0x10AE, 0x10AF
+
+
+def frame_size(payload: int) -> int:
+    """Wire size of one broadcast DATA frame carrying ``payload`` bytes."""
+    return Data(0, 0, None, None, payload).size
+
+
+# ------------------------------------------------------------------ #
+# Topic-based multicast                                               #
+# ------------------------------------------------------------------ #
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 arrays (wraparound
+    multiplication is the algorithm, not an accident)."""
+    with np.errstate(over="ignore"):
+        x = np.asarray(x, dtype=np.uint64)
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x = x ^ (x >> np.uint64(30))
+        x = x * np.uint64(0xBF58476D1CE4E5B9)
+        x = x ^ (x >> np.uint64(27))
+        x = x * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopicModel:
+    """Deterministic hash subscription: node ``v`` subscribes to topic
+    ``t`` iff ``h(seed, t, v) < sub_frac`` — no per-node state, so the
+    subscriber set of any topic over any member array is a pure
+    vectorized function (subsets of the live membership by
+    construction, the property the hypothesis tests pin)."""
+
+    n_topics: int
+    sub_frac: float
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.n_topics >= 1
+        assert 0.0 < self.sub_frac <= 1.0
+
+    def subscriber_mask(self, topic: int, members: np.ndarray) -> np.ndarray:
+        """(n,) bool mask over ``members`` — who subscribes to ``topic``."""
+        m = np.asarray(members, dtype=np.uint64)
+        key = _splitmix64(np.uint64(self.seed) * np.uint64(0x9E3779B9)
+                          + np.uint64(topic) + np.uint64(1))
+        h = _splitmix64(m ^ key)
+        u = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+        return u < self.sub_frac
+
+
+# ------------------------------------------------------------------ #
+# The trace                                                           #
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """A seedable traffic schedule: message ``j`` is published by node
+    ``publishers[j]`` at ``publish_times[j]`` on ``topics[j]`` (−1 =
+    broadcast to every member) while the instantaneous offered rate is
+    ``rates_hz[j]`` (feeds the closed-form λ).  ``churn`` optionally
+    couples a membership schedule whose ``msg_times`` are exactly the
+    publish times, so both engines segment epochs identically."""
+
+    n: int
+    publish_times: Tuple[float, ...]
+    publishers: Tuple[int, ...]
+    topics: Tuple[int, ...]
+    rates_hz: Tuple[float, ...]
+    payload: int = 64
+    topic_model: Optional[TopicModel] = None
+    churn: Optional[ChurnTrace] = None
+
+    def __post_init__(self):
+        t = np.asarray(self.publish_times, dtype=np.float64)
+        assert t.ndim == 1 and t.shape[0] >= 1
+        assert len(self.publishers) == len(self.topics) \
+            == len(self.rates_hz) == t.shape[0]
+        assert np.all(np.diff(t) > 0), \
+            "publish times must be strictly increasing (bank column order)"
+        assert all(0 <= p < self.n for p in self.publishers), \
+            "publishers come from the fixed id range"
+        if self.churn is not None:
+            assert self.churn.n == self.n
+            assert tuple(self.churn.msg_times) == tuple(self.publish_times), \
+                "coupled churn must schedule exactly the publish times"
+
+    @property
+    def n_messages(self) -> int:
+        return len(self.publish_times)
+
+    def coupling(self) -> ChurnTrace:
+        """The membership schedule both engines replay — the coupled
+        churn, or a static single-epoch stand-in."""
+        if self.churn is not None:
+            return self.churn
+        return ChurnTrace(n=self.n, events=(),
+                          msg_times=tuple(self.publish_times),
+                          src=int(self.publishers[0]))
+
+    def horizon(self) -> float:
+        return self.coupling().horizon()
+
+    def intended_mask(self, j: int, members: np.ndarray) -> np.ndarray:
+        """(n,) bool — the metered population of message ``j`` over the
+        sorted ``members`` array: topic subscribers (or everyone for
+        topic −1), minus the publisher."""
+        members = np.asarray(members)
+        topic = int(self.topics[j])
+        if topic < 0 or self.topic_model is None:
+            mask = np.ones(members.shape[0], dtype=bool)
+        else:
+            mask = self.topic_model.subscriber_mask(topic, members)
+        i = int(np.searchsorted(members, self.publishers[j]))
+        if i < members.shape[0] and members[i] == self.publishers[j]:
+            mask = mask.copy()
+            mask[i] = False
+        return mask
+
+
+# ------------------------------------------------------------------ #
+# Generators                                                          #
+# ------------------------------------------------------------------ #
+def _gen_rng(seed: int, tag: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([seed & 0xFFFFFFFF, tag]))
+
+
+def _pick_publishers(rng: np.random.Generator, n: int, n_publishers: int,
+                     m: int) -> np.ndarray:
+    pubs = np.sort(rng.choice(n, size=min(n_publishers, n), replace=False))
+    return pubs[rng.integers(0, pubs.shape[0], size=m)]
+
+
+def _pick_topics(rng: np.random.Generator, n_topics: int,
+                 m: int) -> np.ndarray:
+    if n_topics <= 0:
+        return np.full(m, -1, dtype=np.int64)
+    return rng.integers(0, n_topics, size=m)
+
+
+def poisson_workload(n: int, rate_hz: float, horizon_s: float, seed: int = 0,
+                     *, n_publishers: int = 8, n_topics: int = 0,
+                     sub_frac: float = 0.25, payload: int = 64,
+                     topic_seed: int = 0) -> WorkloadTrace:
+    """Homogeneous Poisson arrivals at ``rate_hz`` over ``horizon_s``
+    from ``n_publishers`` uniformly drawn fixed publishers.  All draws
+    come from one fixed-size stream, so the trace regenerates
+    byte-identically from ``(seed, params)``."""
+    assert rate_hz > 0 and horizon_s > 0
+    rng = _gen_rng(seed, _TAG_POISSON)
+    m_draw = max(4, int(math.ceil(rate_hz * horizon_s * 1.6)) + 16)
+    times = np.cumsum(rng.exponential(1.0 / rate_hz, size=m_draw))
+    times = times[times < horizon_s]
+    if times.shape[0] == 0:
+        times = np.asarray([0.5 * horizon_s])
+    m = times.shape[0]
+    pubs = _pick_publishers(rng, n, n_publishers, m)
+    topics = _pick_topics(rng, n_topics, m)
+    tm = TopicModel(n_topics, sub_frac, topic_seed) if n_topics > 0 else None
+    return WorkloadTrace(
+        n=n, publish_times=tuple(float(x) for x in times),
+        publishers=tuple(int(x) for x in pubs),
+        topics=tuple(int(x) for x in topics),
+        rates_hz=(float(rate_hz),) * m, payload=payload, topic_model=tm)
+
+
+def diurnal_rate(t, peak_hz: float, depth: float, period_s: float):
+    """Instantaneous rate of the diurnal envelope — a raised sinusoid in
+    ``[peak·(1−depth), peak]``; the bound the property tests pin."""
+    frac = (1.0 - depth) + depth * 0.5 * (
+        1.0 + np.sin(2.0 * np.pi * np.asarray(t, dtype=np.float64)
+                     / period_s))
+    return peak_hz * frac
+
+
+def diurnal_workload(n: int, peak_hz: float, horizon_s: float, seed: int = 0,
+                     *, depth: float = 0.8, period_s: Optional[float] = None,
+                     n_publishers: int = 8, n_topics: int = 0,
+                     sub_frac: float = 0.25, payload: int = 64,
+                     topic_seed: int = 0) -> WorkloadTrace:
+    """Non-homogeneous Poisson by thinning: candidates at ``peak_hz``,
+    accepted with probability ``rate(t)/peak`` under the sinusoidal
+    envelope.  ``rates_hz[j]`` carries the envelope value at each accept
+    — the per-message λ the queueing closed form consumes."""
+    assert 0.0 <= depth <= 1.0
+    if period_s is None:
+        period_s = horizon_s
+    rng = _gen_rng(seed, _TAG_DIURNAL)
+    m_draw = max(4, int(math.ceil(peak_hz * horizon_s * 1.6)) + 16)
+    cand = np.cumsum(rng.exponential(1.0 / peak_hz, size=m_draw))
+    accept_u = rng.random(size=m_draw)          # fixed-size stream
+    keep = cand < horizon_s
+    keep &= accept_u * peak_hz < diurnal_rate(cand, peak_hz, depth, period_s)
+    times = cand[keep]
+    if times.shape[0] == 0:
+        times = np.asarray([0.5 * horizon_s])
+    m = times.shape[0]
+    pubs = _pick_publishers(rng, n, n_publishers, m)
+    topics = _pick_topics(rng, n_topics, m)
+    tm = TopicModel(n_topics, sub_frac, topic_seed) if n_topics > 0 else None
+    return WorkloadTrace(
+        n=n, publish_times=tuple(float(x) for x in times),
+        publishers=tuple(int(x) for x in pubs),
+        topics=tuple(int(x) for x in topics),
+        rates_hz=tuple(float(r) for r in
+                       diurnal_rate(times, peak_hz, depth, period_s)),
+        payload=payload, topic_model=tm)
+
+
+def flash_crowd_workload(n: int, rate_hz: float, seed: int = 0, *,
+                         n_messages: int = 30, crowd: Optional[int] = None,
+                         arrive_over: int = 5, stay: int = 15,
+                         hot_boost: float = 4.0, n_publishers: int = 8,
+                         n_topics: int = 8, sub_frac: float = 0.25,
+                         payload: int = 64,
+                         topic_seed: int = 0) -> WorkloadTrace:
+    """Hot-topic flash crowd: base Poisson traffic at ``rate_hz`` plus a
+    burst of extra publishes on topic 0 at ``(hot_boost−1)·rate_hz``
+    while the :func:`~repro.core.churn.flash_crowd_trace` transient
+    crowd is in the cluster — the membership wave and the traffic spike
+    ride the same window, coupled through ``WorkloadTrace.churn``."""
+    assert hot_boost >= 1.0 and n_topics >= 1
+    rng = _gen_rng(seed, _TAG_FLASH)
+    rate_s = 1.0 / rate_hz
+    horizon = n_messages * rate_s
+    m_draw = max(4, int(math.ceil(n_messages * 1.6)) + 16)
+    base = np.cumsum(rng.exponential(rate_s, size=m_draw))
+    base = base[base < horizon]
+    # the crowd window of flash_crowd_trace: first wave joins at
+    # rate_s + 0.11, last wave leaves at (arrive_over + stay) waves later
+    w0 = rate_s + 0.11
+    w1 = (1 + arrive_over + stay) * rate_s + 0.13
+    hot = np.empty(0)
+    if hot_boost > 1.0:
+        h_draw = max(4, int(math.ceil((w1 - w0) * (hot_boost - 1.0)
+                                      * rate_hz * 1.6)) + 16)
+        hot = w0 + np.cumsum(
+            rng.exponential(1.0 / ((hot_boost - 1.0) * rate_hz),
+                            size=h_draw))
+        hot = hot[hot < min(w1, horizon)]
+    m_base, m_hot = base.shape[0], hot.shape[0]
+    pubs = _pick_publishers(rng, n, n_publishers, m_base + m_hot)
+    topics = np.concatenate([_pick_topics(rng, n_topics, m_base),
+                             np.zeros(m_hot, dtype=np.int64)])
+    times = np.concatenate([base, hot])
+    order = np.argsort(times, kind="stable")
+    times, pubs, topics = times[order], pubs[order], topics[order]
+    keep = np.ones(times.shape[0], dtype=bool)
+    keep[1:] = np.diff(times) > 0            # strictly increasing
+    times, pubs, topics = times[keep], pubs[keep], topics[keep]
+    in_window = (times >= w0) & (times < w1)
+    rates = np.where(in_window, hot_boost * rate_hz, rate_hz)
+    fc = flash_crowd_trace(n, n_messages=n_messages, rate_s=rate_s,
+                           crowd=crowd, arrive_over=arrive_over, stay=stay)
+    churn = ChurnTrace(n=n, events=fc.events,
+                       msg_times=tuple(float(x) for x in times),
+                       src=int(pubs[0]))
+    return WorkloadTrace(
+        n=n, publish_times=tuple(float(x) for x in times),
+        publishers=tuple(int(x) for x in pubs),
+        topics=tuple(int(x) for x in topics),
+        rates_hz=tuple(float(r) for r in rates),
+        payload=payload, topic_model=TopicModel(n_topics, sub_frac,
+                                                topic_seed),
+        churn=churn)
+
+
+def build_trace(spec: WorkloadSpec, n: int, seed: int = 0) -> WorkloadTrace:
+    """Materialize a :class:`~repro.core.specs.WorkloadSpec` — the
+    experiment-grid entry point, routed like ``NetworkSpec``."""
+    if spec.kind == "poisson":
+        return poisson_workload(
+            n, spec.rate_hz, spec.horizon_s, seed,
+            n_publishers=spec.n_publishers, n_topics=spec.n_topics,
+            sub_frac=spec.sub_frac, payload=spec.payload)
+    if spec.kind == "diurnal":
+        return diurnal_workload(
+            n, spec.rate_hz, spec.horizon_s, seed,
+            depth=spec.diurnal_depth, period_s=spec.diurnal_period_s,
+            n_publishers=spec.n_publishers, n_topics=spec.n_topics,
+            sub_frac=spec.sub_frac, payload=spec.payload)
+    assert spec.kind == "flash_crowd", spec.kind
+    return flash_crowd_workload(
+        n, spec.rate_hz, seed,
+        n_messages=max(2, int(round(spec.rate_hz * spec.horizon_s))),
+        hot_boost=spec.hot_boost, n_publishers=spec.n_publishers,
+        n_topics=max(1, spec.n_topics), sub_frac=spec.sub_frac,
+        payload=spec.payload)
+
+
+# ------------------------------------------------------------------ #
+# M/G/1 egress queueing (closed form)                                 #
+# ------------------------------------------------------------------ #
+def sibling_rank(plan: TreePlan) -> np.ndarray:
+    """(n,) int — each non-root node's 0-based emission rank among its
+    siblings.  ``plan.slot`` orders siblings but is NOT contiguous (it
+    carries recursion offsets), so ranks come from a per-parent lexsort
+    — the same ``(parent, slot)`` order ``children_lists`` reconstructs
+    and the event loop's sequential ``do_send`` emits."""
+    parent = np.asarray(plan.parent)
+    depth = np.asarray(plan.depth)
+    slot = np.asarray(plan.slot)
+    rank = np.zeros(parent.shape[0], dtype=np.int64)
+    idx = np.nonzero(depth >= 1)[0]
+    if idx.size == 0:
+        return rank
+    order = np.lexsort((slot[idx], parent[idx]))
+    sidx = idx[order]
+    p = parent[sidx]
+    starts = np.empty(p.shape[0], dtype=bool)
+    starts[0] = True
+    starts[1:] = p[1:] != p[:-1]
+    grp = np.cumsum(starts) - 1
+    first = np.nonzero(starts)[0]
+    rank[sidx] = np.arange(p.shape[0]) - first[grp]
+    return rank
+
+
+@dataclasses.dataclass(frozen=True)
+class EgressQueueModel:
+    """Per-node M/G/1 egress state for one epoch (module docstring)."""
+
+    service_s: float     #: S — one frame's serialization time
+    cbar: np.ndarray     #: (n,) share-weighted mean child count
+    c2bar: np.ndarray    #: (n,) share-weighted second moment
+
+    def wait_plane(self, lam: np.ndarray, elapsed: np.ndarray) -> np.ndarray:
+        """(m, n) mean egress wait ``W`` per node for messages with
+        instantaneous offered rate ``lam`` published ``elapsed`` seconds
+        after the workload opened (feeds the past-saturation backlog)."""
+        lam = np.asarray(lam, dtype=np.float64)[:, None]
+        rho = lam * self.service_s * self.cbar[None, :]
+        eb2 = (self.service_s ** 2) * self.c2bar[None, :]
+        w = lam * eb2 / (2.0 * (1.0 - np.minimum(rho, RHO_CLAMP)))
+        return w + np.maximum(rho - 1.0, 0.0) \
+            * np.asarray(elapsed, dtype=np.float64)[:, None]
+
+
+def queue_model_for_epoch(plans_by_pub: Dict[int, Tuple[TreePlan, ...]],
+                          shares: Dict[int, float], n_members: int,
+                          service_s: float) -> EgressQueueModel:
+    """Build the epoch's queue model: every message traverses every
+    node, with a tree-dependent child count per publisher — so the
+    batch-size moments at each node average the per-publisher plans by
+    message share."""
+    cbar = np.zeros(n_members)
+    c2bar = np.zeros(n_members)
+    for p, plans in plans_by_pub.items():
+        counts = np.zeros(n_members)
+        for plan in plans:
+            parent = np.asarray(plan.parent)
+            depth = np.asarray(plan.depth)
+            counts += np.bincount(parent[depth >= 1], minlength=n_members)
+        cbar += shares[p] * counts
+        c2bar += shares[p] * counts ** 2
+    return EgressQueueModel(service_s, cbar, c2bar)
+
+
+def queue_plane(plan: TreePlan, wait: np.ndarray,
+                service_s: float) -> np.ndarray:
+    """(m, n) per-hop queue addition folded into the link plane:
+    ``q[m, v] = W[m, parent[v]] + (rank[v]+1)·S`` for non-root nodes —
+    the parent's mean backlog wait plus the exact serialization slot of
+    ``v`` in its parent's emission order."""
+    parent = np.asarray(plan.parent)
+    depth = np.asarray(plan.depth)
+    rank = sibling_rank(plan)
+    q = wait[:, parent] + (rank[None, :] + 1.0) * service_s
+    return np.where((depth >= 1)[None, :], q, 0.0)
+
+
+# ------------------------------------------------------------------ #
+# Event-loop engine                                                   #
+# ------------------------------------------------------------------ #
+def run_workload_events(trace: WorkloadTrace, k: int = 4, seed: int = 0, *,
+                        egress_bytes_per_s: Optional[float] = None,
+                        drain_s: float = 20.0) -> Cluster:
+    """Oracle-membership event loop over a :class:`WorkloadTrace`:
+    the ``run_trace_aligned`` handlers for the coupled churn, plus
+    multi-publisher originations with topic-restricted intended sets.
+    ``egress_bytes_per_s`` arms the per-node egress queue in
+    :class:`~repro.core.sim.Network` — uncapped runs are bit-exact
+    against :func:`run_workload_vectorized` on the shared bank.
+
+    Every origination books its metrics row and burns its bank column
+    *even when the publisher has crashed* (all its sends are dropped
+    before they touch the bank) — without this, the crashed publisher's
+    message silently vanished from ``per_message`` and every later
+    message slid one column off its closed-form delay samples."""
+    ct = trace.coupling()
+    bank = bank_for_trace(seed, ct, "snow")
+    c = build_cluster("snow", trace.n, k, seed, share_view=True,
+                      delay_bank=bank,
+                      egress_bytes_per_s=egress_bytes_per_s)
+    view = c.nodes[0].view               # THE shared view instance
+
+    def oracle_join(nid: int) -> None:
+        node = SnowNode(nid, c.sim, c.net, c.metrics, view, k, NodeProfile())
+        c.nodes[nid] = node
+        view.add(nid)
+
+    def oracle_leave(nid: int) -> None:
+        view.remove(nid)
+        c.net.depart(nid)
+
+    def oracle_crash(nid: int) -> None:
+        c.net.crash(nid)
+
+    def oracle_evict(nid: int) -> None:
+        view.remove(nid)
+
+    _schedule_trace(c, ct, {"join": oracle_join, "leave": oracle_leave,
+                            "crash": oracle_crash, "evict": oracle_evict})
+
+    def originate(j: int) -> None:
+        node = c.nodes[trace.publishers[j]]
+        mid = node.broadcast(trace.payload)
+        bank.column(mid)                 # crashed publishers burn theirs too
+        mem = np.asarray(sorted(node.view.members()))
+        imask = trace.intended_mask(j, mem)
+        c.metrics.begin(mid, c.sim.now, [int(x) for x in mem[imask]])
+
+    for j, tm in enumerate(trace.publish_times):
+        c.sim.at(tm, functools.partial(originate, j))
+    c.sim.run(until=ct.horizon() + drain_s)
+    return c
+
+
+# ------------------------------------------------------------------ #
+# Closed-form engine                                                  #
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class WorkloadRun:
+    """Closed-form run result — duck-typed like a cluster for the
+    metrics consumers (``.metrics``, ``.fixed``, ``.protocol``)."""
+
+    metrics: ArrayMetrics
+    bank: Optional[DelayBank]
+    trace: WorkloadTrace
+    fixed: List[int]
+    protocol: str = "snow"
+    k: int = 4
+
+
+def run_workload_vectorized(trace: WorkloadTrace, k: int = 4, seed: int = 0,
+                            *, egress_bytes_per_s: Optional[float] = None,
+                            backend: Optional[str] = None,
+                            engine: str = "host",
+                            straggler_frac: float = 0.05) -> WorkloadRun:
+    """The workload in closed form: per epoch, group messages by
+    publisher, plan one standard tree per publisher, gather the group's
+    bank columns (the non-contiguous twin of the single-src epoch
+    gather) and run the level sweep with the group's publish times as
+    ``t0``.  Capped runs add the §14.2 queue plane to the link plane.
+
+    Unlike ``compile_trace`` this path has no src-alive assert: a
+    crashed publisher's plan is reach-masked at the root, so its
+    messages keep their rows (zero deliveries, zero bytes) exactly like
+    the event loop — the other half of the silent-drop fix.
+
+    ``engine="device"`` swaps the bank gather for the counter-RNG
+    device sweep (`device_sweep.workload_times_device`) — no (n, M)
+    bank in host memory, statistical pin only, for the 1M-node bench.
+    """
+    assert engine in ("host", "device")
+    ct = trace.coupling()
+    frame = frame_size(trace.payload)
+    service = 0.0
+    if egress_bytes_per_s:
+        service = frame / float(egress_bytes_per_s)
+    bank = bank_for_trace(seed, ct, "snow") if engine == "host" else None
+    metrics = ArrayMetrics(bank.members if bank is not None
+                           else ct.all_ids())
+    pubs = np.asarray(trace.publishers)
+    times_arr = np.asarray(trace.publish_times, dtype=np.float64)
+    lam = np.asarray(trace.rates_hz, dtype=np.float64)
+    t_open = float(times_arr[0])
+    from .messages import fresh_mid
+    mids = [fresh_mid() for _ in range(trace.n_messages)]
+    gi = 0                               # device RNG group index
+    for ep in ct.epochs():
+        if ep.count == 0:
+            continue
+        members = ep.members
+        cmask = None
+        if ep.crashed.size:
+            cmask = np.isin(members, ep.crashed)
+        rows = None
+        if bank is not None:
+            r = bank.rows_for(members)
+            rows = np.arange(members.shape[0]) if r is None else r
+        g_pubs = pubs[ep.first:ep.first + ep.count]
+        uniq, counts = np.unique(g_pubs, return_counts=True)
+        plans_by_pub: Dict[int, Tuple[TreePlan, ...]] = {}
+        for p in uniq:
+            i = int(np.searchsorted(members, p))
+            assert i < members.shape[0] and members[i] == p, \
+                "workload publishers must stay members " \
+                "(crash allowed, leave/evict not)"
+            plans_by_pub[int(p)] = stable_plans("snow", members, int(p), k)
+        qm = None
+        if service > 0.0:
+            shares = {int(p): float(cnt) / float(ep.count)
+                      for p, cnt in zip(uniq, counts)}
+            qm = queue_model_for_epoch(plans_by_pub, shares,
+                                       int(members.shape[0]), service)
+        for p in uniq:
+            p = int(p)
+            sel = np.nonzero(g_pubs == p)[0]
+            cols = ep.first + sel
+            t0 = times_arr[cols]
+            src_index = int(np.searchsorted(members, p))
+            total = None
+            receipts = None
+            for plan in plans_by_pub[p]:
+                q = None
+                if qm is not None:
+                    wait = qm.wait_plane(lam[cols], t0 - t_open)
+                    q = queue_plane(plan, wait, service)
+                if engine == "host":
+                    s = _slot(plan.tree)
+                    fwd = np.ascontiguousarray(
+                        bank.fwd[rows[:, None], cols[None, :], s].T)
+                    link = np.ascontiguousarray(
+                        bank.link[rows[:, None], cols[None, :], s].T)
+                    if q is not None:
+                        link = link + q
+                    t = delivery_times(plan, fwd, link, t0=t0,
+                                       backend=backend)
+                else:
+                    from . import device_sweep
+                    t = device_sweep.workload_times_device(
+                        plan, seed, gi, t0, qadd=q,
+                        straggler_frac=straggler_frac)
+                gi += 1
+                ok = None
+                if cmask is not None:
+                    ok = reach_mask(plan, cmask)
+                    t = np.where(ok[None, :], t, np.nan)
+                total = t if total is None else np.fmin(total, t)
+                rec = np.asarray(plan.depth) >= 1
+                if ok is not None:
+                    rec = rec & ok
+                receipts = rec.astype(np.int64) if receipts is None \
+                    else receipts + rec
+            nbytes = frame * int(receipts.sum())
+            for jj in range(cols.shape[0]):
+                g = int(cols[jj])
+                metrics.record_message(
+                    mids[g], float(t0[jj]), src_index, total[jj], nbytes,
+                    members=members, receipts=receipts, frame_bytes=frame,
+                    intended=trace.intended_mask(g, members))
+    return WorkloadRun(metrics=metrics, bank=bank, trace=trace,
+                       fixed=list(range(trace.n)), k=k)
+
+
+# ------------------------------------------------------------------ #
+# Sweeps (benchmarks / experiment grid)                               #
+# ------------------------------------------------------------------ #
+def _qlabel(q: float) -> str:
+    return "p" + ("%g" % (q * 100.0)).replace(".", "")
+
+
+def workload_sweep(n: int, k: int, seeds: Sequence[int], spec: WorkloadSpec,
+                   *, engine: str = "vectorized",
+                   backend: Optional[str] = None, device: bool = False,
+                   qs: Tuple[float, ...] = (0.5, 0.99, 0.999)) -> List[dict]:
+    """Multi-seed workload rows: mean/quantile LDT, pooled delivery-time
+    quantiles, reliability, rmr, and (with ``spec.deadline_s``) the
+    delivered-within-deadline fraction that locates the saturation
+    knee.  ``engine="events"`` runs the egress-queue event loop
+    (differential baseline); otherwise the closed form (``device=True``
+    for the bank-free device sweep)."""
+    backend = _resolve_backend(backend)
+    rows: List[dict] = []
+    for seed in seeds:
+        tr = build_trace(spec, n, seed)
+        wall = time.time()
+        if engine == "events":
+            run = run_workload_events(
+                tr, k, seed, egress_bytes_per_s=spec.egress_bytes_per_s)
+        else:
+            run = run_workload_vectorized(
+                tr, k, seed, egress_bytes_per_s=spec.egress_bytes_per_s,
+                backend=backend, engine="device" if device else "host")
+        m = run.metrics
+        pm = m.per_message(None)
+        ldts = np.asarray([r["ldt"] for r in pm
+                           if not math.isnan(r["ldt"])], dtype=np.float64)
+        row = {
+            "seed": int(seed), "n": int(n), "n_messages": tr.n_messages,
+            "offered_hz": float(np.mean(tr.rates_hz)),
+            "ldt": float(ldts.mean()) if ldts.size else float("nan"),
+            "reliability": (min(r["reliability"] for r in pm)
+                            if pm else 0.0),
+            "rmr": (float(np.mean([r["rmr"] for r in pm]))
+                    if pm else 0.0),
+            "rmr_redundant": (float(np.mean([r["rmr_redundant"]
+                                             for r in pm])) if pm else 0.0),
+            "wall_s": time.time() - wall,
+        }
+        for q, v in zip(qs, m.ldt_quantiles(qs)):
+            row[f"{_qlabel(q)}_ldt"] = float(v)
+        for q, v in zip(qs, m.delivery_quantiles(qs)):
+            row[f"{_qlabel(q)}_delivery"] = float(v)
+        if spec.deadline_s is not None:
+            row["delivered_frac"] = m.delivered_within(spec.deadline_s)
+        rows.append(row)
+    return rows

@@ -1,0 +1,359 @@
+"""Workload engine vs the event loop in the load regime (DESIGN.md §14).
+
+Differential contract (the traffic-at-scale twin of
+``test_churn_engine.py``):
+
+* **uncapped** (no egress limit) the queueing-aware event loop and the
+  closed-form workload sweep agree bit-exactly — every first-delivery
+  time, every ``per_message`` row — across concurrent publishers, topic
+  subsets and coupled flash-crowd churn;
+* **capped** (per-node egress bandwidth) sends serialize in the event
+  loop while the closed form folds the §14.2 M/G/1 waiting term into
+  the level sweep: the pin is statistical — LDT mean within 15 %, p99
+  within 25 %, reliability exactly 1.0 — at n ∈ {50, 500, 5000};
+* the ``(rank+1)·S`` serialization component is *exact* (deterministic
+  unit test against the event loop's sequential ``do_send``), only the
+  mean-wait ``W`` is approximate;
+* crashed publishers keep their metrics rows on both engines (the
+  silent-drop regression);
+* the tail reductions (``ldt_quantiles`` / ``delivery_quantiles`` /
+  ``delivered_within``) match ``numpy.quantile`` on adversarial inputs
+  and are identical across engines and array backends.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.churn import ChurnEvent, ChurnTrace
+from repro.core.engine import ArrayMetrics, stable_plans
+from repro.core.specs import WorkloadSpec
+from repro.core.workload import (WorkloadTrace, build_trace, diurnal_workload,
+                                 flash_crowd_workload, frame_size,
+                                 poisson_workload, queue_plane,
+                                 run_workload_events, run_workload_vectorized,
+                                 sibling_rank, workload_sweep)
+
+K = 4
+FRAME = frame_size(64)
+
+
+def _capped(rho: float, service_s: float = 0.02):
+    """(egress_bytes_per_s, rate_hz) hitting utilization ``rho`` with
+    per-frame serialization ``service_s`` under fanout ``K``."""
+    return FRAME / service_s, rho / (K * service_s)
+
+
+def _assert_bit_exact(ev, vec, ctx, full=True):
+    """Every event-loop first delivery equals the sweep's time exactly,
+    and the per-message rows agree on every key.  ``full`` additionally
+    pins the delivery *sets* equal — true on boundary-aligned traces;
+    with members joining mid-flight the live loop can reach nodes the
+    origination-time plan never knew (the same carve-out as the churn
+    engine tests), so those runs pin the intended population only."""
+    pairs = list(zip(sorted(ev.metrics.start), sorted(vec.metrics.start)))
+    assert len(pairs) == len(ev.metrics.start) == len(vec.metrics.start)
+    for mid_e, mid_v in pairs:
+        fd = ev.metrics.first_delivery.get(mid_e, {})
+        tv = vec.metrics.times_for(mid_v)
+        mem = vec.metrics.members_for(mid_v)
+        idx = {int(m): i for i, m in enumerate(mem)}
+        src = int(mem[vec.metrics.src_index[mid_v]])
+        delivered_vec = {int(mem[i]) for i in np.nonzero(~np.isnan(tv))[0]
+                         if int(mem[i]) != src}
+        if full:
+            for node, t in fd.items():
+                assert t == tv[idx[node]], (*ctx, mid_e, node)
+            assert delivered_vec == set(fd), (*ctx, mid_e)
+    keys = ("ldt", "reliability", "rmr", "rmr_redundant", "payload_bytes",
+            "redundant_bytes", "duplicates") if full else \
+        ("ldt", "reliability")      # byte totals include mid-flight joiners
+    for a, b in zip(ev.metrics.per_message(), vec.metrics.per_message()):
+        for key in keys:
+            va, vb = a[key], b[key]
+            if isinstance(va, float) and math.isnan(va):
+                assert math.isnan(vb), (*ctx, key)
+            else:
+                assert va == vb, (*ctx, key, va, vb)
+
+
+# ------------------------------------------------------------------ #
+# Uncapped: bit-exact                                                  #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_workload_engines_bit_exact_uncapped(n):
+    """Concurrent publishers + topic multicast, no egress cap: the two
+    engines share the bank and must agree on every float."""
+    horizon = 3.0 if n == 5000 else 5.0
+    tr = poisson_workload(n, 2.0, horizon, seed=1, n_publishers=4,
+                          n_topics=4, sub_frac=0.5)
+    assert len(set(tr.publishers)) > 1, "need genuinely concurrent pubs"
+    assert any(t >= 0 for t in tr.topics), "need topic-restricted msgs"
+    ev = run_workload_events(tr, k=K, seed=0)
+    vec = run_workload_vectorized(tr, k=K, seed=0, backend="numpy")
+    _assert_bit_exact(ev, vec, ("uncapped", n))
+
+
+def test_flash_crowd_coupled_churn_bit_exact():
+    """The hot-topic burst rides the flash-crowd membership wave; the
+    coupled trace segments epochs identically on both engines.  The
+    wave is NOT boundary-aligned (messages are in flight as the crowd
+    joins/leaves, and the live loop can reach mid-flight joiners the
+    origination-time plan never knew), so the pin is the per-message
+    row set — seeded-exact here — not per-node delivery times."""
+    tr = flash_crowd_workload(60, 2.0, seed=3, n_messages=14)
+    assert tr.churn is not None and len(tr.churn.events) > 0
+    assert 0 in tr.topics, "burst publishes land on the hot topic"
+    ev = run_workload_events(tr, k=K, seed=0)
+    vec = run_workload_vectorized(tr, k=K, seed=0, backend="numpy")
+    _assert_bit_exact(ev, vec, ("flash_crowd",), full=False)
+
+
+def test_diurnal_trace_runs_bit_exact():
+    tr = diurnal_workload(80, 6.0, 6.0, seed=5, depth=0.9, n_publishers=3)
+    ev = run_workload_events(tr, k=K, seed=2)
+    vec = run_workload_vectorized(tr, k=K, seed=2, backend="numpy")
+    _assert_bit_exact(ev, vec, ("diurnal",))
+
+
+# ------------------------------------------------------------------ #
+# Capped: statistical pin                                              #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n", [50, 500, 5000])
+def test_workload_capped_statistically_pinned(n):
+    """Egress-capped runs: the M/G/1 closed form tracks the serializing
+    event loop within the §14.3 bands, and nobody is lost to queueing."""
+    egress, lam = _capped(0.5)
+    horizon = 4.0 if n == 5000 else 8.0
+    tr = poisson_workload(n, lam, horizon, seed=2, n_publishers=6)
+    ev = run_workload_events(tr, k=K, seed=0, egress_bytes_per_s=egress)
+    vec = run_workload_vectorized(tr, k=K, seed=0,
+                                  egress_bytes_per_s=egress)
+    a = np.array([r["ldt"] for r in ev.metrics.per_message()])
+    b = np.array([r["ldt"] for r in vec.metrics.per_message()])
+    assert a.shape == b.shape and a.shape[0] >= 15
+    assert abs(a.mean() - b.mean()) / a.mean() < 0.15, (n, a.mean(), b.mean())
+    qa, qb = np.quantile(a, 0.99), np.quantile(b, 0.99)
+    assert abs(qa - qb) / qa < 0.25, (n, qa, qb)
+    assert min(r["reliability"] for r in ev.metrics.per_message()) == 1.0
+    assert min(r["reliability"] for r in vec.metrics.per_message()) == 1.0
+    # the cap costs something: capped LDT strictly dominates uncapped
+    base = run_workload_vectorized(tr, k=K, seed=0)
+    b0 = np.array([r["ldt"] for r in base.metrics.per_message()])
+    assert (b >= b0 - 1e-12).all() and b.mean() > b0.mean()
+
+
+def test_egress_serialization_exact_vs_event_loop():
+    """The deterministic part of the queue model: with one message in
+    flight the event loop delays the root's rank-``j`` child by exactly
+    ``(j+1)·S`` — the same number ``queue_plane`` folds into the link
+    plane (the ``W`` mean-wait term is the only difference left)."""
+    n = 16
+    egress, _ = _capped(0.5)
+    S = FRAME / egress
+    tr = WorkloadTrace(n=n, publish_times=(1.0,), publishers=(0,),
+                       topics=(-1,), rates_hz=(0.001,))
+    ev0 = run_workload_events(tr, k=K, seed=0)
+    ev1 = run_workload_events(tr, k=K, seed=0, egress_bytes_per_s=egress)
+    (mid0,) = ev0.metrics.first_delivery.keys()
+    (mid1,) = ev1.metrics.first_delivery.keys()
+    fd0, fd1 = ev0.metrics.first_delivery[mid0], ev1.metrics.first_delivery[mid1]
+    plan = stable_plans("snow", np.arange(n), 0, K)[0]
+    rank = sibling_rank(plan)
+    depth = np.asarray(plan.depth)
+    for v in np.nonzero(depth == 1)[0]:     # root's own children
+        delta = fd1[int(v)] - fd0[int(v)]
+        assert delta == pytest.approx((rank[v] + 1) * S, abs=1e-12), v
+    # and the closed-form plane carries exactly that serialization term
+    q = queue_plane(plan, np.zeros((1, n)), S)
+    assert q[0, int(np.nonzero(depth == 0)[0][0])] == 0.0
+    np.testing.assert_allclose(q[0, depth >= 1],
+                               (rank[depth >= 1] + 1) * S, rtol=0, atol=0)
+
+
+# ------------------------------------------------------------------ #
+# Silent-drop regression: publisher crashes mid-trace                  #
+# ------------------------------------------------------------------ #
+def test_publisher_crash_keeps_metrics_rows():
+    """A publisher that crashes mid-trace must keep every later message
+    as an explicit zero-delivery row on BOTH engines (the row used to
+    vanish from the event metrics and slide the bank columns) — and on
+    a crash-aligned trace the engines stay bit-exact around it."""
+    n, m = 80, 8
+    times = tuple(4.0 * (i + 1) for i in range(m))
+    pubs = (7, 21, 7, 7, 21, 7, 21, 7)
+    ct = ChurnTrace(n=n, events=(ChurnEvent(18.0, "crash", 7),),
+                    msg_times=times, src=7)
+    tr = WorkloadTrace(n=n, publish_times=times, publishers=pubs,
+                       topics=(-1,) * m, rates_hz=(0.25,) * m, churn=ct)
+    ev = run_workload_events(tr, k=K, seed=0)
+    vec = run_workload_vectorized(tr, k=K, seed=0, backend="numpy")
+    er, vr = ev.metrics.per_message(), vec.metrics.per_message()
+    assert len(er) == len(vr) == m, "no silent drop on either engine"
+    _assert_bit_exact(ev, vec, ("crashed-publisher",))
+    dead = [i for i in range(m) if times[i] > 18.0 and pubs[i] == 7]
+    assert dead, "trace must publish from the crashed node"
+    for i in dead:
+        assert er[i]["reliability"] == vr[i]["reliability"] == 0.0
+        assert math.isnan(er[i]["ldt"]) and math.isnan(vr[i]["ldt"])
+        assert vr[i]["rmr"] == er[i]["rmr"] == 0.0
+    alive = [i for i in range(m) if times[i] < 18.0]
+    assert all(er[i]["reliability"] == 1.0 for i in alive)
+
+
+# ------------------------------------------------------------------ #
+# Seeded reproducibility across backends                               #
+# ------------------------------------------------------------------ #
+def test_seeded_reproducibility_and_backend_agreement(monkeypatch):
+    tr = poisson_workload(120, 3.0, 4.0, seed=9, n_publishers=3,
+                          n_topics=2, sub_frac=0.6)
+    egress, _ = _capped(0.4)
+
+    def ldts(backend_env):
+        monkeypatch.setenv("REPRO_ENGINE_BACKEND", backend_env)
+        run = run_workload_vectorized(tr, k=K, seed=4,
+                                      egress_bytes_per_s=egress)
+        return np.array([r["ldt"] for r in run.metrics.per_message()])
+
+    a1, a2 = ldts("numpy"), ldts("numpy")
+    np.testing.assert_array_equal(a1, a2)       # same seed ⇒ identical
+    jax = pytest.importorskip("jax")
+    del jax
+    b = ldts("jax")
+    np.testing.assert_allclose(a1, b, rtol=2e-5, atol=2e-5)
+
+
+def test_device_engine_statistical_pin():
+    jax = pytest.importorskip("jax")
+    del jax
+    egress, lam = _capped(0.5)
+    tr = poisson_workload(500, lam, 8.0, seed=2, n_publishers=6)
+    host = run_workload_vectorized(tr, k=K, seed=0,
+                                   egress_bytes_per_s=egress)
+    dev = run_workload_vectorized(tr, k=K, seed=0,
+                                  egress_bytes_per_s=egress,
+                                  engine="device")
+    hv = np.array([r["ldt"] for r in host.metrics.per_message()])
+    dv = np.array([r["ldt"] for r in dev.metrics.per_message()])
+    assert hv.shape == dv.shape
+    assert abs(hv.mean() - dv.mean()) / hv.mean() < 0.15
+    assert min(r["reliability"] for r in dev.metrics.per_message()) == 1.0
+    # same seed ⇒ identical device draws
+    dev2 = run_workload_vectorized(tr, k=K, seed=0,
+                                   egress_bytes_per_s=egress,
+                                   engine="device")
+    dv2 = np.array([r["ldt"] for r in dev2.metrics.per_message()])
+    np.testing.assert_array_equal(dv, dv2)
+
+
+# ------------------------------------------------------------------ #
+# Quantile-reduction correctness                                       #
+# ------------------------------------------------------------------ #
+def _adversarial_metrics():
+    """ArrayMetrics with ties, a single-delivery message and a
+    NaN-masked (crashed-subtree) message."""
+    mem = np.arange(8)
+    am = ArrayMetrics(mem)
+    # ties: every delivery at exactly t0 + 0.25
+    am.record_message(1, 1.0, 0, np.array(
+        [np.nan, 1.25, 1.25, 1.25, 1.25, 1.25, 1.25, 1.25]), 7 * FRAME)
+    # single delivery: topic subset of size one
+    intended = np.zeros(8, dtype=bool)
+    intended[3] = True
+    am.record_message(2, 2.0, 0, np.array(
+        [np.nan, 2.1, 2.2, 2.4, 2.8, np.nan, 2.9, 3.0]), 7 * FRAME,
+        intended=intended)
+    # crashed subtree: half the nodes never deliver
+    am.record_message(3, 3.0, 0, np.array(
+        [np.nan, 3.5, np.nan, np.nan, 3.125, np.nan, 3.0625, np.nan]),
+        3 * FRAME)
+    return am
+
+
+def test_array_quantiles_match_numpy_on_adversarial_shapes():
+    am = _adversarial_metrics()
+    rows = am.per_message()
+    ldts = np.array([r["ldt"] for r in rows])
+    np.testing.assert_array_equal(ldts, [1.25 - 1.0, 2.4 - 2.0, 3.5 - 3.0])
+    for qs in [(0.5,), (0.5, 0.99, 0.999), (0.0, 1.0)]:
+        np.testing.assert_allclose(am.ldt_quantiles(qs),
+                                   np.quantile(ldts, qs), rtol=0, atol=0)
+    lat = am.delivery_latencies()
+    expect = np.sort(np.array([1.25 - 1.0] * 7 + [2.4 - 2.0]
+                              + [3.5 - 3.0, 3.125 - 3.0, 3.0625 - 3.0]))
+    np.testing.assert_allclose(np.sort(lat), expect, rtol=0, atol=0)
+    np.testing.assert_allclose(am.delivery_quantiles((0.5, 0.99, 0.999)),
+                               np.quantile(lat, (0.5, 0.99, 0.999)),
+                               rtol=0, atol=0)
+    # delivered_within counts misses (NaN) in the 15-pair denominator
+    assert am.delivered_within(0.3) == pytest.approx(9 / 15)
+    assert am.delivered_within(10.0) == pytest.approx(11 / 15)
+
+
+def test_event_and_array_tail_reductions_identical():
+    """Run the same trace through both engines: every tail reduction —
+    quantiles, pooled delivery latencies, deadline fraction — must be
+    identical, including through a crash (NaN discipline)."""
+    n, m = 80, 8
+    times = tuple(4.0 * (i + 1) for i in range(m))
+    pubs = (7, 21, 7, 7, 21, 7, 21, 7)
+    ct = ChurnTrace(n=n, events=(ChurnEvent(18.0, "crash", 7),),
+                    msg_times=times, src=7)
+    tr = WorkloadTrace(n=n, publish_times=times, publishers=pubs,
+                       topics=(-1,) * m, rates_hz=(0.25,) * m, churn=ct)
+    ev = run_workload_events(tr, k=K, seed=0)
+    vec = run_workload_vectorized(tr, k=K, seed=0, backend="numpy")
+    np.testing.assert_array_equal(ev.metrics.ldt_quantiles(),
+                                  vec.metrics.ldt_quantiles())
+    np.testing.assert_array_equal(
+        np.sort(ev.metrics.delivery_latencies()),
+        np.sort(vec.metrics.delivery_latencies()))
+    for d in (0.5, 1.0, 2.0):
+        assert ev.metrics.delivered_within(d) \
+            == vec.metrics.delivered_within(d)
+
+
+# ------------------------------------------------------------------ #
+# Spec routing                                                         #
+# ------------------------------------------------------------------ #
+def test_workload_sweep_rows_and_spec_routing():
+    egress, _ = _capped(0.4)
+    spec = WorkloadSpec(rate_hz=5.0, horizon_s=4.0,
+                        egress_bytes_per_s=egress, deadline_s=1.0)
+    rows = workload_sweep(200, K, (0, 1), spec)
+    assert len(rows) == 2
+    for r in rows:
+        for key in ("p50_ldt", "p99_ldt", "p999_ldt", "p50_delivery",
+                    "p99_delivery", "p999_delivery", "delivered_frac",
+                    "offered_hz", "ldt", "reliability", "rmr"):
+            assert key in r, key
+        assert r["p50_ldt"] <= r["p99_ldt"] <= r["p999_ldt"]
+        assert 0.0 <= r["delivered_frac"] <= 1.0
+        assert r["reliability"] == 1.0
+    tr0, tr1 = build_trace(spec, 200, 0), build_trace(spec, 200, 0)
+    assert tr0 == tr1                       # frozen + deterministic
+
+
+def test_experiment_grid_routes_workload_cells():
+    from repro.core.experiments import ExperimentSpec, run_cell
+
+    egress, _ = _capped(0.4)
+    spec = ExperimentSpec("wl", ns=(150,), seeds=(0,),
+                          engines=("auto", "events"),
+                          workload=WorkloadSpec(rate_hz=4.0, horizon_s=3.0,
+                                                egress_bytes_per_s=egress,
+                                                deadline_s=1.5))
+    rows = {c.engine: run_cell(spec, c) for c in spec.cells()}
+    assert rows["auto"]["engine_used"] == "vectorized"
+    assert rows["events"]["engine_used"] == "events"
+    for row in rows.values():
+        assert row["reliability"] == 1.0
+        assert row["p99_ldt_ms"] >= row["ldt_ms"] * 0.5
+        assert 0.0 <= row["delivered_frac"] <= 1.0
+    # the event loop and closed form land in the same statistical band
+    a, b = rows["events"]["ldt_ms"], rows["auto"]["ldt_ms"]
+    assert abs(a - b) / a < 0.15
+    # spec fingerprint: workload omitted when None, tagged when present
+    assert "workload" not in ExperimentSpec("x").asdict()
+    d = spec.asdict()["workload"]
+    assert d["__class__"] == "WorkloadSpec" and d["rate_hz"] == 4.0

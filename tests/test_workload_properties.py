@@ -1,0 +1,103 @@
+"""Property tests for the workload generators (DESIGN.md §14).
+
+Skipped gracefully where hypothesis is not installed; the differential
+and regression coverage lives in ``test_workload.py`` and is
+hypothesis-free.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.churn import ChurnTrace
+from repro.core.specs import WorkloadSpec
+from repro.core.workload import (TopicModel, build_trace, diurnal_rate,
+                                 diurnal_workload, flash_crowd_workload,
+                                 poisson_workload)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       rate=st.floats(0.5, 50.0),
+       horizon=st.floats(1.0, 20.0))
+def test_poisson_arrival_count_tracks_rate(seed, rate, horizon):
+    """Arrivals are Poisson(rate·horizon): the count stays within a
+    5-sigma band of its mean (one-in-3.5M false-positive rate before
+    the example multiplier)."""
+    tr = poisson_workload(100, rate, horizon, seed)
+    mean = rate * horizon
+    slack = 5.0 * np.sqrt(mean) + 1.0
+    assert abs(tr.n_messages - mean) <= slack
+    t = np.asarray(tr.publish_times)
+    assert (t >= 0).all() and (t < horizon).all()
+    assert (np.diff(t) > 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       peak=st.floats(2.0, 30.0),
+       depth=st.floats(0.0, 1.0),
+       period=st.floats(2.0, 40.0))
+def test_diurnal_envelope_bounds_instantaneous_rate(seed, peak, depth,
+                                                    period):
+    tr = diurnal_workload(100, peak, 10.0, seed, depth=depth,
+                          period_s=period)
+    r = np.asarray(tr.rates_hz)
+    lo = peak * (1.0 - depth)
+    assert (r >= lo - 1e-9).all() and (r <= peak + 1e-9).all()
+    # rates_hz IS the envelope evaluated at the accepted times
+    np.testing.assert_allclose(
+        r, diurnal_rate(np.asarray(tr.publish_times), peak, depth, period),
+        rtol=0, atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**10),
+       topic=st.integers(0, 15),
+       data=st.data())
+def test_topic_subsets_are_subsets_of_live_membership(seed, topic, data):
+    """The subscriber mask is a pure function of (seed, topic, id): the
+    subscriber set over any member subset equals the global set
+    intersected with that subset — topics never invent members."""
+    tm = TopicModel(n_topics=16, sub_frac=0.4, seed=seed)
+    universe = np.arange(200)
+    global_subs = set(universe[tm.subscriber_mask(topic, universe)])
+    members = np.asarray(sorted(data.draw(
+        st.sets(st.integers(0, 199), min_size=1, max_size=60))))
+    subs = set(members[tm.subscriber_mask(topic, members)])
+    assert subs == global_subs & set(members)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       kind=st.sampled_from(["poisson", "diurnal", "flash_crowd"]),
+       rate=st.floats(1.0, 12.0))
+def test_trace_regenerates_byte_identically(seed, kind, rate):
+    """(seed, params) fully determine the trace — frozen dataclass
+    equality covers every field including the coupled churn."""
+    spec = WorkloadSpec(kind=kind, rate_hz=rate, horizon_s=6.0,
+                        n_topics=4, sub_frac=0.5)
+    a, b = build_trace(spec, 150, seed), build_trace(spec, 150, seed)
+    assert a == b
+    np.testing.assert_array_equal(np.asarray(a.publish_times),
+                                  np.asarray(b.publish_times))
+    assert a.publishers == b.publishers and a.topics == b.topics
+    c = build_trace(spec, 150, seed + 1)
+    assert a.publish_times != c.publish_times, "seed must matter"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_flash_crowd_coupling_invariants(seed):
+    tr = flash_crowd_workload(120, 2.0, seed, n_messages=12)
+    assert isinstance(tr.churn, ChurnTrace)
+    assert tuple(tr.churn.msg_times) == tuple(tr.publish_times)
+    assert tr.churn.n == tr.n
+    # the hot window carries the boosted offered rate
+    r = np.asarray(tr.rates_hz)
+    assert r.max() == pytest.approx(4.0 * 2.0)
+    assert r.min() == pytest.approx(2.0)
+    # every publisher stays inside the fixed id range (the transient
+    # crowd ids above n never publish)
+    assert all(0 <= p < 120 for p in tr.publishers)
